@@ -1,0 +1,17 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}")

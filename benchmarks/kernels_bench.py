@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — structural check)
+vs the pure-jnp oracles (XLA-compiled, the actual CPU fast path)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_ref
+from repro.kernels.flash_attention import attention_ref
+from repro.kernels.leaf_probe import leaf_probe_pallas, leaf_probe_ref
+
+from benchmarks.common import emit, timeit
+
+
+def main(quick=False):
+    rng = np.random.default_rng(0)
+
+    # leaf probe
+    bsz, b = 4096, 8
+    keys = jnp.asarray(rng.integers(0, 1 << 30, (bsz, b)), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 1 << 30, (bsz, b)), jnp.int32)
+    qs = keys[:, 3]
+    ref = jax.jit(leaf_probe_ref)
+    jax.block_until_ready(ref(keys, vals, qs))
+    t = timeit(lambda: jax.block_until_ready(ref(keys, vals, qs)))
+    emit("kernel.leaf_probe.ref_xla", t * 1e6, f"batch={bsz}")
+    t = timeit(
+        lambda: jax.block_until_ready(leaf_probe_pallas(keys, vals, qs, interpret=True)),
+        iters=1,
+    )
+    emit("kernel.leaf_probe.pallas_interp", t * 1e6, "interpret-mode (structural)")
+
+    # attention (train shape, small)
+    bq, h, s, d = 1, 8, 512 if quick else 1024, 64
+    q = jnp.asarray(rng.standard_normal((bq, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((bq, h // 4, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((bq, h // 4, s, d)), jnp.bfloat16)
+    ref_attn = jax.jit(lambda a, b_, c: attention_ref(a, b_, c, causal=True))
+    jax.block_until_ready(ref_attn(q, k, v))
+    t = timeit(lambda: jax.block_until_ready(ref_attn(q, k, v)))
+    emit("kernel.flash_attention.ref_xla", t * 1e6, f"s={s},gqa4")
+
+    # decode attention
+    bd, hd, kh, sd, dd = 8, 16, 4, 8192, 64
+    qd = jnp.asarray(rng.standard_normal((bd, hd, dd)), jnp.bfloat16)
+    kd = jnp.asarray(rng.standard_normal((bd, kh, sd, dd)), jnp.bfloat16)
+    vd = jnp.asarray(rng.standard_normal((bd, kh, sd, dd)), jnp.bfloat16)
+    refd = jax.jit(lambda a, b_, c: decode_attention_ref(a, b_, c, sd))
+    jax.block_until_ready(refd(qd, kd, vd))
+    t = timeit(lambda: jax.block_until_ready(refd(qd, kd, vd)))
+    kv_bytes = bd * kh * sd * dd * 2 * 2
+    emit(
+        "kernel.decode_attention.ref_xla", t * 1e6,
+        f"kv_bytes={kv_bytes};GBps={kv_bytes/t/1e9:.1f}",
+    )
+
+
+if __name__ == "__main__":
+    main()

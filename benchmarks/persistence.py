@@ -1,0 +1,69 @@
+"""Persistence overhead (paper Table 1 analog): throughput change from
+enabling durable commits, and the flush-traffic gap between p-Elim and
+p-OCC (elimination ⇒ fewer dirty nodes ⇒ fewer flushed bytes)."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+from repro.configs.abtree import TPU8
+from repro.core import ABTree, DurableABTree
+from repro.data.workloads import WorkloadConfig, op_stream, prefill_tree
+
+from benchmarks.common import emit
+
+
+WARM = 4
+
+
+def _run(tree, stream):
+    for r in stream[:WARM]:
+        tree.apply_round(*r)
+    t0 = time.perf_counter()
+    for ops, keys, vals in stream[WARM:]:
+        tree.apply_round(ops, keys, vals)
+    return time.perf_counter() - t0
+
+
+def main(quick=False):
+    key_range, batch = 2048, 256
+    rounds = 8 if quick else 20
+    for dist in ("uniform", "zipf"):
+        cfg = WorkloadConfig(
+            key_range=key_range, update_frac=1.0, dist=dist, zipf_s=1.0,
+            batch=batch, seed=11,
+        )
+        stream = list(op_stream(cfg, rounds))
+        stats = {}
+        for mode in ("elim", "occ"):
+            vol = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
+            prefill_tree(vol, cfg)
+            t_vol = _run(vol, stream)
+
+            d = tempfile.mkdtemp(prefix=f"ptree_{mode}_")
+            dur = DurableABTree(
+                d, TPU8._replace(capacity=4 * key_range), mode=mode,
+                snapshot_every=10**9,
+            )
+            prefill_tree(dur.tree, cfg)  # prefill outside timed commits
+            t_dur = _run(dur, stream)
+            overhead = (t_dur - t_vol) / t_vol * 100
+            stats[mode] = dur.stats()
+            n_ops = batch * (rounds - WARM)
+            emit(
+                f"persistence.{dist}.{mode}",
+                t_dur / n_ops * 1e6,
+                f"overhead_vs_volatile={overhead:.0f}%;flush_bytes={stats[mode]['flush_bytes']};nodes_flushed={stats[mode]['nodes_flushed']}",
+            )
+            shutil.rmtree(d, ignore_errors=True)
+        if stats["occ"]["nodes_flushed"]:
+            emit(
+                f"persistence.{dist}.flush_reduction",
+                0.0,
+                f"elim_vs_occ_nodes_flushed={stats['occ']['nodes_flushed']/max(stats['elim']['nodes_flushed'],1):.2f}x",
+            )
+
+
+if __name__ == "__main__":
+    main()

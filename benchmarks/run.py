@@ -1,0 +1,70 @@
+"""Benchmark aggregator — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  microbench    — Figs 12–15 (uniform/zipf × update-rate grid, Elim vs OCC)
+  ycsb          — Fig 16 (YCSB-A analog)
+  persistence   — Table 1 (durable overhead + flush traffic)
+  elim_rate     — §4 mechanism (elimination fraction vs skew)
+  embed_elim    — framework integration (sparse-update write collapse)
+  kernels       — per-kernel timings
+  roofline      — §Roofline terms from results/dryrun.json (if present)
+
+``python -m benchmarks.run [--quick] [--only SECTION]``
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import elim_rate, embed_elim, kernels_bench, microbench, persistence, ycsb
+
+    sections = {
+        "microbench": microbench.main,
+        "ycsb": ycsb.main,
+        "persistence": persistence.main,
+        "elim_rate": elim_rate.main,
+        "embed_elim": embed_elim.main,
+        "kernels": kernels_bench.main,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}.ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline summary (from the dry-run artifact, if present)
+    if args.only in (None, "roofline"):
+        path = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+        if os.path.exists(path):
+            print("# --- roofline ---")
+            import json
+
+            from repro.analysis.report import summary
+
+            with open(path) as f:
+                res = json.load(f)
+            s = summary(res)
+            for cid, t in sorted(s.items()):
+                print(
+                    f"roofline.{cid.replace('|','.')},0.0,"
+                    f"dominant={t['dominant']};frac={t['roofline_fraction']:.3f};"
+                    f"tc={t['t_compute_s']:.3e};tm={t['t_memory_s']:.3e};tl={t['t_collective_s']:.3e}"
+                )
+
+
+if __name__ == "__main__":
+    main()

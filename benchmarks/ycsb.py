@@ -1,0 +1,48 @@
+"""YCSB Workload-A analog (paper Fig 16): 50% reads / 50% writes where a
+"write" reads the row pointer from the index then mutates the row payload
+(NOT the index) — index traffic is find-dominated, Zipf 0.5."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.abtree import TPU8
+from repro.core import ABTree, OP_FIND
+from repro.data.workloads import WorkloadConfig, prefill_tree, zipf_keys
+
+from benchmarks.common import emit
+
+
+def main(quick=False):
+    key_range = 4096
+    batch = 512
+    rounds = 10 if quick else 30
+    rows = np.zeros(key_range, np.int64)
+    rng = np.random.default_rng(3)
+    for mode in ("elim", "occ"):
+        tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
+        prefill_tree(tree, WorkloadConfig(key_range=key_range, seed=1))
+        keys = zipf_keys(rng, batch * rounds, key_range, 0.5)
+        is_write = rng.random(batch * rounds) < 0.5
+        tree.apply_round([OP_FIND] * batch, keys[:batch], [0] * batch)  # warm
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            k = keys[r * batch : (r + 1) * batch]
+            w = is_write[r * batch : (r + 1) * batch]
+            out = tree.apply_round(np.full(batch, OP_FIND, np.int32), k, np.zeros(batch, np.int64))
+            # writes mutate the ROW (host payload), not the index
+            res = np.asarray(out.results)
+            hit = np.asarray(out.found) & w
+            rows[k[hit] % key_range] += res[hit] % 7
+        dt = time.perf_counter() - t0
+        n_ops = batch * rounds
+        emit(
+            f"ycsb_a.{mode}",
+            dt / n_ops * 1e6,
+            f"tx/s={n_ops/dt:.0f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh) cell:
+
+    compute    = HLO_FLOPs            / (chips × peak_FLOP/s)
+    memory     = HLO_bytes_accessed   / (chips × HBM_bw)
+    collective = collective_op_bytes  / (chips × link_bw)
+
+FLOPs/bytes come from compiled.cost_analysis(); collective bytes are NOT in
+cost_analysis, so they are parsed from the optimized HLO text: the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (~what one collective hop sustains)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+# `%name = <result-shape(s)> <opcode>(<operands>), ... replica_groups=...`
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(.*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACKET_RE.search(line)
+    if m:  # [num_groups, group_size]<=[N]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # {{0,1,2,3},{...}} — size of the first group
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict:
+    """Per-device operand bytes per collective opcode, from optimized HLO.
+
+    Optimized HLO lists operands by name only, so operand bytes are derived
+    from the result shape + replica group size:
+        all-reduce / all-to-all / collective-permute : operand = result
+        all-gather                                   : operand = result / G
+        reduce-scatter                               : operand = result × G
+    Async (-start/-done) pairs are counted once (at -start).
+    """
+    out = {op: 0 for op in _COLLECTIVES}
+    counts = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shapes, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        result_bytes = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shapes)
+        )
+        if phase == "-start" and result_bytes:
+            # start result is a (operand, result) buffer tuple → halve
+            result_bytes //= 2
+        g = _group_size(line)
+        if op == "all-gather":
+            nbytes = result_bytes // max(g, 1)
+        elif op == "reduce-scatter":
+            nbytes = result_bytes * g
+        else:
+            nbytes = result_bytes
+        out[op] += nbytes
+        counts[op] += 1
+    return {
+        "per_op_bytes": out,
+        "per_op_count": counts,
+        "total_bytes": int(sum(out.values())),
+    }
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token: total minus unselected routed experts
+    (expert tensors are stacked (L, E, …) — detect by the E dim)."""
+    from repro.models import count_params, model_spec
+    from repro.models.params import _walk
+
+    spec = model_spec(cfg)
+    total = count_params(spec)
+    if not cfg.n_experts:
+        return float(total)
+    routed = 0
+    for path, s in _walk(spec):
+        if "/ffn/" in path and "shared" not in path and "router" not in path:
+            if cfg.n_experts in s.shape:
+                routed += int(_prod(s.shape))
+    return float(total - routed + routed * cfg.top_k / cfg.n_experts)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens."""
+    active = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * active * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.batch * shape.seq
+    # decode: one token per sequence
+    return 2.0 * active * shape.batch
+
+
+def analytic_memory_bytes(cfg, shape) -> float:
+    """First-principles per-step HBM traffic floor (global): params read
+    once (bf16) + decode-cache streamed once + activations written/read
+    once per layer.  Reported next to HLO bytes_accessed because the
+    CPU-backend HLO counts unfused operand traffic (pessimistic vs a real
+    TPU executable — see EXPERIMENTS §Roofline notes)."""
+    p_bytes = 2.0 * active_params(cfg)
+    if shape.kind == "decode":
+        cache = 0.0
+        if cfg.attn == "mla":
+            cache = cfg.n_layers * shape.batch * shape.seq * (cfg.kv_lora + cfg.rope_head) * 2.0
+        elif cfg.family in ("dense", "moe", "vlm", "audio"):
+            kv_layers = cfg.n_layers
+            cache = kv_layers * shape.batch * cfg.n_kv * shape.seq * cfg.d_head * 2 * 2.0
+            if cfg.window:
+                cache = kv_layers * shape.batch * cfg.n_kv * min(cfg.window, shape.seq) * cfg.d_head * 2 * 2.0
+        elif cfg.family == "hybrid":
+            n_inv = cfg.n_layers // cfg.shared_attn_every if cfg.shared_attn_every else 0
+            cache = n_inv * shape.batch * cfg.n_kv * shape.seq * cfg.d_head * 2 * 2.0
+        return p_bytes + cache
+    tokens = shape.batch * shape.seq
+    act = 2.0 * tokens * cfg.d_model * cfg.n_layers * (4 if shape.kind == "train" else 2)
+    return p_bytes + act
+
+
+def _prod(t):
+    n = 1
+    for x in t:
+        n *= x
+    return n
+
+
+def roofline_terms(rec: dict) -> Dict:
+    """rec: one dry-run cell record → the three terms in seconds."""
+    chips = rec["n_devices"]
+    flops = rec["cost"]["flops"]
+    mem_bytes = rec["cost"]["bytes_accessed"]
+    coll_bytes = rec["collectives"]["total_bytes"]
+    # cost_analysis on the host backend reports whole-program numbers for
+    # the partitioned module (per-device program), see EXPERIMENTS.md notes.
+    t_compute = flops / (PEAK_FLOPS)
+    t_memory = mem_bytes / (HBM_BW)
+    t_collective = coll_bytes / (ICI_BW)
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "chips": chips,
+    }

@@ -1,0 +1,166 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Scan-trip-count correction for dry-run cost analysis.
+
+XLA's `cost_analysis()` counts a while-loop body ONCE (verified
+empirically: a 10-iteration scanned matmul reports 1 matmul of FLOPs), so
+scanned-layer models underreport flops / bytes / collective bytes by ≈ the
+layer count.  Unrolling the full depth is exact but prohibitively slow
+(yi-34b train: 520 s per compile).
+
+This module measures the per-layer cost with SMALL-depth *unrolled* probe
+compiles and fits the linear model
+
+    metric(counts) = out + Σ_stacks counts_i · body_i
+
+probing each stack type at 1 and 2 layers (3 probes for two-stack archs).
+The corrected metric for the full config is then `out + Σ L_i·body_i`.
+Probes run at the FULL model width/batch on the same mesh — only depth is
+reduced — so per-layer sharded costs are exact.
+
+Writes results/scan_correction.json: cid → corrected metrics.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+from typing import Dict, List, Tuple  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, all_cells, get_config  # noqa: E402
+from repro.configs.optimized import OPTIMIZED  # noqa: E402
+
+# per family: (probe override dicts, their stack-count vectors, full-count fn)
+
+
+def _probe_plan(cfg) -> Tuple[List[dict], List[List[int]], List[int]]:
+    fam = cfg.family
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.first_k_dense):
+        probes = [{"n_layers": 1}, {"n_layers": 2}]
+        counts = [[1], [2]]
+        full = [cfg.n_layers]
+    elif fam == "moe":  # deepseek: dense prefix + moe stack
+        probes = [
+            {"first_k_dense": 1, "n_layers": 2},
+            {"first_k_dense": 2, "n_layers": 3},
+            {"first_k_dense": 1, "n_layers": 3},
+        ]
+        counts = [[1, 1], [2, 1], [1, 2]]
+        full = [cfg.first_k_dense, cfg.n_layers - cfg.first_k_dense]
+    elif fam == "ssm":  # xlstm: mlstm + slstm stacks
+        probes = [
+            {"n_layers": 2, "slstm_every": 2},
+            {"n_layers": 3, "slstm_every": 3},
+            {"n_layers": 4, "slstm_every": 2},
+        ]
+        counts = [[1, 1], [2, 1], [2, 2]]
+        k = cfg.slstm_every
+        n_s = cfg.n_layers // k if k else 0
+        full = [cfg.n_layers - n_s, n_s]
+    elif fam == "hybrid":  # zamba2: mamba layers + shared-attn invocations
+        probes = [
+            {"n_layers": 2, "shared_attn_every": 2},
+            {"n_layers": 3, "shared_attn_every": 3},
+            {"n_layers": 4, "shared_attn_every": 2},
+        ]
+        counts = [[2, 1], [3, 1], [4, 2]]
+        k = cfg.shared_attn_every
+        full = [cfg.n_layers, cfg.n_layers // k if k else 0]
+    elif fam == "audio":
+        return [], [], []  # whisper is already unrolled (scan_layers=False)
+    else:
+        raise ValueError(fam)
+    return probes, counts, full
+
+
+def _metrics(rec) -> np.ndarray:
+    return np.array(
+        [
+            rec["cost"]["flops"],
+            rec["cost"]["bytes_accessed"],
+            float(rec["collectives"]["total_bytes"]),
+        ]
+    )
+
+
+def correct_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None) -> dict:
+    from repro.launch.dryrun import run_cell
+
+    cfg = get_config(arch)
+    if overrides:
+        ov = dict(overrides)
+        ov.pop("param_dtype", None)
+        cfg = cfg.replace(**ov)
+    probes, counts, full = _probe_plan(cfg)
+    if not probes:
+        return {"corrected": False, "reason": "unrolled already"}
+    ys = []
+    for pov in probes:
+        o = dict(overrides or {})
+        o.update(pov)
+        o["scan_layers"] = False
+        rec = run_cell(arch, shape_name, mesh_kind, overrides=o)
+        ys.append(_metrics(rec))
+    a = np.array([[1.0] + [float(c) for c in row] for row in counts])
+    y = np.stack(ys)  # (P, 3 metrics)
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)  # (1+stacks, 3)
+    want = np.array([1.0] + [float(c) for c in full])
+    corrected = want @ coef
+    body = coef[1:]
+    return {
+        "corrected": True,
+        "flops": float(corrected[0]),
+        "bytes_accessed": float(corrected[1]),
+        "collective_bytes": float(max(corrected[2], 0.0)),
+        "per_stack_flops": body[:, 0].tolist(),
+        "full_counts": full,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/scan_correction.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--suite", default="baseline", choices=["baseline", "opt"])
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+
+    out_path = args.out if args.suite == "baseline" else args.out.replace(
+        ".json", "_opt.json"
+    )
+    results = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+
+    for arch, cfg, shape, status in all_cells():
+        if status != "run":
+            continue
+        if args.arch and arch != args.arch:
+            continue
+        if args.suite == "opt" and (arch, shape.name) not in OPTIMIZED:
+            continue
+        cid = f"{arch}|{shape.name}|{args.mesh}"
+        if cid in results:
+            print(f"skip (cached): {cid}")
+            continue
+        ov = OPTIMIZED.get((arch, shape.name)) if args.suite == "opt" else None
+        print(f"=== correcting {cid} ===", flush=True)
+        try:
+            results[cid] = correct_cell(arch, shape.name, args.mesh, overrides=ov)
+            if results[cid].get("corrected"):
+                print(f"  flops → {results[cid]['flops']:.3e}")
+        except Exception as e:  # noqa: BLE001
+            results[cid] = {"corrected": False, "error": f"{type(e).__name__}: {e}"}
+            print(f"  FAIL {results[cid]['error']}")
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

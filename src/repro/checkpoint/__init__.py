@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointManager, latest_step, restore
+
+__all__ = ["CheckpointManager", "restore", "latest_step"]

@@ -1,0 +1,7 @@
+"""The paper's own data-structure configs: (a,b) presets from the paper
+(MIN_SIZE=2 with MAX 8/11/16) for the microbenchmarks."""
+from repro.core.abtree import TreeConfig
+
+PAPER = TreeConfig(capacity=1 << 16, b=11, a=2, max_height=24)  # paper's b=11
+TPU8 = TreeConfig(capacity=1 << 16, b=8, a=2, max_height=24)  # VREG-lane aligned
+WIDE16 = TreeConfig(capacity=1 << 16, b=16, a=2, max_height=24)

@@ -1,0 +1,23 @@
+"""§Perf hillclimb configurations — beyond-paper optimized variants of the
+three chosen cells (EXPERIMENTS.md §Perf records baseline vs these).
+
+Keys: (arch, shape) → dict of ModelConfig overrides (+ the special key
+``param_dtype`` consumed by the dry-run: serving-weight dtype)."""
+
+OPTIMIZED = {
+    # worst roofline fraction: sequential mLSTM scan → chunkwise (state
+    # traffic ÷ chunk, outer products → MXU matmuls)
+    ("xlstm-350m", "train_4k"): {"mlstm_chunk": 64},
+    # most collective-bound: global MoE dispatch reshards every token →
+    # shard-local grouped dispatch (32 groups align with pod×data batch
+    # sharding on both meshes)
+    ("granite-moe-3b-a800m", "train_4k"): {"moe_groups": 32},
+    # most technique-representative (serving): fp32 resident weights stream
+    # through HBM every decode step → bf16 serving weights (master weights
+    # stay fp32 in the training checkpoints; serving loads a cast copy)
+    ("deepseek-v3-671b", "decode_32k"): {"param_dtype": "bfloat16"},
+}
+
+
+def overrides_for(arch: str, shape: str) -> dict:
+    return dict(OPTIMIZED.get((arch, shape), {}))

@@ -1,0 +1,43 @@
+# Core library: the paper's primary contribution — batched OCC-ABtree and
+# Elim-ABtree (publishing elimination) with durable (link-and-persist)
+# commits — adapted from shared-memory threads to SPMD batch rounds.
+#
+# Keys/values are 8 bytes as in the paper, which requires x64 mode. Model
+# code elsewhere in the package is dtype-explicit and unaffected.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.abtree import (  # noqa: E402
+    ABTree,
+    TreeConfig,
+    TreeState,
+    OP_NOP,
+    OP_FIND,
+    OP_INSERT,
+    OP_DELETE,
+    EMPTY,
+    NOTFOUND,
+)
+from repro.core.elimination import eliminate_batch, EliminationResult  # noqa: E402
+from repro.core.oracle import DictOracle, check_invariants  # noqa: E402
+from repro.core.durable import DurableABTree, CrashPoint, recover  # noqa: E402
+
+__all__ = [
+    "ABTree",
+    "TreeConfig",
+    "TreeState",
+    "OP_NOP",
+    "OP_FIND",
+    "OP_INSERT",
+    "OP_DELETE",
+    "EMPTY",
+    "NOTFOUND",
+    "eliminate_batch",
+    "EliminationResult",
+    "DictOracle",
+    "check_invariants",
+    "DurableABTree",
+    "CrashPoint",
+    "recover",
+]

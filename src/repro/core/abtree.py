@@ -1,0 +1,1064 @@
+"""Batched OCC-ABtree / Elim-ABtree on an array-backed node pool.
+
+This is the TPU-native adaptation of the paper's concurrent relaxed
+(a,b)-tree (see DESIGN.md §2/§4).  Concurrency is expressed as *rounds*: a
+round applies a batch of dictionary operations that are all mutually
+concurrent; per-key linearization order within a round is arrival order
+(any order is legal per the paper's §4 argument — this is the freedom
+publishing elimination exploits).
+
+Two modes:
+
+  * ``mode='elim'``   — Elim-ABtree: the elimination combine collapses all
+    ops on a key to ≤ 1 physical slot write; eliminated ops compute their
+    return values from the published per-key record (the combine), never
+    touching tree arrays.
+  * ``mode='occ'``    — OCC-ABtree baseline: every op executes physically.
+    Duplicate keys force sub-rounds (duplicate-rank r executes in sub-round
+    r), each with its own search + leaf write + version bump — mirroring the
+    per-op work of the paper's OCC tree under contention.
+
+Structure follows the paper:
+  * unsorted leaves: insert writes the first free slot; delete blanks a slot
+    (no shifting) — on TPU the probe is a lane-parallel compare (see
+    kernels/leaf_probe).
+  * per-node version counters (+2 per modifying round; record stamped with
+    the odd intermediate) — used by the durable layer and by cross-round
+    optimistic readers (serving).
+  * per-leaf ElimRecord ⟨key, val, ver, op⟩ — the publishing record of the
+    last modification, exposed to other engine replicas / later rounds.
+  * relaxed rebalancing as independent-set *waves* of the Larsen–Fagerberg
+    sub-operations (split / merge / distribute), each wave touching at most
+    one violating child per parent.
+
+NOTE on the paper's Figure 9 pseudocode: the distribute/merge branch
+condition there is inverted relative to Larsen–Fagerberg (distributing two
+nodes whose total is ≤ 2·MIN would leave one still underfull).  We implement
+the standard relaxed-(a,b) rule: merge when total ≤ b, else distribute
+evenly (each side ≥ a since total > b ≥ 2a).  See DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elimination as elim
+
+# ----------------------------------------------------------------------------
+# Constants & state
+# ----------------------------------------------------------------------------
+
+KEY_DTYPE = jnp.int64
+VAL_DTYPE = jnp.int64
+EMPTY = jnp.iinfo(jnp.int64).max  # free-slot / unused-router sentinel (sorts last)
+NOTFOUND = jnp.iinfo(jnp.int64).min  # ⊥ return value
+NULL = jnp.int32(-1)  # null node id
+
+OP_NOP = int(elim.OP_NOP)
+OP_FIND = int(elim.OP_FIND)
+OP_INSERT = int(elim.OP_INSERT)
+OP_DELETE = int(elim.OP_DELETE)
+
+INT_MAX = np.int32(2**31 - 1)
+
+
+class TreeConfig(NamedTuple):
+    capacity: int = 4096  # node pool size
+    b: int = 8  # max keys per leaf == max children per internal
+    a: int = 2  # min keys per leaf == min children per internal (a ≤ b/2)
+    max_height: int = 24  # static bound for descent loops
+
+
+class TreeStats(NamedTuple):
+    slot_writes: jax.Array  # physical leaf slot writes (keys or vals)
+    struct_ops: jax.Array  # split/merge/distribute sub-operations
+    searches: jax.Array  # root-to-leaf descents (per lane)
+    eliminated: jax.Array  # update ops eliminated (write avoided)
+    rounds: jax.Array
+    subrounds: jax.Array  # OCC sub-rounds executed
+
+
+class TreeState(NamedTuple):
+    # node pool (SoA) ---------------------------------------------------------
+    keys: jax.Array  # (N, b) leaf keys (unsorted) | internal routers in [:, :b-1] (sorted)
+    vals: jax.Array  # (N, b) leaf values
+    children: jax.Array  # (N, b) int32 child ids (internal)
+    parent: jax.Array  # (N,) int32
+    pidx: jax.Array  # (N,) int32 index of node in parent.children
+    is_leaf: jax.Array  # (N,) bool
+    size: jax.Array  # (N,) int32: leaf → #keys; internal → #children
+    level: jax.Array  # (N,) int32: leaf = 0
+    ver: jax.Array  # (N,) int32: even ⇔ quiescent (paper's version discipline)
+    alloc: jax.Array  # (N,) bool
+    # per-leaf ElimRecord (paper §4.1) ---------------------------------------
+    rec_key: jax.Array  # (N,)
+    rec_val: jax.Array  # (N,)
+    rec_ver: jax.Array  # (N,) int32 (odd when valid)
+    rec_op: jax.Array  # (N,) int32
+    # tree scalars ------------------------------------------------------------
+    root: jax.Array  # int32
+    height: jax.Array  # int32 (#levels; 1 = single leaf)
+    dirty: jax.Array  # (N,) bool — touched since last durable commit
+    stats: TreeStats
+
+
+def make_tree(cfg: TreeConfig) -> TreeState:
+    # Pool has capacity+1 rows: the last row is a write-off SCRATCH row that
+    # absorbs all masked-out scatter lanes.  Routing inactive lanes to a
+    # dedicated row (instead of row 0) avoids duplicate-index scatter races
+    # with real writes (XLA scatter order for duplicates is unspecified).
+    n, b = cfg.capacity + 1, cfg.b
+    z64 = functools.partial(jnp.full, dtype=KEY_DTYPE)
+    zi = functools.partial(jnp.zeros, dtype=jnp.int32)
+    return TreeState(
+        keys=z64((n, b), EMPTY),
+        vals=z64((n, b), 0),
+        children=jnp.full((n, b), NULL, jnp.int32),
+        parent=jnp.full((n,), NULL, jnp.int32),
+        pidx=zi((n,)),
+        is_leaf=jnp.ones((n,), bool),
+        size=zi((n,)),
+        level=zi((n,)),
+        ver=zi((n,)),
+        alloc=jnp.zeros((n,), bool).at[0].set(True),  # node 0 = initial root leaf
+        rec_key=z64((n,), EMPTY),
+        rec_val=z64((n,), 0),
+        rec_ver=zi((n,)),
+        rec_op=zi((n,)),
+        root=jnp.int32(0),
+        height=jnp.int32(1),
+        dirty=jnp.zeros((n,), bool).at[0].set(True),
+        stats=TreeStats(*([jnp.int64(0)] * 6)),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Phase 1: vectorized descent + probe (pure-jnp oracle of kernels/leaf_probe)
+# ----------------------------------------------------------------------------
+
+
+def descend(state: TreeState, keys: jax.Array, cfg: TreeConfig) -> jax.Array:
+    """Root-to-leaf search for a batch of keys → leaf ids.  The per-level
+    child choice mirrors the paper's ``search``: follow ptrs[#routers ≤ key]."""
+
+    def body(_, node_ids):
+        routers = state.keys[node_ids, : cfg.b - 1]  # (U, b-1); unused = EMPTY
+        # idx = number of routers ≤ key  (EMPTY > any user key ⇒ not counted)
+        idx = jnp.sum(routers <= keys[:, None], axis=1).astype(jnp.int32)
+        child = state.children[node_ids, idx]
+        return jnp.where(state.is_leaf[node_ids], node_ids, child)
+
+    start = jnp.zeros(keys.shape, jnp.int32) + state.root
+    return jax.lax.fori_loop(0, cfg.max_height, body, start)
+
+
+def probe(state: TreeState, leaf_ids: jax.Array, keys: jax.Array):
+    """Unsorted-leaf probe: lane-parallel compare across the b slots."""
+    rows = state.keys[leaf_ids]  # (U, b)
+    eq = rows == keys[:, None]
+    found = jnp.any(eq, axis=1)
+    slot = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    val = state.vals[leaf_ids, slot]
+    return found, slot, jnp.where(found, val, NOTFOUND)
+
+
+# ----------------------------------------------------------------------------
+# Phase 3: in-place apply of net ops (the hot path the paper optimizes)
+# ----------------------------------------------------------------------------
+
+
+class ApplyOut(NamedTuple):
+    state: TreeState
+    deferred: jax.Array  # (B,) bool — net inserts that did not fit (leaf full)
+
+
+def _segment_starts(x: jax.Array) -> jax.Array:
+    return jnp.concatenate([jnp.ones((1,), bool), x[1:] != x[:-1]])
+
+
+def _segmented_rank(mask: jax.Array, seg_id: jax.Array) -> jax.Array:
+    """0-based rank of each True within its segment (junk elsewhere)."""
+    c = jnp.cumsum(mask.astype(jnp.int32))
+    seg_base = jnp.where(_segment_starts(seg_id), c - mask.astype(jnp.int32), 0)
+    seg_base = jax.lax.associative_scan(jnp.maximum, seg_base)
+    return c - 1 - seg_base
+
+
+def apply_net_ops(
+    state: TreeState,
+    cfg: TreeConfig,
+    leaf_ids: jax.Array,  # (B,) leaf per sorted op
+    keys_sorted: jax.Array,
+    slot_found: jax.Array,  # (B,) slot of key if present
+    net_insert: jax.Array,  # (B,) bool (at segment heads)
+    net_delete: jax.Array,
+    net_overwrite: jax.Array,
+    final_val: jax.Array,
+    arrival_sorted: jax.Array,  # (B,) original position (for record priority)
+) -> ApplyOut:
+    """Apply per-key net effects.  All net flags are on distinct keys; keys
+    are sorted, so ops on one leaf are contiguous (leaf key ranges partition
+    the key space — invariants 1/7 of the paper)."""
+    b = cfg.b
+    scratch = state.keys.shape[0] - 1  # masked lanes write here (see make_tree)
+
+    # --- deletes: blank the slot (unsorted leaves: no shifting — the paper's
+    # fast delete), size -= 1.
+    del_rows = jnp.where(net_delete, leaf_ids, scratch)
+    del_slots = jnp.where(net_delete, slot_found, 0)
+    keys_new = state.keys.at[del_rows, del_slots].set(
+        jnp.where(net_delete, EMPTY, state.keys[del_rows, del_slots])
+    )
+    size_new = state.size.at[del_rows].add(jnp.where(net_delete, -1, 0))
+
+    # --- overwrites: value-only write.
+    ow_rows = jnp.where(net_overwrite, leaf_ids, scratch)
+    ow_slots = jnp.where(net_overwrite, slot_found, 0)
+    vals_new = state.vals.at[ow_rows, ow_slots].set(
+        jnp.where(net_overwrite, final_val, state.vals[ow_rows, ow_slots])
+    )
+
+    # --- inserts: rank-th free slot of the leaf, ranking against the
+    # *post-delete* keys (deletes in this round free slots first).
+    ins = net_insert
+    rank = _segmented_rank(ins, leaf_ids)
+    leaf_rows = keys_new[leaf_ids]  # (B, b)
+    free = leaf_rows == EMPTY
+    # argsort(stable) of ~free puts free slots first, ascending slot order.
+    free_order = jnp.argsort(~free, axis=1, stable=True).astype(jnp.int32)
+    n_free = jnp.sum(free, axis=1).astype(jnp.int32)
+    fits = ins & (rank < n_free)
+    ins_slot = jnp.take_along_axis(
+        free_order, jnp.clip(rank, 0, b - 1)[:, None], axis=1
+    )[:, 0]
+
+    ins_rows = jnp.where(fits, leaf_ids, scratch)
+    ins_slots = jnp.where(fits, ins_slot, 0)
+    keys_new = keys_new.at[ins_rows, ins_slots].set(
+        jnp.where(fits, keys_sorted, keys_new[ins_rows, ins_slots])
+    )
+    vals_new = vals_new.at[ins_rows, ins_slots].set(
+        jnp.where(fits, final_val, vals_new[ins_rows, ins_slots])
+    )
+    size_new = size_new.at[ins_rows].add(jnp.where(fits, 1, 0))
+
+    deferred = ins & ~fits
+
+    # --- version bump: +2 per modified leaf (even ⇔ quiescent, §3.1).
+    modified = net_delete | net_overwrite | fits
+    mod_rows = jnp.where(modified, leaf_ids, scratch)
+    ver_bump = jnp.zeros_like(state.ver).at[mod_rows].max(
+        jnp.where(modified, 1, 0).astype(jnp.int32)
+    )
+    ver_bump = ver_bump.at[scratch].set(0)
+    ver_new = state.ver + 2 * ver_bump
+    dirty_new = state.dirty | (ver_bump > 0)
+
+    # --- publish ElimRecord: the net op with max arrival in each modified
+    # leaf is the leaf's last modifier; rec_ver = new_ver - 1 (odd), §4.1.
+    prio = jnp.where(modified, arrival_sorted.astype(jnp.int32), -1)
+    best = jnp.full((state.keys.shape[0],), -1, jnp.int32).at[mod_rows].max(prio)
+    is_best = modified & (prio == best[leaf_ids])
+    rb_rows = jnp.where(is_best, leaf_ids, scratch)
+
+    def publish(arr, values):
+        return arr.at[rb_rows].set(jnp.where(is_best, values, arr[rb_rows]))
+
+    rec_key = publish(state.rec_key, keys_sorted)
+    rec_val = publish(state.rec_val, final_val)
+    rec_op = publish(
+        state.rec_op, jnp.where(net_delete, OP_DELETE, OP_INSERT).astype(jnp.int32)
+    )
+    rec_ver = publish(state.rec_ver, ver_new[leaf_ids] - 1)
+
+    n_writes = (
+        jnp.sum(net_delete) + jnp.sum(net_overwrite) + 2 * jnp.sum(fits)
+    ).astype(jnp.int64)
+    stats = state.stats._replace(slot_writes=state.stats.slot_writes + n_writes)
+
+    return ApplyOut(
+        state=state._replace(
+            keys=keys_new,
+            vals=vals_new,
+            size=size_new,
+            ver=ver_new,
+            dirty=dirty_new,
+            rec_key=rec_key,
+            rec_val=rec_val,
+            rec_op=rec_op,
+            rec_ver=rec_ver,
+            stats=stats,
+        ),
+        deferred=deferred,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Structural waves (relaxed-rebalancing sub-operations, batched)
+# ----------------------------------------------------------------------------
+
+
+def _alloc_ids(state: TreeState, k: int) -> jax.Array:
+    """ids of k free nodes (deterministic: lowest ids first).  The last
+    pool row (scratch) is never handed out."""
+    order = jnp.argsort(state.alloc[:-1], stable=True)  # False (free) first
+    return order[:k].astype(jnp.int32)
+
+
+def _refresh_child_links(state: TreeState, parents: jax.Array, cfg: TreeConfig) -> TreeState:
+    """Recompute parent/pidx for all children of the given (allocated,
+    internal) parent ids.  Safe to call with junk ids: guarded by alloc &
+    ~is_leaf & size."""
+    ch = state.children[parents]  # (W, b)
+    ok = (
+        state.alloc[parents][:, None]
+        & ~state.is_leaf[parents][:, None]
+        & (jnp.arange(cfg.b)[None, :] < state.size[parents][:, None])
+        & (ch >= 0)
+    )
+    scratch = state.keys.shape[0] - 1
+    rows = jnp.where(ok, ch, scratch).reshape(-1)
+    okf = ok.reshape(-1)
+    jj = jnp.broadcast_to(jnp.arange(cfg.b, dtype=jnp.int32)[None, :], ch.shape).reshape(-1)
+    pp = jnp.broadcast_to(parents[:, None], ch.shape).reshape(-1).astype(jnp.int32)
+    pidx_new = state.pidx.at[rows].set(jnp.where(okf, jj, state.pidx[rows]))
+    parent_new = state.parent.at[rows].set(jnp.where(okf, pp, state.parent[rows]))
+    return state._replace(pidx=pidx_new, parent=parent_new)
+
+
+def split_wave(
+    state: TreeState, cfg: TreeConfig, node_ids: jax.Array, active: jax.Array
+) -> TreeState:
+    """One wave of split sub-operations.  Preconditions (caller-enforced):
+    every active node is full (size == b); its parent is NOT full (or the
+    node is the root); at most one active node per parent.
+
+    Batched analog of the paper's splitting insert + fixTagged chain: we
+    split eagerly instead of publishing a TaggedInternal, because wave
+    execution is already atomic w.r.t. readers (no intra-round readers);
+    tagging existed only to keep each lock-protected step small (DESIGN §7).
+    """
+    w = node_ids.shape[0]
+    b = cfg.b
+    scratch = state.keys.shape[0] - 1
+    node_ids = jnp.where(active, node_ids, scratch)
+
+    new_ids = _alloc_ids(state, 2 * w)
+    right_ids = jnp.where(active, new_ids[:w], scratch)
+    is_root = active & (state.parent[node_ids] == NULL)
+    newroot_ids = jnp.where(is_root, new_ids[w:], scratch)
+
+    leaf = state.is_leaf[node_ids]  # (W,)
+    lh = (b + 1) // 2
+    rh = b - lh
+    iota = jnp.arange(b)[None, :]
+
+    # ---- sort node contents (leaves are unsorted; internals already sorted).
+    krows = state.keys[node_ids]
+    vrows = state.vals[node_ids]
+    crows = state.children[node_ids]
+    order = jnp.argsort(krows, axis=1, stable=True).astype(jnp.int32)
+    order = jnp.where(leaf[:, None], order, iota.astype(jnp.int32))
+    ks = jnp.take_along_axis(krows, order, axis=1)
+    vs = jnp.take_along_axis(vrows, order, axis=1)
+
+    # ---- leaves: left ks[:lh], right ks[lh:]; router = ks[lh] (= min right).
+    leaf_lk = jnp.where(iota < lh, ks, EMPTY)
+    leaf_rk = jnp.where(iota < rh, jnp.roll(ks, -lh, axis=1), EMPTY)
+    leaf_lv = vs
+    leaf_rv = jnp.roll(vs, -lh, axis=1)
+
+    # ---- internals: left lh children + lh-1 routers; right rh children +
+    # rh-1 routers; router krows[lh-1] moves up.
+    int_lk = jnp.where(iota < lh - 1, krows, EMPTY)
+    int_rk = jnp.where(iota < rh - 1, jnp.roll(krows, -lh, axis=1), EMPTY)
+    int_lc = jnp.where(iota < lh, crows, NULL)
+    int_rc = jnp.where(iota < rh, jnp.roll(crows, -lh, axis=1), NULL)
+
+    router = jnp.where(leaf, ks[:, lh], krows[:, lh - 1])
+
+    def masked_set(arr, rows, values, act):
+        cur = arr[rows]
+        m = act[:, None] if values.ndim == 2 else act
+        return arr.at[rows].set(jnp.where(m, values, cur))
+
+    keys_new = masked_set(state.keys, node_ids, jnp.where(leaf[:, None], leaf_lk, int_lk), active)
+    keys_new = masked_set(keys_new, right_ids, jnp.where(leaf[:, None], leaf_rk, int_rk), active)
+    vals_new = masked_set(state.vals, node_ids, leaf_lv, active & leaf)
+    vals_new = masked_set(vals_new, right_ids, leaf_rv, active & leaf)
+    ch_new = masked_set(state.children, node_ids, int_lc, active & ~leaf)
+    ch_new = masked_set(ch_new, right_ids, int_rc, active & ~leaf)
+
+    size_new = state.size.at[node_ids].set(jnp.where(active, lh, state.size[node_ids]))
+    size_new = size_new.at[right_ids].set(jnp.where(active, rh, size_new[right_ids]))
+    isleaf_new = state.is_leaf.at[right_ids].set(
+        jnp.where(active, leaf, state.is_leaf[right_ids])
+    )
+    level_new = state.level.at[right_ids].set(
+        jnp.where(active, state.level[node_ids], state.level[right_ids])
+    )
+    alloc_new = state.alloc.at[right_ids].set(state.alloc[right_ids] | active)
+    ver_new = state.ver.at[node_ids].add(jnp.where(active, 2, 0))
+
+    state = state._replace(
+        keys=keys_new, vals=vals_new, children=ch_new, size=size_new,
+        is_leaf=isleaf_new, level=level_new, alloc=alloc_new, ver=ver_new,
+    )
+
+    # ---- grow root where needed: fresh internal with single child = node.
+    state = state._replace(
+        keys=state.keys.at[newroot_ids].set(
+            jnp.where(is_root[:, None], jnp.full((w, b), EMPTY, KEY_DTYPE), state.keys[newroot_ids])
+        ),
+        children=state.children.at[newroot_ids, 0].set(
+            jnp.where(is_root, node_ids, state.children[newroot_ids, 0])
+        ),
+        size=state.size.at[newroot_ids].set(jnp.where(is_root, 1, state.size[newroot_ids])),
+        is_leaf=state.is_leaf.at[newroot_ids].set(
+            state.is_leaf[newroot_ids] & ~is_root
+        ),
+        level=state.level.at[newroot_ids].set(
+            jnp.where(is_root, state.level[node_ids] + 1, state.level[newroot_ids])
+        ),
+        alloc=state.alloc.at[newroot_ids].set(state.alloc[newroot_ids] | is_root),
+        parent=state.parent.at[node_ids].set(
+            jnp.where(is_root, newroot_ids, state.parent[node_ids])
+        ),
+        pidx=state.pidx.at[node_ids].set(jnp.where(is_root, 0, state.pidx[node_ids])),
+    )
+    any_root = jnp.any(is_root)
+    root_new = jnp.where(
+        any_root, jnp.max(jnp.where(is_root, newroot_ids, -1)), state.root
+    ).astype(jnp.int32)
+    height_new = state.height + any_root.astype(jnp.int32)
+
+    # ---- link right sibling into parent: insert router at slot `at`,
+    # child at `at+1` (shift tail right by one).
+    pids = jnp.where(is_root, newroot_ids, state.parent[node_ids])
+    pids = jnp.where(active, pids, scratch)
+    at = state.pidx[node_ids][:, None]  # (W,1)
+    pk = state.keys[pids]
+    pc = state.children[pids]
+    shifted_k = jnp.where(iota > at, jnp.roll(pk, 1, axis=1), pk)
+    shifted_k = jnp.where(iota == at, router[:, None], shifted_k)
+    shifted_c = jnp.where(iota > at + 1, jnp.roll(pc, 1, axis=1), pc)
+    shifted_c = jnp.where(iota == at + 1, right_ids[:, None], shifted_c)
+
+    keys_new = state.keys.at[pids].set(jnp.where(active[:, None], shifted_k, state.keys[pids]))
+    ch_new = state.children.at[pids].set(jnp.where(active[:, None], shifted_c, state.children[pids]))
+    size_new = state.size.at[pids].add(jnp.where(active, 1, 0))
+
+    dirty_new = state.dirty
+    for rows, m in ((node_ids, active), (right_ids, active), (pids, active), (newroot_ids, is_root)):
+        r = jnp.where(m, rows, scratch)
+        dirty_new = dirty_new.at[r].set(dirty_new[r] | m)
+
+    stats = state.stats._replace(
+        struct_ops=state.stats.struct_ops + jnp.sum(active).astype(jnp.int64)
+    )
+    state = state._replace(
+        keys=keys_new, children=ch_new, size=size_new, root=root_new,
+        height=height_new, dirty=dirty_new, stats=stats,
+    )
+    # fix child links of: parents (children shifted), the split node and its
+    # new right sibling (internal splits reassign grandchildren).
+    state = _refresh_child_links(state, pids, cfg)
+    state = _refresh_child_links(state, node_ids, cfg)
+    state = _refresh_child_links(state, right_ids, cfg)
+    return state
+
+
+def underfull_wave(
+    state: TreeState, cfg: TreeConfig, node_ids: jax.Array, active: jax.Array
+) -> TreeState:
+    """One wave of merge/distribute sub-operations (paper's fixUnderfull).
+    Preconditions (caller-enforced): each active node is underfull, not the
+    root, its parent has ≥ 2 children, ≤ 1 active node per parent."""
+    w = node_ids.shape[0]
+    b = cfg.b
+    scratch = state.keys.shape[0] - 1
+    node_ids = jnp.where(active, node_ids, scratch)
+    parents = jnp.where(active, state.parent[node_ids], scratch)
+    at = jnp.clip(state.pidx[node_ids], 0, b - 1)
+    sib_at = jnp.where(at == 0, 1, at - 1)  # paper: right sibling iff leftmost
+    sibs = state.children[parents, sib_at]
+    sibs = jnp.where(active, sibs, scratch)
+    left_at = jnp.minimum(at, sib_at)
+    left_is_node = at < sib_at
+    lid = jnp.where(active, jnp.where(left_is_node, node_ids, sibs), scratch)
+    rid = jnp.where(active, jnp.where(left_is_node, sibs, node_ids), scratch)
+
+    leaf = state.is_leaf[node_ids]
+    lsz = state.size[lid]
+    rsz = state.size[rid]
+    total = lsz + rsz
+    sep = state.keys[parents, left_at]  # router between the pair
+
+    do_merge = active & (total <= b)
+    do_dist = active & (total > b)
+
+    # ---- build merged content, width 2b ------------------------------------
+    lk, lv, lc = state.keys[lid], state.vals[lid], state.children[lid]
+    rk, rv, rc = state.keys[rid], state.vals[rid], state.children[rid]
+    j2 = jnp.arange(2 * b)[None, :]
+
+    # Leaves: concat + stable sort (EMPTY last) compacts `total` sorted keys.
+    cat_k = jnp.concatenate([lk, rk], axis=1)
+    cat_v = jnp.concatenate([lv, rv], axis=1)
+    ordr = jnp.argsort(cat_k, axis=1, stable=True).astype(jnp.int32)
+    leaf_mk = jnp.take_along_axis(cat_k, ordr, axis=1)
+    leaf_mv = jnp.take_along_axis(cat_v, ordr, axis=1)
+
+    # Internals: children = lc[0:lsz] ++ rc[0:rsz];
+    #            routers  = lk[0:lsz-1] ++ [sep] ++ rk[0:rsz-1].
+    r_idx = jnp.clip(j2 - lsz[:, None], 0, b - 1)
+    lc2 = jnp.concatenate([lc, jnp.full_like(lc, NULL)], axis=1)
+    lk2 = jnp.concatenate([lk, jnp.full_like(lk, EMPTY)], axis=1)
+    int_mc = jnp.where(j2 < lsz[:, None], lc2, jnp.take_along_axis(rc, r_idx, axis=1))
+    int_mc = jnp.where(j2 < total[:, None], int_mc, NULL)
+    int_mk = jnp.where(
+        j2 < lsz[:, None] - 1,
+        lk2,
+        jnp.where(
+            j2 == lsz[:, None] - 1, sep[:, None], jnp.take_along_axis(rk, r_idx, axis=1)
+        ),
+    )
+    int_mk = jnp.where(j2 < total[:, None] - 1, int_mk, EMPTY)
+
+    merged_k = jnp.where(leaf[:, None], leaf_mk, int_mk)  # (W, 2b)
+    merged_v = leaf_mv
+    merged_c = int_mc
+
+    def sel(act):
+        return act[:, None]
+
+    # ---- MERGE: all content into lid; drop rid + separator from parent -----
+    keys_new = state.keys.at[lid].set(jnp.where(sel(do_merge), merged_k[:, :b], state.keys[lid]))
+    vals_new = state.vals.at[lid].set(jnp.where(sel(do_merge & leaf), merged_v[:, :b], state.vals[lid]))
+    ch_new = state.children.at[lid].set(
+        jnp.where(sel(do_merge & ~leaf), merged_c[:, :b], state.children[lid])
+    )
+    size_new = state.size.at[lid].set(jnp.where(do_merge, total, state.size[lid]))
+    ver_new = state.ver.at[lid].add(jnp.where(do_merge, 2, 0))
+    # free rid (the paper marks unlinked nodes; we deallocate post-wave).
+    alloc_new = state.alloc.at[rid].set(state.alloc[rid] & ~do_merge)
+    b_iota = jnp.arange(b)[None, :]
+    keys_new = keys_new.at[rid].set(
+        jnp.where(sel(do_merge), jnp.full((w, b), EMPTY, KEY_DTYPE), keys_new[rid])
+    )
+    size_new = size_new.at[rid].set(jnp.where(do_merge, 0, size_new[rid]))
+
+    # parent: remove router at left_at and child at max(at, sib_at).
+    rm_child = jnp.maximum(at, sib_at)
+    pk = state.keys[parents]
+    pc = state.children[parents]
+    pk_shift = jnp.where(b_iota >= left_at[:, None], jnp.roll(pk, -1, axis=1), pk)
+    pk_shift = pk_shift.at[:, b - 1].set(EMPTY)
+    pc_shift = jnp.where(b_iota >= rm_child[:, None], jnp.roll(pc, -1, axis=1), pc)
+    pc_shift = pc_shift.at[:, b - 1].set(NULL)
+    keys_new = keys_new.at[parents].set(jnp.where(sel(do_merge), pk_shift, keys_new[parents]))
+    ch_new = ch_new.at[parents].set(jnp.where(sel(do_merge), pc_shift, ch_new[parents]))
+    size_new = size_new.at[parents].add(jnp.where(do_merge, -1, 0))
+
+    # ---- DISTRIBUTE: split merged content evenly; new separator up ---------
+    ln = (total + 1) // 2
+    rn = total - ln
+    shift_k = jnp.take_along_axis(merged_k, jnp.clip(j2 + ln[:, None], 0, 2 * b - 1), axis=1)
+    shift_v = jnp.take_along_axis(merged_v, jnp.clip(j2 + ln[:, None], 0, 2 * b - 1), axis=1)
+    shift_c = jnp.take_along_axis(merged_c, jnp.clip(j2 + ln[:, None], 0, 2 * b - 1), axis=1)
+
+    # leaves: left ln keys, right rn keys; router = merged_k[ln].
+    dl_k = jnp.where(j2 < ln[:, None], merged_k, EMPTY)[:, :b]
+    dr_k = jnp.where(j2 < rn[:, None], shift_k, EMPTY)[:, :b]
+    dl_v = merged_v[:, :b]
+    dr_v = shift_v[:, :b]
+    router_leaf = jnp.take_along_axis(merged_k, jnp.clip(ln, 0, 2 * b - 1)[:, None], axis=1)[:, 0]
+    # internals: left ln children (ln-1 routers); router merged_k[ln-1] up;
+    # right rn children (rn-1 routers) starting at child index ln.
+    di_lk = jnp.where(j2 < ln[:, None] - 1, merged_k, EMPTY)[:, :b]
+    di_lc = jnp.where(j2 < ln[:, None], merged_c, NULL)[:, :b]
+    di_rk = jnp.where(j2 < rn[:, None] - 1, shift_k, EMPTY)[:, :b]
+    di_rc = jnp.where(j2 < rn[:, None], shift_c, NULL)[:, :b]
+    router_int = jnp.take_along_axis(merged_k, jnp.clip(ln - 1, 0, 2 * b - 1)[:, None], axis=1)[:, 0]
+
+    keys_new = keys_new.at[lid].set(
+        jnp.where(sel(do_dist), jnp.where(leaf[:, None], dl_k, di_lk), keys_new[lid])
+    )
+    keys_new = keys_new.at[rid].set(
+        jnp.where(sel(do_dist), jnp.where(leaf[:, None], dr_k, di_rk), keys_new[rid])
+    )
+    vals_new = vals_new.at[lid].set(jnp.where(sel(do_dist & leaf), dl_v, vals_new[lid]))
+    vals_new = vals_new.at[rid].set(jnp.where(sel(do_dist & leaf), dr_v, vals_new[rid]))
+    ch_new = ch_new.at[lid].set(jnp.where(sel(do_dist & ~leaf), di_lc, ch_new[lid]))
+    ch_new = ch_new.at[rid].set(jnp.where(sel(do_dist & ~leaf), di_rc, ch_new[rid]))
+    size_new = size_new.at[lid].set(jnp.where(do_dist, ln, size_new[lid]))
+    size_new = size_new.at[rid].set(jnp.where(do_dist, rn, size_new[rid]))
+    ver_new = ver_new.at[lid].add(jnp.where(do_dist, 2, 0))
+    ver_new = ver_new.at[rid].add(jnp.where(do_dist, 2, 0))
+    router_new = jnp.where(leaf, router_leaf, router_int)
+    keys_new = keys_new.at[parents, left_at].set(
+        jnp.where(do_dist, router_new, keys_new[parents, left_at])
+    )
+
+    dirty_new = state.dirty
+    for rows, m in ((node_ids, active), (sibs, active), (parents, active)):
+        r = jnp.where(m, rows, scratch)
+        dirty_new = dirty_new.at[r].set(dirty_new[r] | m)
+
+    stats = state.stats._replace(
+        struct_ops=state.stats.struct_ops + jnp.sum(active).astype(jnp.int64)
+    )
+    state = state._replace(
+        keys=keys_new, vals=vals_new, children=ch_new, size=size_new,
+        alloc=alloc_new, ver=ver_new, dirty=dirty_new, stats=stats,
+    )
+    # refresh links: parents (child list shifted), lid/rid (grandchildren
+    # reassigned for internal merges/distributes).
+    state = _refresh_child_links(state, parents, cfg)
+    state = _refresh_child_links(state, lid, cfg)
+    state = _refresh_child_links(state, rid, cfg)
+    return state
+
+
+def shrink_root(state: TreeState, cfg: TreeConfig) -> TreeState:
+    """If the root is internal with a single child, that child becomes the
+    root (paper: entry.ptrs[0] replacement in fixUnderfull)."""
+    r = state.root
+    can = (~state.is_leaf[r]) & (state.size[r] == 1)
+    child = state.children[r, 0]
+    child = jnp.where(can, child, r)
+    return state._replace(
+        root=child.astype(jnp.int32),
+        height=state.height - can.astype(jnp.int32),
+        alloc=state.alloc.at[r].set(state.alloc[r] & ~can),
+        size=state.size.at[r].set(jnp.where(can, 0, state.size[r])),
+        parent=state.parent.at[child].set(
+            jnp.where(can, NULL, state.parent[child])
+        ),
+        keys=state.keys.at[r].set(
+            jnp.where(can, jnp.full((cfg.b,), EMPTY, KEY_DTYPE), state.keys[r])
+        ),
+        dirty=state.dirty.at[r].set(True),
+    )
+
+
+# ----------------------------------------------------------------------------
+# jitted phase wrappers
+# ----------------------------------------------------------------------------
+
+
+class RoundOutput(NamedTuple):
+    results: jax.Array  # (B,) per-op return value (NOTFOUND = ⊥)
+    found: jax.Array  # (B,) bool
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _phase_search_combine(state: TreeState, batch, cfg: TreeConfig):
+    """jit: sort → descend → probe → eliminate.  Returns everything apply
+    needs plus per-op results in original arrival order."""
+    ops, keys, vals = batch
+    bsz = ops.shape[0]
+    sort_keys = jnp.where(ops == elim.OP_NOP, EMPTY, keys)
+    perm = jnp.argsort(sort_keys, stable=True)
+    inv = jnp.argsort(perm, stable=True)
+    ks = sort_keys[perm]
+    os_ = ops[perm]
+    vs = vals[perm]
+    arrival = perm.astype(jnp.int32)
+
+    seg_head = _segment_starts(ks)
+    leaf_ids = descend(state, ks, cfg)
+    found, slot, val0 = probe(state, leaf_ids, ks)
+
+    res = elim.eliminate_batch(os_, vs, seg_head, found, jnp.where(found, val0, 0))
+    rets_sorted = elim.op_return_values(os_, res, NOTFOUND)
+    results = rets_sorted[inv]
+    found_out = (rets_sorted != NOTFOUND)[inv]
+
+    stats = state.stats._replace(
+        searches=state.stats.searches + jnp.int64(bsz),
+        eliminated=state.stats.eliminated + res.n_eliminated.astype(jnp.int64),
+    )
+    state = state._replace(stats=stats)
+    return state, (ks, arrival, leaf_ids, slot, res, results, found_out)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_apply(state: TreeState, cfg: TreeConfig, ks, arrival, leaf_ids, slot, res):
+    out = apply_net_ops(
+        state, cfg, leaf_ids, ks, slot,
+        res.net_insert, res.net_delete, res.net_overwrite, res.final_val,
+        arrival,
+    )
+    return out.state, out.deferred
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_retry_insert(state: TreeState, cfg: TreeConfig, ks, vals, arrival, deferred):
+    """Re-descend deferred keys and retry the insert (post-split)."""
+    leaf_ids = descend(state, ks, cfg)
+    found, slot, _ = probe(state, leaf_ids, ks)
+    net_insert = deferred & ~found
+    out = apply_net_ops(
+        state, cfg, leaf_ids, ks, slot,
+        net_insert,
+        jnp.zeros_like(deferred),
+        jnp.zeros_like(deferred),
+        vals,
+        arrival,
+    )
+    return out.state, out.deferred & deferred
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_overfull_leaves(state: TreeState, cfg: TreeConfig, ks, deferred):
+    """Unique (sentinel-padded, sorted) ids of full leaves holding deferred
+    inserts."""
+    leaf_ids = descend(state, ks, cfg)
+    full = deferred & (state.size[leaf_ids] >= cfg.b)
+    ids = jnp.where(full, leaf_ids, INT_MAX)
+    srt = jnp.sort(ids)
+    first = _segment_starts(srt)
+    return jnp.where(first, srt, INT_MAX)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _phase_split(state: TreeState, cfg: TreeConfig, w: int, node_ids, active):
+    return split_wave(state, cfg, node_ids, active)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _phase_underfull(state: TreeState, cfg: TreeConfig, w: int, node_ids, active):
+    return underfull_wave(state, cfg, node_ids, active)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_shrink(state: TreeState, cfg: TreeConfig):
+    return shrink_root(state, cfg)
+
+
+def _pad_ids(ids: np.ndarray, w: int) -> Tuple[jax.Array, jax.Array]:
+    out = np.zeros((w,), np.int32)
+    act = np.zeros((w,), bool)
+    out[: ids.size] = ids
+    act[: ids.size] = True
+    return jnp.asarray(out), jnp.asarray(act)
+
+
+# ----------------------------------------------------------------------------
+# Host-orchestrated tree
+# ----------------------------------------------------------------------------
+
+
+class ABTree:
+    """Host-orchestrated batched (a,b)-tree.  Heavy phases are jitted; the
+    host loop only sequences structural waves (rare — the paper notes splits
+    are infrequent) and reads tiny control scalars."""
+
+    def __init__(self, cfg: TreeConfig = TreeConfig(), mode: str = "elim"):
+        assert mode in ("elim", "occ")
+        assert 2 <= cfg.a <= cfg.b // 2, "(a,b) requires 2 ≤ a ≤ b/2"
+        self.cfg = cfg
+        self.mode = mode
+        self.state = make_tree(cfg)
+        self._wave_w = 64  # pad width for structural waves (recompile-bounded)
+        # durable layer hook: OCC durability commits after EVERY sub-round
+        # (each sub-round's returns causally follow the previous one — the
+        # batched analog of the paper's per-update flush+fence); Elim
+        # commits once per round.  See core/durable.py.
+        self.subround_hook = None
+
+    # -- public API -----------------------------------------------------------
+
+    def apply_round(self, ops, keys, vals=None) -> RoundOutput:
+        """Apply one round of concurrent ops (1-D arrays, equal length).
+        Returns per-op results in arrival order."""
+        ops = jnp.asarray(ops, jnp.int32)
+        keys = jnp.asarray(keys, KEY_DTYPE)
+        vals = jnp.zeros_like(keys) if vals is None else jnp.asarray(vals, VAL_DTYPE)
+        assert ops.shape == keys.shape == vals.shape and ops.ndim == 1
+        self._ensure_capacity(int(ops.shape[0]))
+        if self.mode == "elim":
+            out = self._elim_round(ops, keys, vals)
+        else:
+            out = self._occ_round(ops, keys, vals)
+        st = self.state.stats
+        self.state = self.state._replace(stats=st._replace(rounds=st.rounds + 1))
+        return out
+
+    def find(self, key) -> Optional[int]:
+        out = self.apply_round([OP_FIND], [key])
+        return int(out.results[0]) if bool(out.found[0]) else None
+
+    def insert(self, key, val):
+        out = self.apply_round([OP_INSERT], [key], [val])
+        return int(out.results[0]) if bool(out.found[0]) else None
+
+    def delete(self, key):
+        out = self.apply_round([OP_DELETE], [key])
+        return int(out.results[0]) if bool(out.found[0]) else None
+
+    def items(self) -> dict:
+        """Host-side snapshot of the dictionary contents (sorted by key)."""
+        s = self.state
+        keys = np.asarray(s.keys)
+        vals = np.asarray(s.vals)
+        leaf = np.asarray(s.is_leaf) & np.asarray(s.alloc)
+        out = {}
+        for nid in np.nonzero(leaf)[0]:
+            for j in range(self.cfg.b):
+                k = int(keys[nid, j])
+                if k != int(EMPTY):
+                    out[k] = int(vals[nid, j])
+        return dict(sorted(out.items()))
+
+    def take_dirty(self) -> np.ndarray:
+        """Node ids dirtied since the last durable commit (then reset)."""
+        d = np.nonzero(np.asarray(self.state.dirty))[0].astype(np.int32)
+        self.state = self.state._replace(dirty=jnp.zeros_like(self.state.dirty))
+        return d
+
+    def stats(self) -> dict:
+        return {k: int(v) for k, v in self.state.stats._asdict().items()}
+
+    # -- round internals ------------------------------------------------------
+
+    def _elim_round(self, ops, keys, vals) -> RoundOutput:
+        self.state, pack = _phase_search_combine(self.state, (ops, keys, vals), self.cfg)
+        ks, arrival, leaf_ids, slot, res, results, found = pack
+        self.state, deferred = _phase_apply(
+            self.state, self.cfg, ks, arrival, leaf_ids, slot, res
+        )
+        self._drain_deferred(ks, res.final_val, arrival, deferred)
+        self._fix_underfull_all()
+        return RoundOutput(results=results, found=found)
+
+    def _occ_round(self, ops, keys, vals) -> RoundOutput:
+        """OCC baseline: duplicate-rank sub-rounds, each fully physical."""
+        bsz = int(ops.shape[0])
+        kn = np.asarray(keys)
+        on = np.asarray(ops)
+        rank = np.zeros(bsz, np.int32)
+        seen: dict = {}
+        for i in range(bsz):
+            if on[i] == OP_NOP:
+                continue
+            k = int(kn[i])
+            rank[i] = seen.get(k, 0)
+            seen[k] = rank[i] + 1
+        n_sub = int(rank.max()) + 1 if bsz else 1
+        results = jnp.full((bsz,), NOTFOUND, VAL_DTYPE)
+        found = jnp.zeros((bsz,), bool)
+        for r in range(n_sub):
+            m = jnp.asarray(rank == r) & (ops != OP_NOP)
+            sub_ops = jnp.where(m, ops, OP_NOP)
+            self.state, pack = _phase_search_combine(
+                self.state, (sub_ops, keys, vals), self.cfg
+            )
+            ks, arrival, leaf_ids, slot, res, sub_results, sub_found = pack
+            self.state, deferred = _phase_apply(
+                self.state, self.cfg, ks, arrival, leaf_ids, slot, res
+            )
+            self._drain_deferred(ks, res.final_val, arrival, deferred)
+            self._fix_underfull_all()
+            results = jnp.where(m, sub_results, results)
+            found = jnp.where(m, sub_found, found)
+            st = self.state.stats
+            self.state = self.state._replace(
+                stats=st._replace(subrounds=st.subrounds + 1)
+            )
+            if self.subround_hook is not None:
+                self.subround_hook()
+        return RoundOutput(results=results, found=found)
+
+    # -- structural orchestration ----------------------------------------------
+
+    def _drain_deferred(self, ks, final_vals, arrival, deferred):
+        """Split overflowing leaves and retry deferred inserts until done."""
+        guard = 0
+        while bool(jnp.any(deferred)):
+            guard += 1
+            assert guard < 512 * self.cfg.max_height, "split loop diverged"
+            uniq = _phase_overfull_leaves(self.state, self.cfg, ks, deferred)
+            ids_np = np.asarray(uniq)
+            ids_np = ids_np[ids_np != INT_MAX].astype(np.int32)
+            if ids_np.size:
+                self._split_cascade(ids_np)
+            self.state, deferred = _phase_retry_insert(
+                self.state, self.cfg, ks, final_vals, arrival, deferred
+            )
+
+    def _split_cascade(self, ids_np: np.ndarray):
+        """Split the given full nodes.  A node whose parent is itself full is
+        postponed until the parent has split (pre-splitting ancestors) —
+        keeps every wave's parent-insert within capacity."""
+        work = {int(i) for i in ids_np}
+        guard = 0
+        while work:
+            guard += 1
+            assert guard < 512 * self.cfg.max_height, "split cascade diverged"
+            size = np.asarray(self.state.size)
+            parent = np.asarray(self.state.parent)
+            alloc = np.asarray(self.state.alloc)
+            # prune: stale entries that are no longer full / no longer allocated
+            work = {n for n in work if alloc[n] and size[n] >= self.cfg.b}
+            if not work:
+                break
+            ready, blocked_parents = [], []
+            for n in sorted(work):
+                p = int(parent[n])
+                if p >= 0 and size[p] >= self.cfg.b:
+                    blocked_parents.append(p)
+                else:
+                    ready.append(n)
+            if not ready:
+                # all blocked: split the blocking parents first
+                work |= set(blocked_parents)
+                size = None
+                continue
+            ready_np = _independent_by_parent(self.state, np.asarray(ready, np.int32))
+            ready_np = ready_np[: self._wave_w]  # fixed wave width (no recompiles)
+            self._ensure_capacity(2 * int(ready_np.size))
+            node_ids, active = _pad_ids(ready_np, self._wave_w)
+            self.state = _phase_split(self.state, self.cfg, self._wave_w, node_ids, active)
+            for n in ready_np.tolist():
+                work.discard(int(n))
+            work |= set(blocked_parents)
+
+    def _fix_underfull_all(self):
+        """Merge/distribute every underfull non-root node, bottom-up waves."""
+        guard = 0
+        while True:
+            guard += 1
+            assert guard < 512 * self.cfg.max_height, "underfull loop diverged"
+            s = self.state
+            alloc = np.asarray(s.alloc)
+            size = np.asarray(s.size)
+            parent = np.asarray(s.parent)
+            level = np.asarray(s.level)
+            root = int(s.root)
+            under = alloc & (size < self.cfg.a) & (parent >= 0)
+            under[root] = False
+            ids = np.nonzero(under)[0].astype(np.int32)
+            actionable = ids[size[parent[ids]] >= 2] if ids.size else ids
+            if actionable.size:
+                lv = level[actionable].min()
+                sel = actionable[level[actionable] == lv]
+                sel = _independent_by_parent(self.state, sel)
+                sel = sel[: self._wave_w]  # fixed wave width (no recompiles)
+                node_ids, active = _pad_ids(sel, self._wave_w)
+                self.state = _phase_underfull(
+                    self.state, self.cfg, self._wave_w, node_ids, active
+                )
+                continue
+            # nothing actionable: shrink a single-child root chain, else done.
+            if (not bool(np.asarray(s.is_leaf)[root])) and int(size[root]) == 1:
+                self.state = _phase_shrink(self.state, self.cfg)
+                continue
+            break
+
+    # -- pool management --------------------------------------------------------
+
+    def _ensure_capacity(self, need_nodes: int):
+        """Grow the pool if fewer than `need + slack` nodes are free."""
+        need = 2 * need_nodes + 4 * self.cfg.max_height + 8
+        n_alloc = int(jnp.sum(self.state.alloc))
+        cap = self.cfg.capacity
+        if cap - n_alloc >= need:
+            return
+        self._grow(max(cap * 2, cap + need))
+
+    def _grow(self, new_cap: int):
+        cfg = self.cfg
+        old = self.state
+        pad_n = new_cap - cfg.capacity
+
+        def grow_arr(x, fill):
+            pad_shape = (pad_n,) + x.shape[1:]
+            return jnp.concatenate([x, jnp.full(pad_shape, fill, x.dtype)], axis=0)
+
+        self.state = TreeState(
+            keys=grow_arr(old.keys, EMPTY),
+            vals=grow_arr(old.vals, 0),
+            children=grow_arr(old.children, NULL),
+            parent=grow_arr(old.parent, NULL),
+            pidx=grow_arr(old.pidx, 0),
+            is_leaf=grow_arr(old.is_leaf, True),
+            size=grow_arr(old.size, 0),
+            level=grow_arr(old.level, 0),
+            ver=grow_arr(old.ver, 0),
+            alloc=grow_arr(old.alloc, False),
+            rec_key=grow_arr(old.rec_key, EMPTY),
+            rec_val=grow_arr(old.rec_val, 0),
+            rec_ver=grow_arr(old.rec_ver, 0),
+            rec_op=grow_arr(old.rec_op, 0),
+            root=old.root,
+            height=old.height,
+            dirty=grow_arr(old.dirty, False),
+            stats=old.stats,
+        )
+        self.cfg = cfg._replace(capacity=new_cap)
+
+
+def _independent_by_parent(state: TreeState, ids_np: np.ndarray) -> np.ndarray:
+    """Host-side: keep one node per parent (lowest id first)."""
+    if ids_np.size == 0:
+        return ids_np
+    parent = np.asarray(state.parent)[ids_np]
+    keep, seen = [], set()
+    for nid, p in zip(ids_np.tolist(), parent.tolist()):
+        if int(p) not in seen:
+            seen.add(int(p))
+            keep.append(int(nid))
+    return np.asarray(keep, np.int32)
+
+
+# ----------------------------------------------------------------------------
+# Range queries (paper §3: "could be added using the techniques of [5]").
+# Optimistic double-collect over the touched subtree: capture versions,
+# walk, re-validate — the multi-node generalization of searchLeaf.
+# ----------------------------------------------------------------------------
+
+
+def range_query(tree: "ABTree", lo: int, hi: int, max_retries: int = 8):
+    """All (k, v) with lo ≤ k < hi, validated against node versions (the
+    paper's optimistic-reader discipline, [5]-style epoch elided because
+    rounds are quiescent between calls; retries guard against interleaved
+    rounds from other engine threads sharing the state)."""
+    cfg = tree.cfg
+    for _ in range(max_retries):
+        s = tree.state
+        ver_before = np.asarray(s.ver)
+        keys = np.asarray(s.keys)
+        vals = np.asarray(s.vals)
+        children = np.asarray(s.children)
+        is_leaf = np.asarray(s.is_leaf)
+        size = np.asarray(s.size)
+        root = int(s.root)
+        out = []
+        touched = []
+        stack = [root]
+        while stack:
+            nid = stack.pop()
+            touched.append(nid)
+            if is_leaf[nid]:
+                for j in range(cfg.b):
+                    k = int(keys[nid, j])
+                    if k != int(EMPTY) and lo <= k < hi:
+                        out.append((k, int(vals[nid, j])))
+                continue
+            sz = int(size[nid])
+            routers = keys[nid, : sz - 1]
+            for j in range(sz):
+                clo = -(2**63) if j == 0 else int(routers[j - 1])
+                chi = int(EMPTY) if j == sz - 1 else int(routers[j])
+                if chi > lo and clo < hi:  # child range intersects [lo, hi)
+                    stack.append(int(children[nid, j]))
+        ver_after = np.asarray(tree.state.ver)
+        if all(ver_before[t] == ver_after[t] for t in touched):
+            return sorted(out)
+    raise RuntimeError("range_query: version validation failed repeatedly")

@@ -1,0 +1,306 @@
+"""Durable (strictly linearizable) tree — the paper's §5, adapted to a
+framework durability substrate (DESIGN.md §2, row "clwb+sfence").
+
+The paper's p-OCC-ABtree persists only keys/values/pointers, ordering writes
+with clwb+sfence so that (i) new nodes are persistent *before* the single
+pointer that links them ("link-and-persist": the pointer is written marked,
+flushed, then unmarked — readers never follow an unpersisted pointer), and
+(ii) a simple insert/delete becomes durable exactly when its key reaches
+persistent memory.
+
+On a distributed training/serving system the persistence domain is a
+filesystem, not NVRAM, and the update unit is a *round*, not a single store.
+The protocol maps 1:1:
+
+  paper                           this module
+  ----------------------------    ------------------------------------------
+  flush new nodes (clwb+sfence)   write round segment file + fsync
+  write marked pointer            write MANIFEST.tmp naming the segment
+  flush pointer, unmark           fsync tmp, os.replace → MANIFEST, fsync dir
+  recovery: walk from root,       recovery: load last committed manifest,
+    rebuild size/ver/locks          replay segments, rebuild size/ver/dirty
+
+The commit point (durable linearization point) is the atomic rename: a round
+is in the abstract *persistent* dictionary iff its manifest committed —
+exactly the paper's "a key is in the p-tree iff it reached persistent
+memory", lifted to round granularity.  Strict linearizability: ops of an
+uncommitted round took no externally visible effect (results are only
+released to callers after commit in `DurableABTree.apply_round`), so
+removing them from the crashed execution is legal; ops of committed rounds
+are linearized before the crash.
+
+Publishing elimination reduces durability cost exactly as in the paper:
+eliminated ops dirty no nodes, so fewer node images are flushed per round
+(`flush_bytes`, `fsyncs` counters below reproduce the Table-1-style
+accounting).
+
+Crash injection: ``CrashPoint`` raises ``SimulatedCrash`` at a chosen step
+(after-segment / mid-manifest / after-manifest-before-dir-sync) so tests can
+assert recovery lands on the last committed round boundary.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abtree import ABTree, RoundOutput, TreeConfig, TreeState, make_tree
+
+_PERSISTED_FIELDS = ("keys", "vals", "children", "is_leaf", "level")
+# NOT persisted (volatile; rebuilt by recovery, as in the paper §5 — only
+# keys/values/child pointers are persistent):
+#   size (recomputed from keys/children), parent/pidx (rebuilt from the
+#   recovery walk), ver (reset), rec_* (reset), alloc (recomputed), dirty,
+#   stats.
+
+
+class SimulatedCrash(RuntimeError):
+    pass
+
+
+@dataclass
+class CrashPoint:
+    """Injects a crash at the n-th occurrence of the named step."""
+
+    step: str = ""  # "after_segment" | "mid_manifest" | "before_dirsync"
+    at_commit: int = -1  # commit index at which to fire (-1 = never)
+    _count: int = field(default=0, repr=False)
+
+    def maybe_fire(self, step: str, commit_idx: int):
+        if self.step == step and self.at_commit == commit_idx:
+            raise SimulatedCrash(f"simulated crash at {step} (commit {commit_idx})")
+
+
+def _fsync_dir(path: str):
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+@dataclass
+class DurableStats:
+    commits: int = 0
+    flush_bytes: int = 0  # bytes of node images made durable
+    fsyncs: int = 0
+    nodes_flushed: int = 0
+
+
+class DurableABTree:
+    """ABTree + round-granular link-and-persist durability."""
+
+    def __init__(
+        self,
+        directory: str,
+        cfg: TreeConfig = TreeConfig(),
+        mode: str = "elim",
+        crash: Optional[CrashPoint] = None,
+        snapshot_every: int = 64,
+    ):
+        os.makedirs(directory, exist_ok=True)
+        self.dir = directory
+        self.tree = ABTree(cfg, mode=mode)
+        if mode == "occ":
+            # p-OCC: per-update flush discipline → per-sub-round commits
+            self.tree.subround_hook = self._commit
+        self.crash = crash or CrashPoint()
+        self.snapshot_every = snapshot_every
+        self.dstats = DurableStats()
+        self._commit_idx = 0
+        self._segments: list = []  # segment filenames since last snapshot
+        self._snapshot_file: Optional[str] = None
+        # initial durable state: commit round 0 (empty tree snapshot)
+        self._commit(force_snapshot=True)
+
+    # -- public API -----------------------------------------------------------
+
+    def apply_round(self, ops, keys, vals=None) -> RoundOutput:
+        """Apply a round and make it durable.  Results are only returned
+        after the commit — the durable linearization discipline.  (In occ
+        mode the sub-round hook has already committed each sub-round; the
+        final commit below then flushes nothing new.)"""
+        out = self.tree.apply_round(ops, keys, vals)
+        if self.tree.mode != "occ":
+            self._commit()
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        s = self.tree.stats()
+        s.update(
+            commits=self.dstats.commits,
+            flush_bytes=self.dstats.flush_bytes,
+            fsyncs=self.dstats.fsyncs,
+            nodes_flushed=self.dstats.nodes_flushed,
+        )
+        return s
+
+    # -- commit protocol (link-and-persist) ------------------------------------
+
+    def _commit(self, force_snapshot: bool = False):
+        idx = self._commit_idx
+        # a pool growth invalidates segment indexing → force a snapshot
+        grown = getattr(self, "_snap_capacity", None) != self.tree.cfg.capacity
+        snap = force_snapshot or grown or (idx % self.snapshot_every == 0)
+        if snap:
+            fname = f"snapshot_{idx:08d}.npz"
+            self._write_snapshot(fname)
+            self._snapshot_file = fname
+            self._segments = []
+            self._snap_capacity = self.tree.cfg.capacity
+        else:
+            dirty = self.tree.take_dirty()
+            fname = f"segment_{idx:08d}.npz"
+            self._write_segment(fname, dirty)
+            self._segments.append(fname)
+        self.crash.maybe_fire("after_segment", idx)
+
+        manifest = {
+            "commit": idx,
+            "snapshot": self._snapshot_file,
+            "segments": self._segments,
+            "root": int(self.tree.state.root),
+            "height": int(self.tree.state.height),
+            "capacity": self.tree.cfg.capacity,
+            "b": self.tree.cfg.b,
+            "a": self.tree.cfg.a,
+            "max_height": self.tree.cfg.max_height,
+            "mode": self.tree.mode,
+        }
+        tmp = os.path.join(self.dir, "MANIFEST.tmp")
+        payload = json.dumps(manifest)
+        with open(tmp, "w") as f:
+            f.write(payload[: len(payload) // 2])
+            f.flush()
+            self.crash.maybe_fire("mid_manifest", idx)
+            f.write(payload[len(payload) // 2 :])
+            f.flush()
+            os.fsync(f.fileno())
+        self.dstats.fsyncs += 1
+        os.replace(tmp, os.path.join(self.dir, "MANIFEST"))  # the "link" step
+        self.crash.maybe_fire("before_dirsync", idx)
+        _fsync_dir(self.dir)  # the "persist" step
+        self.dstats.fsyncs += 1
+        self.dstats.commits += 1
+        self._commit_idx += 1
+
+    def _write_snapshot(self, fname: str):
+        s = self.tree.state
+        arrs = {f: np.asarray(getattr(s, f)) for f in _PERSISTED_FIELDS}
+        self._write_npz(fname, node_ids=None, **arrs)
+        self.tree.take_dirty()  # snapshot covers everything
+
+    def _write_segment(self, fname: str, dirty: np.ndarray):
+        s = self.tree.state
+        arrs = {f: np.asarray(getattr(s, f))[dirty] for f in _PERSISTED_FIELDS}
+        self._write_npz(fname, node_ids=dirty, **arrs)
+
+    def _write_npz(self, fname: str, node_ids, **arrs):
+        path = os.path.join(self.dir, fname)
+        tmp = path + ".tmp"
+        save = dict(arrs)
+        if node_ids is not None:
+            save["node_ids"] = node_ids
+        with open(tmp, "wb") as f:
+            np.savez(f, **save)
+            f.flush()
+            os.fsync(f.fileno())  # the paper's clwb+sfence of new nodes
+        os.replace(tmp, path)
+        nbytes = sum(a.nbytes for a in save.values())
+        self.dstats.flush_bytes += nbytes
+        self.dstats.fsyncs += 1
+        self.dstats.nodes_flushed += (
+            int(node_ids.size) if node_ids is not None else int(arrs["keys"].shape[0])
+        )
+
+
+def recover(directory: str, crash: Optional[CrashPoint] = None) -> DurableABTree:
+    """Recovery procedure (paper §5): load the last *committed* manifest,
+    replay node images, rebuild volatile fields (size recount, versions and
+    records reset, allocation recomputed by reachability)."""
+    mpath = os.path.join(directory, "MANIFEST")
+    with open(mpath) as f:
+        manifest = json.load(f)  # a torn manifest never commits (rename is atomic)
+
+    cfg = TreeConfig(
+        capacity=manifest["capacity"],
+        b=manifest["b"],
+        a=manifest["a"],
+        max_height=manifest["max_height"],
+    )
+    arrs = {f: None for f in _PERSISTED_FIELDS}
+
+    def load(fname):
+        with np.load(os.path.join(directory, fname)) as z:
+            return {k: z[k] for k in z.files}
+
+    snap = load(manifest["snapshot"])
+    for f in _PERSISTED_FIELDS:
+        arrs[f] = snap[f].copy()
+    for seg in manifest["segments"]:
+        z = load(seg)
+        ids = z["node_ids"]
+        for f in _PERSISTED_FIELDS:
+            arrs[f][ids] = z[f]
+
+    state = make_tree(cfg)
+    # rebuild volatile fields -------------------------------------------------
+    keys = arrs["keys"]
+    children = arrs["children"]
+    is_leaf = arrs["is_leaf"]
+    from repro.core.abtree import EMPTY, NULL  # local import to avoid cycle
+
+    n = keys.shape[0]  # pool rows = capacity + 1 (scratch row, see make_tree)
+    assert n == cfg.capacity + 1
+    size = np.zeros((n,), np.int32)
+    size[is_leaf] = (keys[is_leaf] != int(EMPTY)).sum(axis=1)
+    size[~is_leaf] = (children[~is_leaf] != int(NULL)).sum(axis=1)
+    # allocation = reachability from root (paper: recovery walks the tree);
+    # parent/pidx are volatile and rebuilt during the same walk.
+    alloc = np.zeros((n,), bool)
+    parent_arr = np.full((n,), int(NULL), np.int32)
+    pidx_arr = np.zeros((n,), np.int32)
+    stack = [manifest["root"]]
+    while stack:
+        nid = stack.pop()
+        if nid < 0 or alloc[nid]:
+            continue
+        alloc[nid] = True
+        if not is_leaf[nid]:
+            for j in range(int(size[nid])):
+                c = int(children[nid][j])
+                parent_arr[c] = nid
+                pidx_arr[c] = j
+                stack.append(c)
+
+    state = state._replace(
+        keys=jnp.asarray(arrs["keys"]),
+        vals=jnp.asarray(arrs["vals"]),
+        children=jnp.asarray(arrs["children"]),
+        parent=jnp.asarray(parent_arr),
+        pidx=jnp.asarray(pidx_arr),
+        is_leaf=jnp.asarray(arrs["is_leaf"]),
+        level=jnp.asarray(arrs["level"]),
+        size=jnp.asarray(size),
+        alloc=jnp.asarray(alloc),
+        root=jnp.int32(manifest["root"]),
+        height=jnp.int32(manifest["height"]),
+        dirty=jnp.zeros((n,), bool),
+    )
+
+    out = DurableABTree.__new__(DurableABTree)
+    out.dir = directory
+    out.tree = ABTree(cfg, mode=manifest["mode"])
+    out.tree.state = state
+    out.crash = crash or CrashPoint()
+    out.snapshot_every = 64
+    out.dstats = DurableStats()
+    out._commit_idx = manifest["commit"] + 1
+    out._segments = list(manifest["segments"])
+    out._snapshot_file = manifest["snapshot"]
+    out._snap_capacity = cfg.capacity
+    return out

@@ -1,0 +1,249 @@
+"""Publishing elimination as a batched combine (the paper's §4, TPU-native).
+
+In the paper, an operation O' on key k that is concurrent with the last
+modifying operation O of k's leaf may linearize itself adjacent to O by
+reading the leaf's published ``ElimRecord`` — returning *without writing the
+data structure*.  In the SPMD setting every operation in a round is mutually
+concurrent, so for each key we may choose *any* linearization order of the
+round's ops on that key (we use batch arrival order, which is trivially
+valid).  Folding the ops of one key over the key's pre-round state yields
+
+  * the return value of every op  (computed from the *record*, not the tree),
+  * the key's net effect          (at most ONE physical slot write),
+
+which is exactly the write-collapse publishing elimination buys: of n ops on
+a key, n-1 are *eliminated* — they never touch tree memory.
+
+The fold is a function composition over the 2-state machine
+
+    state ∈ { absent } ∪ { present(v) }
+
+with per-op transitions (dictionary semantics from §3 of the paper):
+
+    find       : id
+    insert(v)  : absent → present(v)      ; present(w) → present(w)
+    delete     : absent → absent          ; present(w) → absent
+
+Every composite of such transitions is representable by a 4-tuple
+``(a_kind, a_val, p_kind, p_val)`` describing its action on ``absent`` and on
+``present(w)`` respectively, with kinds
+
+    KIND_ABSENT  = 0   → absent
+    KIND_CONST   = 1   → present(const val)
+    KIND_KEEP    = 2   → present(w)        (only meaningful for the present leg)
+
+Function composition of these tuples is associative, so the per-key fold is a
+*segmented associative scan* — one ``lax.associative_scan`` over the
+key-sorted batch.  This is the pure-jnp oracle for the ``elim_combine``
+Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Op codes (shared with abtree).
+OP_NOP = jnp.int32(0)
+OP_FIND = jnp.int32(1)
+OP_INSERT = jnp.int32(2)
+OP_DELETE = jnp.int32(3)
+
+KIND_ABSENT = jnp.int32(0)
+KIND_CONST = jnp.int32(1)
+KIND_KEEP = jnp.int32(2)
+
+
+class Transition(NamedTuple):
+    """Composable transition of the {absent, present(v)} state machine.
+
+    ``flag`` marks segment starts for the segmented scan (Blelloch-style
+    segmented-scan monoid: once a segment boundary is crossed, the left
+    operand is discarded).
+    """
+
+    a_kind: jax.Array  # action on `absent`:      KIND_ABSENT | KIND_CONST
+    a_val: jax.Array
+    p_kind: jax.Array  # action on `present(w)`:  KIND_ABSENT | KIND_CONST | KIND_KEEP
+    p_val: jax.Array
+    flag: jax.Array  # bool, True at segment starts
+
+
+class EliminationResult(NamedTuple):
+    """Per-op and per-segment outputs of the combine (in *sorted* order)."""
+
+    before_present: jax.Array  # (B,) bool  — state seen by each op (exclusive prefix)
+    before_val: jax.Array  # (B,)       — value seen by each op (valid iff present)
+    after_present: jax.Array  # (B,) bool  — state after each op (inclusive prefix)
+    after_val: jax.Array  # (B,)
+    seg_head: jax.Array  # (B,) bool  — True at the first op of each key segment
+    net_insert: jax.Array  # (B,) bool  — at seg head: key must be inserted (val=final)
+    net_delete: jax.Array  # (B,) bool  — at seg head: key must be deleted
+    net_overwrite: jax.Array  # (B,) bool — at seg head: value must be overwritten
+    final_val: jax.Array  # (B,)       — at seg head: value after the round
+    n_eliminated: jax.Array  # ()   — update-ops that required no physical write
+
+
+def op_transition(op: jax.Array, val: jax.Array, is_start: jax.Array) -> Transition:
+    """Lift one dictionary op to a Transition."""
+    is_ins = op == OP_INSERT
+    is_del = op == OP_DELETE
+    # find / nop: identity.
+    a_kind = jnp.where(is_ins, KIND_CONST, KIND_ABSENT)
+    a_val = jnp.where(is_ins, val, jnp.zeros_like(val))
+    p_kind = jnp.where(is_del, KIND_ABSENT, KIND_KEEP)
+    p_val = jnp.zeros_like(val)
+    return Transition(a_kind, a_val, p_kind, p_val, is_start)
+
+
+def _apply_kind(kind, kval, in_present, in_val):
+    """Apply one leg (kind, kval) given the input state."""
+    out_present = jnp.where(kind == KIND_ABSENT, False, True)
+    out_val = jnp.where(kind == KIND_CONST, kval, in_val)
+    # KIND_KEEP with absent input cannot arise from well-formed compositions
+    # applied to their own leg, but compose() below never generates it either:
+    # we resolve KEEP eagerly during composition.
+    del in_present
+    return out_present, out_val
+
+
+def compose(f: Transition, g: Transition) -> Transition:
+    """h = g ∘ f  (f happens first).  Segmented: if g starts a segment, f is
+    discarded.  Associativity: function composition + the standard segmented
+    scan flag monoid."""
+
+    # --- g∘f on the `absent` leg: feed f's absent-output into g.
+    f_a_present = f.a_kind != KIND_ABSENT
+    # g applied to (present, f.a_val):
+    gp_on_fa_kind = jnp.where(g.p_kind == KIND_KEEP, KIND_CONST, g.p_kind)
+    gp_on_fa_val = jnp.where(g.p_kind == KIND_KEEP, f.a_val, g.p_val)
+    h_a_kind = jnp.where(f_a_present, gp_on_fa_kind, g.a_kind)
+    h_a_val = jnp.where(f_a_present, gp_on_fa_val, g.a_val)
+
+    # --- g∘f on the `present(w)` leg.
+    # f(present(w)):  absent | const(f.p_val) | keep(w)
+    # then g of that.
+    f_p_present = f.p_kind != KIND_ABSENT
+    # if f left state present: value is f.p_val (const) or w (keep)
+    # g on present-input:
+    g_keep = g.p_kind == KIND_KEEP
+    # resulting kind when f leg was present:
+    hp_kind_fp = jnp.where(
+        g_keep,
+        # g keeps f's output: const(f.p_val) or keep(w)
+        jnp.where(f.p_kind == KIND_KEEP, KIND_KEEP, KIND_CONST),
+        g.p_kind,
+    )
+    hp_val_fp = jnp.where(
+        g_keep,
+        f.p_val,  # only used when hp_kind_fp == KIND_CONST
+        g.p_val,
+    )
+    h_p_kind = jnp.where(f_p_present, hp_kind_fp, g.a_kind)
+    h_p_val = jnp.where(f_p_present, hp_val_fp, g.a_val)
+
+    # --- segmented-scan flag handling: if g is a segment start, drop f.
+    h = Transition(
+        a_kind=jnp.where(g.flag, g.a_kind, h_a_kind),
+        a_val=jnp.where(g.flag, g.a_val, h_a_val),
+        p_kind=jnp.where(g.flag, g.p_kind, h_p_kind),
+        p_val=jnp.where(g.flag, g.p_val, h_p_val),
+        flag=jnp.logical_or(f.flag, g.flag),
+    )
+    return h
+
+
+def apply_transition(t: Transition, present0: jax.Array, val0: jax.Array):
+    """Apply a (composed) transition to an initial state."""
+    out_p_on_absent, out_v_on_absent = _apply_kind(t.a_kind, t.a_val, False, val0)
+    out_p_on_present, out_v_on_present = _apply_kind(t.p_kind, t.p_val, True, val0)
+    present = jnp.where(present0, out_p_on_present, out_p_on_absent)
+    val = jnp.where(present0, out_v_on_present, out_v_on_absent)
+    return present, val
+
+
+def eliminate_batch(
+    ops_sorted: jax.Array,  # (B,) int32, key-sorted (stable ⇒ arrival order kept)
+    vals_sorted: jax.Array,  # (B,)
+    seg_head: jax.Array,  # (B,) bool, True at first op of each key segment
+    present0: jax.Array,  # (B,) bool, per-op: pre-round presence of its key
+    val0: jax.Array,  # (B,)     per-op: pre-round value of its key
+) -> EliminationResult:
+    """Run the publishing-elimination combine over one key-sorted batch.
+
+    ``present0`` / ``val0`` need only be correct at segment heads; they are
+    broadcast from the head within each segment here.
+    """
+    b = ops_sorted.shape[0]
+    idx = jnp.arange(b)
+
+    # Broadcast the segment head's initial state to every op in the segment.
+    head_idx = jnp.where(seg_head, idx, 0)
+    head_idx = jax.lax.associative_scan(jnp.maximum, head_idx)  # last head ≤ i
+    present0 = present0[head_idx]
+    val0 = val0[head_idx]
+
+    trans = op_transition(ops_sorted, vals_sorted, seg_head)
+    # Inclusive segmented scan of transition composition.
+    inc = jax.lax.associative_scan(compose, trans)
+    after_present, after_val = apply_transition(inc, present0, val0)
+
+    # Exclusive state (what each op observed): shift the inclusive scan right
+    # within segments; at segment heads the exclusive state is (present0, val0).
+    prev_present = jnp.concatenate([jnp.zeros((1,), bool), after_present[:-1]])
+    prev_val = jnp.concatenate([jnp.zeros((1,), after_val.dtype), after_val[:-1]])
+    before_present = jnp.where(seg_head, present0, prev_present)
+    before_val = jnp.where(seg_head, val0, prev_val)
+
+    # Segment-final state, surfaced at the segment head (where apply acts).
+    next_head = jnp.concatenate([seg_head[1:], jnp.ones((1,), bool)])
+    seg_end = next_head  # position i is the last op of its segment
+    # For each head, locate its segment end: scan max of (i if seg_end) from
+    # the right.  Equivalently reverse-scan.
+    end_idx = jnp.where(seg_end, idx, b - 1)
+    end_idx = jax.lax.associative_scan(jnp.minimum, end_idx, reverse=True)
+    final_present = after_present[end_idx]
+    final_val = after_val[end_idx]
+
+    net_insert = seg_head & ~present0 & final_present
+    net_delete = seg_head & present0 & ~final_present
+    net_overwrite = seg_head & present0 & final_present & (final_val != val0)
+    n_net = jnp.sum(net_insert | net_delete | net_overwrite)
+    # An op is *eliminated* iff it would have modified the tree given the
+    # state it observed (successful insert or successful delete) but is not
+    # covered by the single net write.  This matches the paper's accounting:
+    # unsuccessful updates return without writing in the OCC tree too.
+    would_write = ((ops_sorted == OP_INSERT) & ~before_present) | (
+        (ops_sorted == OP_DELETE) & before_present
+    )
+    n_eliminated = jnp.sum(would_write) - n_net
+
+    return EliminationResult(
+        before_present=before_present,
+        before_val=before_val,
+        after_present=after_present,
+        after_val=after_val,
+        seg_head=seg_head,
+        net_insert=net_insert,
+        net_delete=net_delete,
+        net_overwrite=net_overwrite,
+        final_val=final_val,
+        n_eliminated=n_eliminated,
+    )
+
+
+def op_return_values(
+    ops_sorted: jax.Array,
+    res: EliminationResult,
+    notfound,
+) -> jax.Array:
+    """Dictionary return values per §3 semantics, in sorted order.
+
+    find/insert/delete all return the value associated with the key in the
+    state the op observed, or ⊥ (= ``notfound``) if absent.  (A successful
+    insert returns ⊥; an insert that found the key returns the value; a
+    successful delete returns the removed value.)
+    """
+    ret = jnp.where(res.before_present, res.before_val, notfound)
+    return jnp.where(ops_sorted == OP_NOP, notfound, ret)

@@ -1,0 +1,11 @@
+from repro.data.pipeline import DataConfig, make_data_iter, synthetic_batches
+from repro.data.workloads import WorkloadConfig, op_stream, zipf_keys
+
+__all__ = [
+    "DataConfig",
+    "make_data_iter",
+    "synthetic_batches",
+    "WorkloadConfig",
+    "zipf_keys",
+    "op_stream",
+]

@@ -1,0 +1,43 @@
+"""Sample dedup via the Elim-ABtree seen-key index.
+
+Training pipelines dedup documents by content hash; the hash stream is
+heavily skewed (boilerplate, templates) — again the paper's workload.  The
+index answers "seen before?" for a whole batch in one round: inserts of
+already-present hashes return the prior value (found=True) without a write
+— the elimination path does the per-key collapse when a batch itself
+contains duplicates."""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.abtree import ABTree, OP_INSERT, TreeConfig
+
+
+def content_hash(tokens: Sequence[int]) -> int:
+    h = hashlib.blake2b(np.asarray(tokens, np.int32).tobytes(), digest_size=8)
+    return int.from_bytes(h.digest(), "little") >> 1
+
+
+class DedupIndex:
+    def __init__(self, capacity: int = 1 << 15, mode: str = "elim"):
+        self.tree = ABTree(TreeConfig(capacity=capacity), mode=mode)
+        self.seen = 0
+        self.dups = 0
+
+    def filter_batch(self, docs: List[Sequence[int]]) -> Tuple[List[int], dict]:
+        """Returns indices of NEW documents; duplicates (within the batch or
+        vs history) are dropped."""
+        if not docs:
+            return [], {}
+        hashes = [content_hash(d) for d in docs]
+        out = self.tree.apply_round(
+            [OP_INSERT] * len(docs), hashes, list(range(self.seen, self.seen + len(docs)))
+        )
+        found = np.asarray(out.found)
+        keep = [i for i in range(len(docs)) if not found[i]]
+        self.seen += len(docs)
+        self.dups += int(found.sum())
+        return keep, {"seen": self.seen, "duplicates": self.dups, **self.tree.stats()}

@@ -1,0 +1,66 @@
+"""Dictionary-operation workload generators for the paper's benchmarks
+(SetBench-style): uniform / Zipfian key streams × update fraction."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.abtree import OP_DELETE, OP_FIND, OP_INSERT
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    key_range: int = 10_000
+    update_frac: float = 1.0  # inserts+deletes fraction (rest = finds)
+    dist: str = "uniform"  # uniform | zipf
+    zipf_s: float = 1.0
+    batch: int = 256
+    seed: int = 0
+
+
+def zipf_keys(rng: np.random.Generator, n: int, key_range: int, s: float):
+    """Bounded Zipf(s) over [0, key_range) via inverse-CDF sampling (exact,
+    unlike np.random.zipf which is unbounded)."""
+    ranks = np.arange(1, key_range + 1, dtype=np.float64)
+    w = 1.0 / np.power(ranks, s)
+    cdf = np.cumsum(w) / np.sum(w)
+    u = rng.random(n)
+    return np.searchsorted(cdf, u).astype(np.int64)
+
+
+def op_stream(cfg: WorkloadConfig, n_rounds: int):
+    """Yields (ops, keys, vals) rounds."""
+    rng = np.random.default_rng(cfg.seed)
+    # precompute zipf cdf once
+    if cfg.dist == "zipf":
+        ranks = np.arange(1, cfg.key_range + 1, dtype=np.float64)
+        w = 1.0 / np.power(ranks, cfg.zipf_s)
+        cdf = np.cumsum(w) / np.sum(w)
+    for _ in range(n_rounds):
+        if cfg.dist == "zipf":
+            keys = np.searchsorted(cdf, rng.random(cfg.batch)).astype(np.int64)
+        else:
+            keys = rng.integers(0, cfg.key_range, cfg.batch).astype(np.int64)
+        u = rng.random(cfg.batch)
+        ops = np.where(
+            u < cfg.update_frac / 2,
+            OP_INSERT,
+            np.where(u < cfg.update_frac, OP_DELETE, OP_FIND),
+        ).astype(np.int32)
+        vals = rng.integers(0, 1 << 30, cfg.batch).astype(np.int64)
+        yield ops, keys, vals
+
+
+def prefill_tree(tree, cfg: WorkloadConfig, target_frac: float = 0.5):
+    """Prefill to the expected steady-state size (paper methodology)."""
+    rng = np.random.default_rng(cfg.seed + 999)
+    n = int(cfg.key_range * target_frac)
+    keys = rng.choice(cfg.key_range, size=n, replace=False).astype(np.int64)
+    bs = 1024
+    for i in range(0, n, bs):
+        chunk = keys[i : i + bs]
+        tree.apply_round(
+            np.full(chunk.size, OP_INSERT, np.int32), chunk, chunk
+        )
+    return tree

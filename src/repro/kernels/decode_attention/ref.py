@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for decode_attention."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, KH, S, D)
+    v: jax.Array,  # (B, KH, S, D)
+    kv_len=None,
+    *,
+    sm_scale: float | None = None,
+):
+    b, h, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    group = h // kh
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    if kv_len is None:
+        kv_len = s
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    scores = scores * sm_scale
+    mask = jnp.arange(s)[None, None, :] < kv_len
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.elim_combine.kernel import elim_combine_pallas
+from repro.kernels.elim_combine.ops import elim_combine
+from repro.kernels.elim_combine.ref import elim_combine_ref
+
+__all__ = ["elim_combine", "elim_combine_pallas", "elim_combine_ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for elim_combine: the segmented associative scan from
+core/elimination.py restricted to the kernel's (before/after) outputs."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import elimination as elim
+
+
+def elim_combine_ref(ops, vals, seg_head, present0, val0):
+    res = elim.eliminate_batch(
+        ops.astype(jnp.int32),
+        vals,
+        seg_head,
+        present0,
+        val0,
+    )
+    return (
+        res.before_present,
+        res.before_val.astype(vals.dtype),
+        res.after_present,
+        res.after_val.astype(vals.dtype),
+    )

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash_attention (GQA + causal + sliding window)."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, KH, S, D)
+    v: jax.Array,  # (B, KH, S, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: float | None = None,
+):
+    b, h, s, d = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    group = h // kh
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    scores = scores * sm_scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

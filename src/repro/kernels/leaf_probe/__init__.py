@@ -1,0 +1,5 @@
+from repro.kernels.leaf_probe.kernel import leaf_probe_pallas
+from repro.kernels.leaf_probe.ops import leaf_probe, leaf_probe_i64
+from repro.kernels.leaf_probe.ref import leaf_probe_ref
+
+__all__ = ["leaf_probe", "leaf_probe_i64", "leaf_probe_pallas", "leaf_probe_ref"]

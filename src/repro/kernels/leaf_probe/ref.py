@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the leaf_probe kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def leaf_probe_ref(leaf_keys: jax.Array, leaf_vals: jax.Array, queries: jax.Array):
+    eq = leaf_keys == queries[:, None]
+    found = jnp.any(eq, axis=1)
+    slot = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    val = jnp.take_along_axis(leaf_vals, slot[:, None], axis=1)[:, 0]
+    return (
+        jnp.where(found, slot, jnp.int32(-1)),
+        jnp.where(found, val, jnp.int32(0)),
+    )

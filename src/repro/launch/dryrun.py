@@ -1,0 +1,216 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+# The two lines above MUST run before any other import (jax locks the device
+# count at first backend init).
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+For each cell this script
+  1. builds the production mesh (16×16 single-pod or 2×16×16 multi-pod),
+  2. constructs abstract params / batch / cache (ShapeDtypeStructs — no
+     allocation) with their NamedShardings,
+  3. lowers + compiles the corresponding step function,
+  4. records memory_analysis(), cost_analysis(), and the collective-bytes
+     breakdown parsed from the optimized HLO,
+  5. appends the record to the results JSON (resumable cache: cells already
+     present are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun                    # everything (slow)
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --list             # show cells + status
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, all_cells, cell_status, get_config  # noqa: E402
+from repro.launch.inputs import input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
+
+
+def _cell_id(arch, shape, mesh_kind):
+    return f"{arch}|{shape}|{mesh_kind}"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None) -> dict:
+    from repro.analysis.roofline import collective_bytes_from_hlo
+
+    cfg = get_config(arch)
+    overrides = dict(overrides or {})
+    param_dtype = overrides.pop("param_dtype", None)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    status = cell_status(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": status,
+        "kind": shape.kind,
+    }
+    if status != "run":
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    from repro.models import abstract_params, backbone, count_params
+    from repro.models.params import RULE_SETS, param_shardings
+    from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+    spec_tree = backbone.model_spec(cfg)
+    aparams = abstract_params(spec_tree)
+    if param_dtype:  # serving-weight dtype override (§Perf)
+        import jax.numpy as jnp
+
+        aparams = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.dtype(param_dtype)), aparams
+        )
+    rec["n_params"] = count_params(spec_tree)
+
+    with mesh:
+        if shape.kind == "train":
+            from repro.optim.adamw import OptState
+            import jax.numpy as jnp
+
+            jit_maker, sh = make_train_step(cfg, mesh)
+            batch = input_specs(cfg, shape)
+            aopt = OptState(
+                m=aparams, v=aparams, count=jax.ShapeDtypeStruct((), jnp.int32)
+            )
+            astep = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jit_maker(batch).lower(aparams, aopt, batch, astep)
+        elif shape.kind == "prefill":
+            jit_maker, sh = make_prefill_step(cfg, mesh)
+            batch = input_specs(cfg, shape)
+            lowered = jit_maker(batch).lower(aparams, batch)
+        else:  # decode
+            import jax.numpy as jnp
+
+            jitted, sh = make_serve_step(cfg, mesh, shape.batch, shape.seq)
+            specs = input_specs(cfg, shape)
+            lowered = jitted.lower(
+                aparams, specs["cache"], specs["tokens"], specs["pos"]
+            )
+        compiled = lowered.compile()
+
+    rec["lower_compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        k: int(getattr(mem, k, 0) or 0)
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    rec["cost"] = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0))),
+    }
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes_from_hlo(hlo)
+    rec["n_devices"] = 512 if mesh_kind == "multi" else 256
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--suite", default="baseline", choices=["baseline", "opt"],
+                    help="opt = §Perf hillclimb configs (configs/optimized.py)")
+    args = ap.parse_args()
+
+    fname = "dryrun.json" if args.suite == "baseline" else "dryrun_opt.json"
+    out_path = args.out or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", fname)
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+
+    if args.list:
+        for arch, cfg, shape, status in all_cells():
+            for mk in ("single", "multi"):
+                cid = _cell_id(arch, shape.name, mk)
+                done = "✓" if cid in results and results[cid].get("ok") else " "
+                print(f"[{done}] {cid}: {status}")
+        return
+
+    from repro.configs.optimized import OPTIMIZED, overrides_for
+
+    cells = []
+    for arch, cfg, shape, status in all_cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape.name != args.shape:
+            continue
+        if args.suite == "opt" and (arch, shape.name) not in OPTIMIZED:
+            continue
+        for mk in ("single", "multi"):
+            if args.mesh and mk != args.mesh:
+                continue
+            cells.append((arch, shape.name, mk))
+
+    for arch, shape_name, mk in cells:
+        cid = _cell_id(arch, shape_name, mk)
+        if not args.force and cid in results and results[cid].get("ok"):
+            print(f"skip (cached): {cid}")
+            continue
+        print(f"=== {cid} ===", flush=True)
+        try:
+            ov = overrides_for(arch, shape_name) if args.suite == "opt" else None
+            rec = run_cell(arch, shape_name, mk, overrides=ov)
+            if ov:
+                rec["overrides"] = ov
+            rec["ok"] = True
+            if rec["status"] == "run":
+                print(
+                    f"  ok in {rec['lower_compile_s']}s; flops={rec['cost']['flops']:.3e} "
+                    f"coll_bytes={rec['collectives']['total_bytes']:.3e}"
+                    if "cost" in rec
+                    else "  ok"
+                )
+            else:
+                print(f"  {rec['status']}")
+        except Exception as e:  # noqa: BLE001 — record failures, keep going
+            rec = {
+                "arch": arch,
+                "shape": shape_name,
+                "mesh": mk,
+                "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(f"  FAIL: {rec['error']}")
+        results[cid] = rec
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells ok → {out_path}")
+
+
+if __name__ == "__main__":
+    main()

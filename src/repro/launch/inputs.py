@@ -1,0 +1,33 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation (the dry-run pattern)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import backbone
+from repro.models.config import ModelConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Returns (kind, specs) where specs are the abstract arguments for the
+    corresponding step function."""
+    b, s = shape.batch, shape.seq
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.family == "vlm":
+            batch["vis_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vis_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return batch
+    # decode: one new token against a cache of length s
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": backbone.cache_spec(cfg, b, s),
+    }

@@ -1,0 +1,65 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 100 --batch 8 --seq 256 --reduced --ckpt /tmp/ckpt
+
+On the CPU container use --reduced (tiny same-family config); on a real
+slice drop it and pass --mesh to pick the production topology.  Training
+auto-resumes from the newest durable checkpoint in --ckpt.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.data import make_data_iter
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import reduced
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None, help="inject a crash (testing)")
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = {
+        "host": make_host_mesh,
+        "single": lambda: make_production_mesh(multi_pod=False),
+        "multi": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]()
+
+    tcfg = TrainerConfig(
+        ckpt_dir=args.ckpt,
+        ckpt_every=args.ckpt_every,
+        max_steps=args.steps,
+        microbatch=args.microbatch,
+        fail_at_step=args.fail_at,
+    )
+    mk_iter = lambda step: make_data_iter(
+        cfg, batch=args.batch, seq=args.seq, start_step=step
+    )
+    trainer = Trainer(cfg, tcfg, mesh, mk_iter)
+    if trainer.resumed_from is not None:
+        print(f"resumed from durable checkpoint at step {trainer.resumed_from}")
+    out = trainer.run()
+    print(json.dumps(out, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

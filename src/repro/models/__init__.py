@@ -1,0 +1,32 @@
+from repro.models.backbone import (
+    cache_spec,
+    forward_decode,
+    forward_train,
+    init_cache,
+    loss_fn,
+    model_spec,
+)
+from repro.models.config import ModelConfig, reduced
+from repro.models.params import (
+    RULE_SETS,
+    abstract_params,
+    count_params,
+    init_params,
+    param_shardings,
+)
+
+__all__ = [
+    "ModelConfig",
+    "reduced",
+    "model_spec",
+    "forward_train",
+    "forward_decode",
+    "loss_fn",
+    "cache_spec",
+    "init_cache",
+    "init_params",
+    "abstract_params",
+    "param_shardings",
+    "count_params",
+    "RULE_SETS",
+]

@@ -1,0 +1,236 @@
+"""Attention variants: GQA (full / sliding-window), MLA (DeepSeek-V3
+latent attention), and cross-attention (whisper decoder).
+
+Train path uses the pure-jnp oracle (or the Pallas flash kernel when
+cfg.use_pallas); decode path updates a static-shape KV cache and masks by
+`kv_len` — the roofline-correct decode schedule (whole cache streamed once,
+see kernels/decode_attention).
+
+MLA decode uses the *absorbed* form: the cache stores only the compressed
+latent c_kv (kv_lora + rope_head per token) — MLA's serving advantage — and
+the per-head projections are folded into the score/output einsums.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.layers import apply_rope, cdt
+from repro.models.params import P
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, KH, S, D) — or MLA: latent (B, S, kv_lora+rope_head)
+    v: Optional[jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg):
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    s = {
+        "wq": P((d, h, dh), ("embed", "heads", None)),
+        "wk": P((d, kh, dh), ("embed", "kv_heads", None)),
+        "wv": P((d, kh, dh), ("embed", "kv_heads", None)),
+        "wo": P((h, dh, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((h, dh), ("heads", None), "zeros")
+        s["bk"] = P((kh, dh), ("kv_heads", None), "zeros")
+        s["bv"] = P((kh, dh), ("kv_heads", None), "zeros")
+    return s
+
+
+def _qkv(p, x, cfg, positions):
+    dt = cdt(cfg)
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)[None, :, None, :]
+        k = k + p["bk"].astype(dt)[None, :, None, :]
+        v = v + p["bv"].astype(dt)[None, :, None, :]
+    if cfg.use_rope:
+        q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(p, x, cfg, *, causal=True):
+    """x: (B, S, d) → (B, S, d)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, positions)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        o = flash_attention(q, k, v, causal, cfg.window, None, True)
+    else:
+        o = attention_ref(q, k, v, causal=causal, window=cfg.window)
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(cdt(cfg)))
+
+
+def gqa_decode(p, x, cfg, cache: KVCache, pos):
+    """One-token decode.  x: (B, 1, d); pos: scalar current index.
+    Returns (y (B,1,d), new cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)  # q (B,H,1,D); k/v (B,KH,1,D)
+    z = jnp.zeros((), jnp.int32)
+    idx = (z, z, jnp.asarray(pos, jnp.int32), z)
+    knew = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), idx)
+    vnew = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), idx)
+    kv_len = pos + 1
+    if cfg.window > 0:
+        # SWA decode: only the trailing window is live.  We still keep the
+        # full cache layout (static shapes); masking enforces the window —
+        # on TPU the paging layer would bound reads to the window.
+        o = _decode_windowed(q[:, :, 0], knew, vnew, kv_len, cfg.window)
+    else:
+        o = decode_attention_ref(q[:, :, 0], knew.astype(q.dtype), vnew.astype(q.dtype), kv_len)
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(cdt(cfg)))
+    return y[:, None, :], KVCache(knew, vnew)
+
+
+def _decode_windowed(q, k, v, kv_len, window):
+    b, h, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    group = h // kh
+    kx = jnp.repeat(k.astype(q.dtype), group, axis=1)
+    vx = jnp.repeat(v.astype(q.dtype), group, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    scores = scores / (d**0.5)
+    idx = jnp.arange(s)[None, None, :]
+    mask = (idx < kv_len) & (idx >= kv_len - window)
+    scores = jnp.where(mask, scores, -1e30)
+    p_ = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p_, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+def gqa_cache_spec(cfg, batch, s_max, layers=None):
+    kh, dh = cfg.n_kv, cfg.d_head
+    shape = (batch, kh, s_max, dh)
+    if layers:
+        shape = (layers,) + shape
+    dt = jnp.dtype(cfg.dtype)
+    return KVCache(
+        k=jax.ShapeDtypeStruct(shape, dt), v=jax.ShapeDtypeStruct(shape, dt)
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank latent KV + decoupled rope head
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    ql, kvl, dr = cfg.q_lora, cfg.kv_lora, cfg.rope_head
+    return {
+        "wdq": P((d, ql), ("embed", None)),  # q down
+        "wuq": P((ql, h, dh), (None, "heads", None)),  # q up (nope part)
+        "wqr": P((ql, h, dr), (None, "heads", None)),  # q rope part
+        "wdkv": P((d, kvl), ("embed", None)),  # kv joint down (the latent)
+        "wkr": P((d, dr), ("embed", None)),  # shared k rope
+        "wuk": P((kvl, h, dh), (None, "heads", None)),  # k up
+        "wuv": P((kvl, h, dh), (None, "heads", None)),  # v up
+        "wo": P((h, dh, d), ("heads", None, "embed")),
+    }
+
+
+def mla_train(p, x, cfg):
+    dt = cdt(cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cq = jnp.einsum("bsd,dq->bsq", x, p["wdq"].astype(dt))
+    q_nope = jnp.einsum("bsq,qhk->bhsk", cq, p["wuq"].astype(dt))
+    q_rope = jnp.einsum("bsq,qhr->bhsr", cq, p["wqr"].astype(dt))
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dc->bsc", x, p["wdkv"].astype(dt))
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wkr"].astype(dt))
+    k_rope = apply_rope(k_rope[:, None], positions[:, None, :], cfg.rope_theta)[:, 0]
+    k_nope = jnp.einsum("bsc,chk->bhsk", ckv, p["wuk"].astype(dt))
+    v = jnp.einsum("bsc,chk->bhsk", ckv, p["wuv"].astype(dt))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], q_rope.shape)], axis=-1
+    )
+    o = attention_ref(q, k, v, causal=True, sm_scale=1.0 / ((cfg.d_head + cfg.rope_head) ** 0.5))
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+def mla_decode(p, x, cfg, cache: KVCache, pos):
+    """Absorbed MLA decode: cache = latent (B, S, kv_lora + rope_head)."""
+    dt = cdt(cfg)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    cq = jnp.einsum("bsd,dq->bsq", x, p["wdq"].astype(dt))
+    q_nope = jnp.einsum("bsq,qhk->bhsk", cq, p["wuq"].astype(dt))[:, :, 0]  # (B,H,dh)
+    q_rope = jnp.einsum("bsq,qhr->bhsr", cq, p["wqr"].astype(dt))
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)[:, :, 0]
+
+    ckv = jnp.einsum("bsd,dc->bsc", x, p["wdkv"].astype(dt))[:, 0]  # (B, kvl)
+    k_rope = jnp.einsum("bd,dr->br", x[:, 0], p["wkr"].astype(dt))
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    lat_new = jnp.concatenate([ckv, k_rope], axis=-1)[:, None, :]  # (B,1,C+R)
+    z = jnp.zeros((), jnp.int32)
+    lat = jax.lax.dynamic_update_slice(
+        cache.k, lat_new.astype(cache.k.dtype), (z, jnp.asarray(pos, jnp.int32), z)
+    )  # (B, S, C+R)
+    kv_len = pos + 1
+
+    c_lat = lat[..., : cfg.kv_lora].astype(dt)  # (B,S,C)
+    r_lat = lat[..., cfg.kv_lora :].astype(dt)  # (B,S,R)
+    # absorb W_UK into q: q_c (B,H,C) = q_nope @ W_UK^T
+    q_c = jnp.einsum("bhk,chk->bhc", q_nope, p["wuk"].astype(dt))
+    scores = jnp.einsum("bhc,bsc->bhs", q_c.astype(jnp.float32), c_lat.astype(jnp.float32))
+    scores += jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), r_lat.astype(jnp.float32))
+    scores = scores / ((cfg.d_head + cfg.rope_head) ** 0.5)
+    smask = jnp.arange(lat.shape[1])[None, None, :] < kv_len
+    scores = jnp.where(smask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    # attend over latents, then absorb W_UV on the way out
+    o_lat = jnp.einsum("bhs,bsc->bhc", w, c_lat.astype(jnp.float32)).astype(dt)
+    o = jnp.einsum("bhc,chk->bhk", o_lat, p["wuv"].astype(dt))
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(dt))
+    return y[:, None, :], KVCache(lat, None)
+
+
+def mla_cache_spec(cfg, batch, s_max, layers=None):
+    shape = (batch, s_max, cfg.kv_lora + cfg.rope_head)
+    if layers:
+        shape = (layers,) + shape
+    return KVCache(k=jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.dtype)), v=None)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder → encoder output)
+# ---------------------------------------------------------------------------
+
+
+def cross_spec(cfg):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    return {
+        "wq": P((d, h, dh), ("embed", "heads", None)),
+        "wk": P((d, h, dh), ("embed", "heads", None)),
+        "wv": P((d, h, dh), ("embed", "heads", None)),
+        "wo": P((h, dh, d), ("heads", None, "embed")),
+    }
+
+
+def cross_apply(p, x, enc, cfg):
+    dt = cdt(cfg)
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bhtk", enc, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bhtk", enc, p["wv"].astype(dt))
+    o = attention_ref(q, k, v, causal=False)
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(dt))

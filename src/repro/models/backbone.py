@@ -1,0 +1,590 @@
+"""Model assembly for all assigned architecture families.
+
+Public API (used by train/serve/launch):
+    model_spec(cfg)                         → param spec tree (models/params.P)
+    forward_train(params, tokens, cfg, extra=None) → logits (B, S, V)
+    loss_fn(params, batch, cfg)             → (loss, metrics)
+    cache_spec(cfg, batch, s_max)           → decode cache (ShapeDtypeStructs)
+    init_cache(cfg, batch, s_max)           → zero-filled decode cache
+    forward_decode(params, cache, tokens, pos, cfg) → (logits (B,V), cache')
+
+Layer stacks are scanned (`lax.scan` over stacked (L, …) params) wherever
+layers are homogeneous — this keeps the HLO O(1) in depth (compile-time at
+61 layers) and gives remat a natural boundary.  Heterogeneous patterns
+(deepseek dense-prefix, zamba2 shared-attention cadence, xlstm sLSTM
+cadence, whisper enc-dec) are grouped into homogeneous sub-stacks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    cdt,
+    embed_apply,
+    embed_spec,
+    mlp_apply,
+    mlp_spec,
+    norm_apply,
+    norm_spec,
+    sinusoidal_positions,
+    unembed_apply,
+)
+from repro.models.params import P, map_specs
+
+
+# ---------------------------------------------------------------------------
+# spec utilities
+# ---------------------------------------------------------------------------
+
+
+def stack_specs(spec, n: int):
+    """Add a leading stacked-layers dim to every leaf."""
+    return map_specs(
+        lambda path, s: P((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype),
+        spec,
+    )
+
+
+def _remat(f, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(f)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return f
+
+
+# ---------------------------------------------------------------------------
+# transformer block (dense / moe / mla / swa)
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg):
+    return attn.mla_spec(cfg) if cfg.attn == "mla" else attn.gqa_spec(cfg)
+
+
+def _ffn_spec(cfg, moe: bool):
+    return moe_mod.moe_spec(cfg) if moe else mlp_spec(cfg)
+
+
+def block_spec(cfg, moe: bool = False):
+    return {
+        "ln1": norm_spec(cfg),
+        "attn": _attn_spec(cfg),
+        "ln2": norm_spec(cfg),
+        "ffn": _ffn_spec(cfg, moe),
+    }
+
+
+def block_apply(p, x, cfg, moe: bool = False):
+    h = norm_apply(p["ln1"], x, cfg)
+    if cfg.attn == "mla":
+        h = attn.mla_train(p["attn"], h, cfg)
+    else:
+        h = attn.gqa_train(p["attn"], h, cfg)
+    x = x + h
+    h = norm_apply(p["ln2"], x, cfg)
+    h = moe_mod.moe_apply(p["ffn"], h, cfg) if moe else mlp_apply(p["ffn"], h, cfg)
+    return x + h
+
+
+def block_decode(p, x, cfg, cache, pos, moe: bool = False):
+    h = norm_apply(p["ln1"], x, cfg)
+    if cfg.attn == "mla":
+        h, cache = attn.mla_decode(p["attn"], h, cfg, cache, pos)
+    else:
+        h, cache = attn.gqa_decode(p["attn"], h, cfg, cache, pos)
+    x = x + h
+    h = norm_apply(p["ln2"], x, cfg)
+    h = moe_mod.moe_apply(p["ffn"], h, cfg) if moe else mlp_apply(p["ffn"], h, cfg)
+    return x + h, cache
+
+
+def _scan_stack(params, x, cfg, body):
+    """lax.scan x through stacked-layer params."""
+
+    def f(carry, lp):
+        return body(lp, carry), None
+
+    f = _remat(f, cfg)
+    if cfg.scan_layers:
+        out, _ = jax.lax.scan(f, x, params)
+        return out
+    n = jax.tree_util.tree_leaves(params)[0].shape[0]
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], params)
+        x, _ = f(x, lp)
+    return x
+
+
+def _scan_stack_cache(params, caches, x, cfg, body, pos):
+    """Scan with per-layer cache slices; returns (x, new caches)."""
+
+    def f(carry, inp):
+        lp, lc = inp
+        y, nc = body(lp, carry, lc, pos)
+        return y, nc
+
+    if cfg.scan_layers:
+        out, new_caches = jax.lax.scan(f, x, (params, caches))
+        return out, new_caches
+    n = jax.tree_util.tree_leaves(params)[0].shape[0]
+    outs = []
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], params)
+        lc = jax.tree.map(lambda a: a[i], caches)
+        x, nc = f(x, (lp, lc))
+        outs.append(nc)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return x, stacked
+
+
+# ---------------------------------------------------------------------------
+# family: dense / moe / vlm  (decoder-only transformer LM)
+# ---------------------------------------------------------------------------
+
+
+def _lm_spec(cfg: ModelConfig):
+    s: Dict[str, Any] = {"embed": embed_spec(cfg), "ln_f": norm_spec(cfg)}
+    n_moe = 0
+    if cfg.n_experts:
+        n_dense = cfg.first_k_dense
+        n_moe = cfg.n_layers - n_dense
+        if n_dense:
+            s["dense_layers"] = stack_specs(block_spec(cfg, moe=False), n_dense)
+        s["layers"] = stack_specs(block_spec(cfg, moe=True), n_moe)
+    else:
+        s["layers"] = stack_specs(block_spec(cfg, moe=False), cfg.n_layers)
+    if cfg.family == "vlm":
+        # modality frontend is a STUB per assignment: precomputed patch
+        # embeddings arrive as inputs; only a projection is learned here.
+        s["vis_proj"] = P((cfg.d_model, cfg.d_model), ("embed", "embed"))
+    return s
+
+
+def _lm_forward(params, tokens, cfg: ModelConfig, extra=None):
+    x = embed_apply(params["embed"], tokens, cfg)
+    if cfg.family == "vlm":
+        vis = extra["vis_embeds"].astype(cdt(cfg))
+        vis = jnp.einsum("bvd,de->bve", vis, params["vis_proj"].astype(cdt(cfg)))
+        x = jnp.concatenate([vis, x], axis=1)
+    moe = bool(cfg.n_experts)
+    if moe and cfg.first_k_dense:
+        x = _scan_stack(
+            params["dense_layers"], x, cfg, lambda p, h: block_apply(p, h, cfg, False)
+        )
+    x = _scan_stack(params["layers"], x, cfg, lambda p, h: block_apply(p, h, cfg, moe))
+    x = norm_apply(params["ln_f"], x, cfg)
+    if cfg.family == "vlm":
+        x = x[:, extra["vis_embeds"].shape[1] :]  # logits for text positions
+    return unembed_apply(params["embed"], x, cfg)
+
+
+def _lm_cache_spec(cfg, batch, s_max):
+    mk = attn.mla_cache_spec if cfg.attn == "mla" else attn.gqa_cache_spec
+    c = {}
+    if cfg.n_experts and cfg.first_k_dense:
+        c["dense_layers"] = mk(cfg, batch, s_max, layers=cfg.first_k_dense)
+        c["layers"] = mk(cfg, batch, s_max, layers=cfg.n_layers - cfg.first_k_dense)
+    else:
+        c["layers"] = mk(cfg, batch, s_max, layers=cfg.n_layers)
+    return c
+
+
+def _lm_decode(params, cache, tokens, pos, cfg):
+    x = embed_apply(params["embed"], tokens[:, None], cfg)
+    moe = bool(cfg.n_experts)
+    new_cache = dict(cache)
+    if moe and cfg.first_k_dense:
+        x, new_cache["dense_layers"] = _scan_stack_cache(
+            params["dense_layers"], cache["dense_layers"], x, cfg,
+            lambda p, h, c, q: block_decode(p, h, cfg, c, q, False), pos,
+        )
+    x, new_cache["layers"] = _scan_stack_cache(
+        params["layers"], cache["layers"], x, cfg,
+        lambda p, h, c, q: block_decode(p, h, cfg, c, q, moe), pos,
+    )
+    x = norm_apply(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# family: ssm (xlstm)
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_counts(cfg):
+    if cfg.slstm_every:
+        n_s = cfg.n_layers // cfg.slstm_every
+    else:
+        n_s = 0
+    return cfg.n_layers - n_s, n_s
+
+
+def _xlstm_spec(cfg):
+    n_m, n_s = _xlstm_counts(cfg)
+    s = {
+        "embed": embed_spec(cfg),
+        "ln_f": norm_spec(cfg),
+        "mblocks": stack_specs({"ln": norm_spec(cfg), "cell": xlstm_mod.mlstm_spec(cfg)}, n_m),
+    }
+    if n_s:
+        s["sblocks"] = stack_specs(
+            {"ln": norm_spec(cfg), "cell": xlstm_mod.slstm_spec(cfg)}, n_s
+        )
+    return s
+
+
+def _xlstm_segments(cfg):
+    """Segment pattern: (k-1) mLSTM blocks then 1 sLSTM, repeated."""
+    n_m, n_s = _xlstm_counts(cfg)
+    if not n_s:
+        return [(n_m, False)]
+    k = cfg.slstm_every
+    segs = []
+    for _ in range(n_s):
+        segs.append((k - 1, False))
+        segs.append((1, True))
+    rem = cfg.n_layers - n_s * k
+    if rem:
+        segs.append((rem, False))
+    return segs
+
+
+def _slice_stack(params, lo, n):
+    return jax.tree.map(lambda a: a[lo : lo + n], params)
+
+
+def _xlstm_forward(params, tokens, cfg, extra=None):
+    x = embed_apply(params["embed"], tokens, cfg)
+    mi = si = 0
+    for count, is_s in _xlstm_segments(cfg):
+        if is_s:
+            for j in range(count):
+                lp = jax.tree.map(lambda a: a[si], params["sblocks"])
+                x = x + xlstm_mod.slstm_train(
+                    lp["cell"], norm_apply(lp["ln"], x, cfg), cfg
+                )
+                si += 1
+        else:
+            lp = _slice_stack(params["mblocks"], mi, count)
+            if cfg.mlstm_chunk:
+                cell = lambda p, h: h + xlstm_mod.mlstm_train_chunked(
+                    p["cell"], norm_apply(p["ln"], h, cfg), cfg, chunk=cfg.mlstm_chunk
+                )
+            else:
+                cell = lambda p, h: h + xlstm_mod.mlstm_train(
+                    p["cell"], norm_apply(p["ln"], h, cfg), cfg
+                )
+            x = _scan_stack(lp, x, cfg, cell)
+            mi += count
+    x = norm_apply(params["ln_f"], x, cfg)
+    return unembed_apply(params["embed"], x, cfg)
+
+
+def _xlstm_cache_spec(cfg, batch, s_max):
+    n_m, n_s = _xlstm_counts(cfg)
+    c = {"m": xlstm_mod.mlstm_cache_spec(cfg, batch, layers=n_m)}
+    if n_s:
+        c["s"] = xlstm_mod.slstm_cache_spec(cfg, batch, layers=n_s)
+    return c
+
+
+def _xlstm_decode(params, cache, tokens, pos, cfg):
+    x = embed_apply(params["embed"], tokens[:, None], cfg)
+    mi = si = 0
+    new_m, new_s = [], []
+    for count, is_s in _xlstm_segments(cfg):
+        if is_s:
+            for _ in range(count):
+                lp = jax.tree.map(lambda a: a[si], params["sblocks"])
+                lc = jax.tree.map(lambda a: a[si], cache["s"])
+                y, nc = xlstm_mod.slstm_decode(
+                    lp["cell"], norm_apply(lp["ln"], x, cfg), cfg, lc
+                )
+                x = x + y
+                new_s.append(nc)
+                si += 1
+        else:
+            lp = _slice_stack(params["mblocks"], mi, count)
+            lc = jax.tree.map(lambda a: a[mi : mi + count], cache["m"])
+
+            def body(p, h, c, q):
+                y, nc = xlstm_mod.mlstm_decode(
+                    p["cell"], norm_apply(p["ln"], h, cfg), cfg, c
+                )
+                return h + y, nc
+
+            x, ncs = _scan_stack_cache(lp, lc, x, cfg, body, pos)
+            new_m.append(ncs)
+            mi += count
+    x = norm_apply(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg)
+    out = {"m": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_m)}
+    if new_s:
+        out["s"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_s)
+    return logits[:, 0], out
+
+
+# ---------------------------------------------------------------------------
+# family: hybrid (zamba2 — mamba2 backbone + shared attention block)
+# ---------------------------------------------------------------------------
+
+
+def _z_invocations(cfg):
+    return cfg.n_layers // cfg.shared_attn_every if cfg.shared_attn_every else 0
+
+
+def _hybrid_spec(cfg):
+    s = {
+        "embed": embed_spec(cfg),
+        "ln_f": norm_spec(cfg),
+        "mamba": stack_specs({"ln": norm_spec(cfg), "ssm": ssm_mod.mamba2_spec(cfg)}, cfg.n_layers),
+    }
+    if cfg.shared_attn_every:
+        s["shared"] = {
+            "in_proj": P((2 * cfg.d_model, cfg.d_model), ("ffn", "embed")),
+            "block": block_spec(cfg, moe=False),
+        }
+    return s
+
+
+def _hybrid_forward(params, tokens, cfg, extra=None):
+    x0 = embed_apply(params["embed"], tokens, cfg)
+    x = x0
+    k = cfg.shared_attn_every
+    n_inv = _z_invocations(cfg)
+    li = 0
+    for seg in range(n_inv + 1):
+        count = min(k, cfg.n_layers - li) if k else cfg.n_layers
+        if count > 0:
+            lp = _slice_stack(params["mamba"], li, count)
+            x = _scan_stack(
+                lp, x, cfg,
+                lambda p, h: h + ssm_mod.mamba2_train(p["ssm"], norm_apply(p["ln"], h, cfg), cfg),
+            )
+            li += count
+        if k and seg < n_inv:
+            # zamba2: the SHARED transformer block sees [hidden ‖ embeddings]
+            sp = params["shared"]
+            inp = jnp.concatenate([x, x0], axis=-1)
+            h = jnp.einsum("bte,ed->btd", inp, sp["in_proj"].astype(cdt(cfg)))
+            x = x + block_apply(sp["block"], h, cfg, moe=False)
+    x = norm_apply(params["ln_f"], x, cfg)
+    return unembed_apply(params["embed"], x, cfg)
+
+
+def _hybrid_cache_spec(cfg, batch, s_max):
+    c = {"mamba": ssm_mod.ssm_cache_spec(cfg, batch, layers=cfg.n_layers)}
+    n_inv = _z_invocations(cfg)
+    if n_inv:
+        c["shared"] = attn.gqa_cache_spec(cfg, batch, s_max, layers=n_inv)
+    return c
+
+
+def _hybrid_decode(params, cache, tokens, pos, cfg):
+    x0 = embed_apply(params["embed"], tokens[:, None], cfg)
+    x = x0
+    k = cfg.shared_attn_every
+    n_inv = _z_invocations(cfg)
+    li = 0
+    new_shared = []
+    new_mamba = []
+    for seg in range(n_inv + 1):
+        count = min(k, cfg.n_layers - li) if k else cfg.n_layers
+        if count > 0:
+            lp = _slice_stack(params["mamba"], li, count)
+            lc = jax.tree.map(lambda a: a[li : li + count], cache["mamba"])
+
+            def body(p, h, c, q):
+                y, nc = ssm_mod.mamba2_decode(p["ssm"], norm_apply(p["ln"], h, cfg), cfg, c)
+                return h + y, nc
+
+            x, ncs = _scan_stack_cache(lp, lc, x, cfg, body, pos)
+            new_mamba.append(ncs)
+            li += count
+        if k and seg < n_inv:
+            sp = params["shared"]
+            lc = jax.tree.map(lambda a: a[seg], cache["shared"])
+            inp = jnp.concatenate([x, x0], axis=-1)
+            h = jnp.einsum("bte,ed->btd", inp, sp["in_proj"].astype(cdt(cfg)))
+            y, nc = block_decode(sp["block"], h, cfg, lc, pos, moe=False)
+            x = x + y
+            new_shared.append(nc)
+    x = norm_apply(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg)
+    out = {"mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_mamba)}
+    if new_shared:
+        out["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_shared)
+    return logits[:, 0], out
+
+
+# ---------------------------------------------------------------------------
+# family: audio (whisper enc-dec; conv frontend is a stub per assignment)
+# ---------------------------------------------------------------------------
+
+
+def _audio_spec(cfg):
+    enc_block = {
+        "ln1": norm_spec(cfg),
+        "attn": attn.gqa_spec(cfg),
+        "ln2": norm_spec(cfg),
+        "mlp": mlp_spec(cfg),
+    }
+    dec_block = {
+        "ln1": norm_spec(cfg),
+        "attn": attn.gqa_spec(cfg),
+        "lnx": norm_spec(cfg),
+        "cross": attn.cross_spec(cfg),
+        "ln2": norm_spec(cfg),
+        "mlp": mlp_spec(cfg),
+    }
+    return {
+        "embed": embed_spec(cfg),
+        "enc_layers": stack_specs(enc_block, cfg.enc_layers),
+        "dec_layers": stack_specs(dec_block, cfg.n_layers),
+        "enc_ln": norm_spec(cfg),
+        "ln_f": norm_spec(cfg),
+    }
+
+
+def _audio_encode(params, frames, cfg):
+    """frames: (B, T_enc, d) — precomputed conv-frontend embeddings (stub)."""
+    pe = jnp.asarray(sinusoidal_positions(frames.shape[1], cfg.d_model))
+    x = frames.astype(cdt(cfg)) + pe[None].astype(cdt(cfg))
+
+    def body(p, h):
+        a = attn.gqa_train(p["attn"], norm_apply(p["ln1"], h, cfg), cfg, causal=False)
+        h = h + a
+        m = mlp_apply(p["mlp"], norm_apply(p["ln2"], h, cfg), cfg)
+        return h + m
+
+    x = _scan_stack(params["enc_layers"], x, cfg, body)
+    return norm_apply(params["enc_ln"], x, cfg)
+
+
+def _audio_forward(params, tokens, cfg, extra=None):
+    enc = _audio_encode(params, extra["frames"], cfg)
+    pe = jnp.asarray(sinusoidal_positions(tokens.shape[1], cfg.d_model))
+    x = embed_apply(params["embed"], tokens, cfg) + pe[None].astype(cdt(cfg))
+
+    def body(p, h):
+        h = h + attn.gqa_train(p["attn"], norm_apply(p["ln1"], h, cfg), cfg)
+        h = h + attn.cross_apply(p["cross"], norm_apply(p["lnx"], h, cfg), enc, cfg)
+        h = h + mlp_apply(p["mlp"], norm_apply(p["ln2"], h, cfg), cfg)
+        return h
+
+    x = _scan_stack(params["dec_layers"], x, cfg, body)
+    x = norm_apply(params["ln_f"], x, cfg)
+    return unembed_apply(params["embed"], x, cfg)
+
+
+def _audio_cache_spec(cfg, batch, s_max):
+    return {
+        "self": attn.gqa_cache_spec(cfg, batch, s_max, layers=cfg.n_layers),
+        "enc_out": jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+        ),
+    }
+
+
+def _audio_decode(params, cache, tokens, pos, cfg):
+    enc = cache["enc_out"]
+    pe = jnp.asarray(sinusoidal_positions(8192, cfg.d_model))
+    pos_emb = jax.lax.dynamic_slice_in_dim(pe, jnp.minimum(pos, 8191), 1)[None]
+    x = embed_apply(params["embed"], tokens[:, None], cfg) + pos_emb.astype(cdt(cfg))
+
+    def body(p, h, c, q):
+        y, nc = attn.gqa_decode(p["attn"], norm_apply(p["ln1"], h, cfg), cfg, c, q)
+        h = h + y
+        h = h + attn.cross_apply(p["cross"], norm_apply(p["lnx"], h, cfg), enc, cfg)
+        h = h + mlp_apply(p["mlp"], norm_apply(p["ln2"], h, cfg), cfg)
+        return h, nc
+
+    x, new_self = _scan_stack_cache(params["dec_layers"], cache["self"], x, cfg, body, pos)
+    x = norm_apply(params["ln_f"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits[:, 0], {"self": new_self, "enc_out": enc}
+
+
+# ---------------------------------------------------------------------------
+# public dispatch
+# ---------------------------------------------------------------------------
+
+_FWD = {
+    "dense": _lm_forward,
+    "moe": _lm_forward,
+    "vlm": _lm_forward,
+    "ssm": _xlstm_forward,
+    "hybrid": _hybrid_forward,
+    "audio": _audio_forward,
+}
+_SPEC = {
+    "dense": _lm_spec,
+    "moe": _lm_spec,
+    "vlm": _lm_spec,
+    "ssm": _xlstm_spec,
+    "hybrid": _hybrid_spec,
+    "audio": _audio_spec,
+}
+_CACHE = {
+    "dense": _lm_cache_spec,
+    "moe": _lm_cache_spec,
+    "vlm": _lm_cache_spec,
+    "ssm": _xlstm_cache_spec,
+    "hybrid": _hybrid_cache_spec,
+    "audio": _audio_cache_spec,
+}
+_DECODE = {
+    "dense": _lm_decode,
+    "moe": _lm_decode,
+    "vlm": _lm_decode,
+    "ssm": _xlstm_decode,
+    "hybrid": _hybrid_decode,
+    "audio": _audio_decode,
+}
+
+
+def model_spec(cfg: ModelConfig):
+    return _SPEC[cfg.family](cfg)
+
+
+def forward_train(params, tokens, cfg: ModelConfig, extra=None):
+    return _FWD[cfg.family](params, tokens, cfg, extra)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, s_max: int):
+    return _CACHE[cfg.family](cfg, batch, s_max)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, s_max)
+    )
+
+
+def forward_decode(params, cache, tokens, pos, cfg: ModelConfig):
+    return _DECODE[cfg.family](params, cache, tokens, pos, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token CE.  batch: {tokens (B,S), [frames|vis_embeds]}."""
+    tokens = batch["tokens"]
+    extra = {k: v for k, v in batch.items() if k != "tokens"} or None
+    logits = forward_train(params, tokens, cfg, extra)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, "ppl": jnp.exp(loss)}

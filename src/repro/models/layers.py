@@ -1,0 +1,124 @@
+"""Shared layers: norms, rotary embedding, MLPs, embeddings.
+
+All modules are (spec, apply) pairs over plain dict param trees (see
+models/params.py).  Params are stored fp32 and cast to the compute dtype at
+use (mixed-precision policy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import P
+
+
+def cdt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_spec(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "ln":
+        return {"scale": P((d,), (None,), "ones"), "bias": P((d,), (None,), "zeros")}
+    return {"scale": P((d,), (None,), "ones")}
+
+
+def norm_apply(p, x, cfg):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        var = jnp.mean(xf * xf, -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (..., S, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg, d_in=None, d_ff=None):
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi": P((d_in, d_ff), ("embed", "ffn")),
+            "wg": P((d_in, d_ff), ("embed", "ffn")),
+            "wo": P((d_ff, d_in), ("ffn", "embed")),
+        }
+    return {
+        "wi": P((d_in, d_ff), ("embed", "ffn")),
+        "wo": P((d_ff, d_in), ("ffn", "embed")),
+    }
+
+
+def mlp_apply(p, x, cfg):
+    dt = cdt(cfg)
+    if cfg.act == "swiglu":
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(cfg):
+    s = {"tok": P((cfg.vocab, cfg.d_model), ("vocab", "embed"), "embed")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = P((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return s
+
+
+def embed_apply(p, tokens, cfg):
+    return p["tok"].astype(cdt(cfg))[tokens]
+
+
+def unembed_apply(p, x, cfg):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    # logits in fp32 for a stable softmax/CE
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n, dtype=np.float32)[:, None]
+    dim = np.arange(0, d, 2, dtype=np.float32)[None, :]
+    angle = pos / np.power(10000.0, dim / d)
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return out

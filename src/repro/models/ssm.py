@@ -1,0 +1,191 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode.  Used by zamba2 (hybrid).
+
+The SSD form: per head h with state N and head dim P,
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t        (state (N, P))
+    y_t = C_t · h_t + D · x_t
+computed chunkwise: intra-chunk (quadratic in chunk len, MXU-friendly) +
+inter-chunk state carry via lax.scan — the standard TPU-native schedule
+(sequential scan over 4k steps would underuse the MXU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cdt
+from repro.models.params import P
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array  # (B, H, N, P) state
+    conv: jax.Array  # (B, K-1, conv_dim) conv tail
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_headdim
+    return d_in, heads
+
+
+def mamba2_spec(cfg):
+    d = cfg.d_model
+    d_in, heads = _dims(cfg)
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n
+    return {
+        "in_proj": P((d, 2 * d_in + 2 * n + heads), ("embed", "ffn")),
+        "conv_w": P((cfg.ssm_conv, conv_dim), (None, "conv")),
+        "conv_b": P((conv_dim,), ("conv",), "zeros"),
+        "A_log": P((heads,), (None,), "zeros"),
+        "dt_bias": P((heads,), (None,), "zeros"),
+        "D": P((heads,), (None,), "ones"),
+        "norm_w": P((d_in,), ("ffn",), "ones"),
+        "out_proj": P((d_in, d), ("ffn", "embed")),
+    }
+
+
+def _split_proj(z, cfg):
+    d_in, heads = _dims(cfg)
+    n = cfg.ssm_state
+    zx, xbc, dt = jnp.split(z, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return zx, xbc, dt  # gate (d_in) | conv-input (d_in + 2N) | dt (heads)
+
+
+def _causal_conv(xbc, w, b, cfg, tail=None):
+    """Depthwise causal conv1d (kernel K).  tail: (B, K-1, C) history for
+    decode; returns (out, new_tail)."""
+    k = cfg.ssm_conv
+    pad = tail if tail is not None else jnp.zeros(
+        (xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype
+    )
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, K-1+T, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    out = jax.nn.silu(out + b[None, None, :])
+    new_tail = xp[:, -(k - 1) :, :]
+    return out, new_tail
+
+
+def _segsum(log_a):
+    """(..., T) → (..., T, T) lower-triangular cumulative log-decay."""
+    t = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_train(p, x, cfg):
+    """x: (B, T, d) → (B, T, d) via chunked SSD."""
+    dt_ = cdt(cfg)
+    b, t, d = x.shape
+    d_in, heads = _dims(cfg)
+    n, hp = cfg.ssm_state, cfg.ssm_headdim
+    cs = min(cfg.ssm_chunk, t)
+    assert t % cs == 0, f"seq {t} % chunk {cs} != 0"
+    nc = t // cs
+
+    z = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(dt_))
+    gate, xbc, dtp = _split_proj(z, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), cfg)
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xh = xs.reshape(b, t, heads, hp)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"][None, None])  # (B,T,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    da = dt * a[None, None]  # (B,T,H) log-decay
+    # chunk
+    dac = da.reshape(b, nc, cs, heads).transpose(0, 3, 1, 2)  # (B,H,nc,cs)
+    xc = xh.reshape(b, nc, cs, heads, hp)
+    bc = bmat.reshape(b, nc, cs, n)
+    cc = cmat.reshape(b, nc, cs, n)
+    dtc = dt.reshape(b, nc, cs, heads)
+
+    # --- intra-chunk (diagonal) term
+    l = jnp.exp(_segsum(dac))  # (B,H,nc,cs,cs)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+    att = scores[:, None] * l.transpose(0, 1, 2, 3, 4)  # (B,H,nc,cs,cs)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # (B,nc,cs,H,P)
+    y_diag = jnp.einsum("bhcij,bcjhp->bcihp", att, xdt)
+
+    # --- chunk states + inter-chunk recurrence
+    # state_c = sum_i exp(sum_{j>i} da_j) * dt_i * B_i ⊗ x_i
+    cum = jnp.cumsum(dac, axis=-1)
+    decay_rest = jnp.exp(cum[..., -1:] - cum)  # (B,H,nc,cs): exp(sum_{j>i} da_j)
+    states = jnp.einsum(
+        "bhci,bcin,bcihp->bchnp", decay_rest, bc.astype(jnp.float32), xdt
+    )  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,H,nc)
+
+    def scan_fn(h, inp):
+        st, dec = inp  # st (B,H,N,P), dec (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    sts = states.transpose(1, 0, 2, 3, 4)  # (nc,B,H,N,P)
+    decs = chunk_decay.transpose(2, 0, 1)  # (nc,B,H)
+    h0 = jnp.zeros((b, heads, n, hp), jnp.float32)
+    _, h_prev = jax.lax.scan(scan_fn, h0, (sts, decs))  # h before each chunk
+
+    # --- inter-chunk output: y_off_i = C_i · exp(cum_i) · h_prev
+    decay_in = jnp.exp(cum)  # (B,H,nc,cs) decay from chunk start through i
+    y_off = jnp.einsum(
+        "bcin,bhci,cbhnp->bcihp", cc.astype(jnp.float32), decay_in, h_prev
+    )
+
+    y = (y_diag + y_off).reshape(b, t, heads, hp)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, t, d_in).astype(dt_)
+    # gated RMS norm (Mamba2)
+    y = y * jax.nn.silu(gate)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * p["norm_w"]).astype(dt_)
+    return jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt_))
+
+
+def mamba2_decode(p, x, cfg, cache: SSMCache):
+    """Single-token step.  x: (B, 1, d)."""
+    dt_ = cdt(cfg)
+    b = x.shape[0]
+    d_in, heads = _dims(cfg)
+    n, hp = cfg.ssm_state, cfg.ssm_headdim
+
+    z = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(dt_))
+    gate, xbc, dtp = _split_proj(z, cfg)
+    xbc, conv_tail = _causal_conv(
+        xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), cfg, tail=cache.conv
+    )
+    xs, bmat, cmat = jnp.split(xbc[:, 0], [d_in, d_in + n], axis=-1)
+    xh = xs.reshape(b, heads, hp)
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"][None])  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a[None])  # (B,H)
+    h = cache.h * dec[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", bmat.astype(jnp.float32), xh.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), h)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, d_in).astype(dt_)
+    y = y * jax.nn.silu(gate[:, 0])
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * p["norm_w"]).astype(dt_)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(dt_))
+    return out[:, None, :], SSMCache(h=h, conv=conv_tail)
+
+
+def ssm_cache_spec(cfg, batch, layers=None):
+    d_in, heads = _dims(cfg)
+    n, hp = cfg.ssm_state, cfg.ssm_headdim
+    conv_dim = d_in + 2 * n
+    hshape = (batch, heads, n, hp)
+    cshape = (batch, cfg.ssm_conv - 1, conv_dim)
+    if layers:
+        hshape = (layers,) + hshape
+        cshape = (layers,) + cshape
+    return SSMCache(
+        h=jax.ShapeDtypeStruct(hshape, jnp.float32),
+        conv=jax.ShapeDtypeStruct(cshape, jnp.dtype(cfg.dtype)),
+    )

@@ -1,0 +1,308 @@
+"""xLSTM blocks (mLSTM matrix-memory + sLSTM scalar-memory), per
+arXiv:2405.04517, with the stabilized exponential gating.
+
+mLSTM recurrence (per head, head dim P):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)                       (stabilizer)
+    i'  = exp(ĩ_t − m_t);  f' = exp(f̃_t + m_{t-1} − m_t)
+    C_t = f'·C_{t-1} + i'·(v_t ⊗ k_t)                    (P×P matrix memory)
+    n_t = f'·n_{t-1} + i'·k_t
+    h_t = (C_t q_t) / max(|n_tᵀ q_t|, 1)
+
+Sequence mixing is a `lax.scan` over time (the recurrence is not
+associative in stabilized form); decode is the same step with carried
+(C, n, m) state — O(1) per token, which is why xlstm runs the long_500k
+cell (DESIGN.md §5)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cdt
+from repro.models.params import P
+
+
+class XLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, P, P)
+    n: jax.Array  # (B, H, P)
+    m: jax.Array  # (B, H)
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, P)
+    n: jax.Array  # (B, H, P)
+    h: jax.Array  # (B, H, P)
+    m: jax.Array  # (B, H)
+
+
+def _dims(cfg):
+    heads = cfg.n_heads
+    d_head = cfg.d_model // heads
+    return heads, d_head
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg):
+    d = cfg.d_model
+    h, p_ = _dims(cfg)
+    return {
+        "wq": P((d, h, p_), ("embed", "heads", None)),
+        "wk": P((d, h, p_), ("embed", "heads", None)),
+        "wv": P((d, h, p_), ("embed", "heads", None)),
+        "wi": P((d, h), ("embed", "heads")),  # input gate pre-act
+        "wf": P((d, h), ("embed", "heads")),  # forget gate pre-act
+        "bi": P((h,), ("heads",), "zeros"),
+        "bf": P((h,), ("heads",), "ones"),  # bias toward remembering
+        "wo_gate": P((d, d), ("embed", "ffn")),
+        "wo": P((h, p_, d), ("heads", None, "embed")),
+    }
+
+
+def _mlstm_gates(p, x, cfg):
+    dt = cdt(cfg)
+    q = jnp.einsum("btd,dhp->bthp", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhp->bthp", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhp->bthp", x, p["wv"].astype(dt))
+    ig = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wi"]) + p["bi"]
+    fg = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wf"]) + p["bf"]
+    return q, k, v, ig, fg
+
+
+def _mlstm_step(state, inp, d_head):
+    c, n, m = state  # (B,H,P,P), (B,H,P), (B,H)
+    q, k, v, ig, fg = inp  # q/k/v (B,H,P); gates (B,H)
+    k = k / (d_head**0.5)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    qf, kf, vf = (z.astype(jnp.float32) for z in (q, k, v))
+    c_new = f_p[..., None, None] * c + i_p[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :]
+    )
+    n_new = f_p[..., None] * n + i_p[..., None] * kf
+    num = jnp.einsum("bhij,bhj->bhi", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, qf)), 1.0)
+    h = num / den[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def mlstm_train(p, x, cfg):
+    dt = cdt(cfg)
+    b, t, d = x.shape
+    heads, d_head = _dims(cfg)
+    q, k, v, ig, fg = _mlstm_gates(p, x, cfg)
+    c0 = jnp.zeros((b, heads, d_head, d_head), jnp.float32)
+    n0 = jnp.zeros((b, heads, d_head), jnp.float32)
+    m0 = jnp.full((b, heads), -1e30, jnp.float32)
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        ig.transpose(1, 0, 2),
+        fg.transpose(1, 0, 2),
+    )
+    _, hs = jax.lax.scan(
+        lambda s, i: _mlstm_step(s, i, d_head), (c0, n0, m0), xs
+    )  # (T,B,H,P)
+    h = hs.transpose(1, 0, 2, 3).astype(dt)
+    gate = jax.nn.silu(jnp.einsum("btd,de->bte", x, p["wo_gate"].astype(dt)))
+    y = jnp.einsum("bthp,hpd->btd", h, p["wo"].astype(dt))
+    return y * gate
+
+
+def mlstm_decode(p, x, cfg, cache: XLSTMCache):
+    dt = cdt(cfg)
+    heads, d_head = _dims(cfg)
+    q, k, v, ig, fg = _mlstm_gates(p, x, cfg)
+    state = (cache.c, cache.n, cache.m)
+    state, h = _mlstm_step(
+        state, (q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0]), d_head
+    )
+    gate = jax.nn.silu(jnp.einsum("btd,de->bte", x, p["wo_gate"].astype(dt)))
+    y = jnp.einsum("bhp,hpd->bd", h.astype(dt), p["wo"].astype(dt))[:, None, :]
+    return y * gate, XLSTMCache(*state)
+
+
+def mlstm_cache_spec(cfg, batch, layers=None):
+    heads, d_head = _dims(cfg)
+    shp = lambda *s: (layers,) + s if layers else s
+    return XLSTMCache(
+        c=jax.ShapeDtypeStruct(shp(batch, heads, d_head, d_head), jnp.float32),
+        n=jax.ShapeDtypeStruct(shp(batch, heads, d_head), jnp.float32),
+        m=jax.ShapeDtypeStruct(shp(batch, heads), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg):
+    d = cfg.d_model
+    h, p_ = _dims(cfg)
+    return {
+        "wx": P((d, 4, h, p_), ("embed", None, "heads", None)),  # i,f,z,o from x
+        "wr": P((4, h, p_, p_), (None, "heads", None, None)),  # recurrent (block-diag per head)
+        "b": P((4, h, p_), (None, "heads", None), "zeros"),
+        "wo": P((h, p_, d), ("heads", None, "embed")),
+    }
+
+
+def _slstm_step(p, state, xt):
+    c, n, h, m = state  # (B,H,P) ×3, (B,H)
+    pre = xt + jnp.einsum("ghpq,bhq->bghp", p["wr"], h).reshape(xt.shape)  # (B,4,H,P) flat
+    pre = pre + p["b"][None]
+    ig, fg, zg, og = (pre[:, j] for j in range(4))  # (B,H,P)
+    # per-head stabilizer uses the mean pre-activation across the head dim
+    ig_s = jnp.mean(ig, -1)
+    fg_s = jnp.mean(fg, -1)
+    logf = jax.nn.log_sigmoid(fg_s)
+    m_new = jnp.maximum(logf + m, ig_s)
+    i_p = jnp.exp(ig - m_new[..., None])
+    f_p = jnp.exp(logf[..., None] + (m - m_new)[..., None])
+    c_new = f_p * c + i_p * jnp.tanh(zg)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_train(p, x, cfg):
+    dt = cdt(cfg)
+    b, t, d = x.shape
+    heads, d_head = _dims(cfg)
+    xg = jnp.einsum(
+        "btd,dghp->btghp", x.astype(jnp.float32), p["wx"]
+    )  # (B,T,4,H,P)
+
+    def step(state, xt):
+        s = _slstm_step(p, state, xt)
+        return s, s[2]
+
+    z = jnp.zeros((b, heads, d_head), jnp.float32)
+    m0 = jnp.full((b, heads), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (z, z, z, m0), xg.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3).astype(dt)  # (B,T,H,P)
+    return jnp.einsum("bthp,hpd->btd", h, p["wo"].astype(dt))
+
+
+def slstm_decode(p, x, cfg, cache: SLSTMCache):
+    dt = cdt(cfg)
+    xg = jnp.einsum("btd,dghp->btghp", x.astype(jnp.float32), p["wx"])[:, 0]
+    state = _slstm_step(p, (cache.c, cache.n, cache.h, cache.m), xg)
+    y = jnp.einsum("bhp,hpd->bd", state[2].astype(dt), p["wo"].astype(dt))
+    return y[:, None, :], SLSTMCache(*state)
+
+
+def slstm_cache_spec(cfg, batch, layers=None):
+    heads, d_head = _dims(cfg)
+    shp = lambda *s: (layers,) + s if layers else s
+    z = lambda *s: jax.ShapeDtypeStruct(shp(*s), jnp.float32)
+    return SLSTMCache(
+        c=z(batch, heads, d_head),
+        n=z(batch, heads, d_head),
+        h=z(batch, heads, d_head),
+        m=z(batch, heads),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise mLSTM (beyond-paper §Perf optimization; exact vs the scan form)
+# ---------------------------------------------------------------------------
+#
+# The sequential scan streams the (P×P) matrix memory through HBM every
+# timestep: traffic ∝ T·B·H·P².  The chunkwise form (mlstm_kernels lineage,
+# same algebra as GLA/SSD chunking but with the max-stabilizer carried
+# across chunks) computes, per chunk of length L:
+#
+#   intra-chunk: D_ij = exp(b_i − b_j + ĩ_j − m_loc_i) for j ≤ i
+#                (b = cumulative log-forget within the chunk)
+#   inter-chunk: contribution of the carried state C_prev decayed by
+#                exp(b_i + m_prev − m_i)
+#   carry:       C_new = exp(b_L + m_prev − m_new)·C_prev
+#                        + Σ_j exp(b_L − b_j + ĩ_j − m_new)·v_j k_jᵀ
+#
+# State traffic drops by the chunk length (T/L scan steps instead of T),
+# and the intra-chunk math is MXU matmuls instead of outer products.
+
+
+def _mlstm_chunk_scan(q, k, v, ig, fg, d_head: int, chunk: int):
+    """q/k/v: (B,T,H,P) f32; gates (B,T,H) f32.  Returns h (B,T,H,P)."""
+    b, t, h, p_ = q.shape
+    nc = t // chunk
+    k = k / (d_head**0.5)
+
+    logf = jax.nn.log_sigmoid(fg)  # (B,T,H)
+    cq = lambda x: x.reshape(b, nc, chunk, h, p_)
+    qc, kc, vc = cq(q), cq(k), cq(v)
+    igc = ig.reshape(b, nc, chunk, h)
+    lfc = logf.reshape(b, nc, chunk, h)
+    bcum = jnp.cumsum(lfc, axis=2)  # (B,nc,L,H) cumulative log-forget (incl. self)
+
+    # local running max for the stabilizer within the chunk:
+    #   m_loc_i = max_{j≤i} (b_i − b_j + ĩ_j)   (candidate from inputs)
+    a_j = igc - bcum  # ĩ_j − b_j
+    m_in = jax.lax.cummax(a_j, axis=2) + bcum  # (B,nc,L,H)
+
+    def scan_fn(carry, xs):
+        c_prev, n_prev, m_prev = carry  # (B,H,P,P),(B,H,P),(B,H)
+        qx, kx, vx, bx, ax, igx, m_inx = xs
+        # xs shapes: (B,L,H,P) ×3, (B,L,H) b-cum, a_j, ig, m_in
+        # stabilizer: m_i = max(m_prev + b_i, m_in_i)
+        m_i = jnp.maximum(m_prev[:, None] + bx, m_inx)  # (B,L,H)
+        # inter-chunk: h_inter_i = (C_prev q_i)·exp(b_i + m_prev − m_i)
+        dec_in = jnp.exp(bx + m_prev[:, None] - m_i)  # (B,L,H)
+        h_inter = jnp.einsum("bhij,blhj->blhi", c_prev, qx) * dec_in[..., None]
+        n_inter = jnp.einsum("bhj,blhj->blh", n_prev, qx) * dec_in
+        # intra-chunk: D_ij = exp(b_i − b_j + ĩ_j − m_i), j ≤ i
+        dmat = bx[:, :, None] - bx[:, None, :] + igx[:, None, :] - m_i[:, :, None]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], jnp.exp(dmat), 0.0)  # (B,L,L,H)
+        scores = jnp.einsum("blhp,bjhp->bljh", qx, kx) * dmat
+        h_intra = jnp.einsum("bljh,bjhp->blhp", scores, vx)
+        n_intra = jnp.einsum("bljh->blh", scores * 1.0)  # Σ_j score_ij (k·q already in scores)
+        num = h_inter + h_intra  # (B,L,H,P)
+        den = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)
+        hs = num / den[..., None]
+        # carry to next chunk
+        b_l = bx[:, -1]  # (B,H) total log-forget of the chunk
+        m_cand = jnp.max(igx - bx, axis=1) + b_l  # max_j (ĩ_j − b_j) + b_L
+        m_new = jnp.maximum(m_prev + b_l, m_cand)
+        dec_c = jnp.exp(m_prev + b_l - m_new)  # (B,H)
+        w_j = jnp.exp((b_l[:, None] - bx) + igx - m_new[:, None])  # (B,L,H)
+        c_upd = jnp.einsum("blh,blhp,blhq->bhpq", w_j, vx, kx)
+        n_upd = jnp.einsum("blh,blhp->bhp", w_j, kx)
+        c_new = c_prev * dec_c[..., None, None] + c_upd
+        n_new = n_prev * dec_c[..., None] + n_upd
+        return (c_new, n_new, m_new), hs
+
+    tr = lambda x: jnp.moveaxis(x, 1, 0)  # (nc, B, L, ...)
+    xs = (tr(qc), tr(kc), tr(vc), tr(bcum), tr(a_j), tr(igc), tr(m_in))
+    c0 = jnp.zeros((b, h, p_, p_), jnp.float32)
+    n0 = jnp.zeros((b, h, p_), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(scan_fn, (c0, n0, m0), xs)  # (nc,B,L,H,P)
+    return jnp.moveaxis(hs, 0, 1).reshape(b, t, h, p_)
+
+
+def mlstm_train_chunked(p, x, cfg, chunk: int = 64):
+    """Chunkwise-parallel mLSTM block (output-equivalent to mlstm_train)."""
+    dt = cdt(cfg)
+    b, t, d = x.shape
+    heads, d_head = _dims(cfg)
+    chunk = min(chunk, t)
+    q, k, v, ig, fg = _mlstm_gates(p, x, cfg)
+    # gates/q/k/v come out (B,T,H,*) from einsums already
+    h = _mlstm_chunk_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        ig, fg, d_head, chunk,
+    ).astype(dt)
+    gate = jax.nn.silu(jnp.einsum("btd,de->bte", x, p["wo_gate"].astype(dt)))
+    y = jnp.einsum("bthp,hpd->btd", h, p["wo"].astype(dt))
+    return y * gate

@@ -1,0 +1,18 @@
+from repro.optim.adamw import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import constant_lr, warmup_cosine
+from repro.optim.sparse import embed_elim_update
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "warmup_cosine",
+    "constant_lr",
+    "embed_elim_update",
+]

@@ -1,0 +1,70 @@
+"""AdamW with fully sharded optimizer state.
+
+State mirrors the parameter pytree, so the same NamedShardings as params
+apply to m/v — optimizer state is automatically ZeRO-sharded wherever the
+parameter rules shard (models/params.py).  Decay masking follows the usual
+convention (no decay on 1-D tensors: norms, biases)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> OptState:
+    z = lambda p: jnp.zeros_like(p, jnp.float32)
+    return OptState(
+        m=jax.tree.map(z, params),
+        v=jax.tree.map(z, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**cf
+    bc2 = 1.0 - b2**cf
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and p.ndim >= 2:  # no decay on norms/biases (1-D)
+            step = step + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3 and not hasattr(t, "_fields")
+    params_new = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return params_new, OptState(m=m_new, v=v_new, count=count)

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure fns of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak=3e-4, warmup=100, total=10000, floor=0.1):
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant_lr(step, *, peak=3e-4, **_):
+    return jnp.full_like(step, peak, dtype=jnp.float32)

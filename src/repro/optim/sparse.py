@@ -1,0 +1,63 @@
+"""EmbedElim: publishing elimination applied to sparse embedding updates.
+
+Zipfian token frequency makes embedding-row gradient updates a skewed
+update-heavy dictionary workload — the paper's target profile.  In the OCC
+analog every (token, grad) pair scatters its own row update (duplicate rows
+rewritten k times); elimination combines duplicates first, so each hot row
+is written once per batch.  On TPU the combine is a sort + segment-sum —
+the same key-sorted segmented structure as core/elimination.py (and the
+elim_combine kernel), with "insert(v)" generalized to "accumulate(v)".
+
+`embed_elim_update` returns the updated table plus write statistics so
+benchmarks can report the physical-write collapse (benchmarks/embed_elim).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparseUpdateStats(NamedTuple):
+    writes_occ: jax.Array  # rows written without elimination (= #tokens)
+    writes_elim: jax.Array  # rows written with elimination (= #unique)
+    eliminated: jax.Array
+
+
+def embed_elim_update(
+    table: jax.Array,  # (V, D)
+    token_ids: jax.Array,  # (T,)
+    row_grads: jax.Array,  # (T, D)
+    lr: float | jax.Array,
+):
+    """Combine duplicate-row grads (sort + segment-sum) then scatter once
+    per unique row."""
+    t = token_ids.shape[0]
+    order = jnp.argsort(token_ids, stable=True)
+    ids_s = token_ids[order]
+    grads_s = row_grads[order]
+    seg_head = jnp.concatenate([jnp.ones((1,), bool), ids_s[1:] != ids_s[:-1]])
+    seg_id = jnp.cumsum(seg_head.astype(jnp.int32)) - 1
+    combined = jax.ops.segment_sum(grads_s, seg_id, num_segments=t)  # (T, D) padded
+    # row id per segment (all elements of a segment share it); segments
+    # beyond n_unique keep the sentinel row V (dropped below).
+    sentinel = jnp.asarray(table.shape[0], ids_s.dtype)
+    seg_rows = jnp.full((t,), sentinel).at[seg_id].min(ids_s)
+
+    padded = jnp.concatenate([table, jnp.zeros((1, table.shape[1]), table.dtype)])
+    new = padded.at[seg_rows].add((-lr * combined).astype(table.dtype))[:-1]
+
+    n_unique = jnp.sum(seg_head.astype(jnp.int32))
+    stats = SparseUpdateStats(
+        writes_occ=jnp.asarray(t, jnp.int32),
+        writes_elim=n_unique.astype(jnp.int32),
+        eliminated=(t - n_unique).astype(jnp.int32),
+    )
+    return new, stats
+
+
+def embed_occ_update(table, token_ids, row_grads, lr):
+    """OCC analog: scatter every pair individually (duplicate rows written
+    multiple times).  Numerically identical; physically k× the writes."""
+    return table.at[token_ids].add((-lr * row_grads).astype(table.dtype))

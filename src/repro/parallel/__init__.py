@@ -1,0 +1,21 @@
+from repro.parallel.sharding import (
+    batch_pspecs,
+    batch_shardings,
+    cache_pspecs,
+    cache_shardings,
+)
+from repro.parallel.compress import (
+    dequantize_int8,
+    quantize_int8,
+    compressed_grad_reduce,
+)
+
+__all__ = [
+    "batch_pspecs",
+    "batch_shardings",
+    "cache_pspecs",
+    "cache_shardings",
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_grad_reduce",
+]

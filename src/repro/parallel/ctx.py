@@ -1,0 +1,46 @@
+"""Ambient-mesh sharding constraints usable from deep inside model code.
+
+`constrain(x, axes...)` resolves axis names against the mesh active in the
+enclosing `with mesh:` context: missing axes and non-dividing dims degrade
+to replication, and with no mesh at all it is the identity — model code
+stays runnable in 1-device tests and host-mesh smoke runs."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import PartitionSpec
+
+
+def _ambient_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:  # noqa: BLE001
+        pass
+    return None
+
+
+def constrain(x, *axes):
+    """axes: one entry per dim — None | axis name | tuple of candidate axis
+    names (filtered to those present; dropped unless they divide the dim)."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    fixed = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            fixed.append(None)
+            continue
+        cand = ax if isinstance(ax, tuple) else (ax,)
+        sel = tuple(a for a in cand if a in names)
+        size = int(np.prod([mesh.shape[a] for a in sel])) if sel else 1
+        fixed.append(sel if sel and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*fixed))
+
+
+DATA_AXES = ("pod", "data")

@@ -1,0 +1,4 @@
+from repro.serve.pages import PagedKVCache, PrefixIndex
+from repro.serve.engine import ServeEngine, Request
+
+__all__ = ["PagedKVCache", "PrefixIndex", "ServeEngine", "Request"]

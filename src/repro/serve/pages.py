@@ -1,0 +1,108 @@
+"""Paged KV-cache management with the Elim-ABtree as the prefix/session
+index — the paper's data structure doing its production job.
+
+The block manager is host-side control logic (as in vLLM); device memory
+holds the page pool.  Two index workloads hit the tree:
+
+  * **prefix cache**: hash-chain of token blocks → page id.  Skewed (hot
+    system prompts dominate) and update-heavy under churn: the elimination
+    path collapses repeated insert/delete of hot prefixes.
+  * **session index**: request/session id → page-table id, constant churn
+    at request granularity.
+
+Both run as batched rounds (one round per scheduler tick), which is exactly
+the tree's batch-concurrent API.  The durable variant journals the index so
+a restarted engine recovers its prefix cache (warm restart).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.abtree import ABTree, OP_DELETE, OP_FIND, OP_INSERT, TreeConfig
+
+PAGE = 256  # tokens per KV page
+
+
+def _hash_chain(prev: int, block_tokens: Tuple[int, ...]) -> int:
+    h = hashlib.blake2b(digest_size=8)
+    h.update(prev.to_bytes(8, "little", signed=False))
+    h.update(np.asarray(block_tokens, np.int32).tobytes())
+    # keep positive and below the tree's EMPTY sentinel
+    return int.from_bytes(h.digest(), "little") >> 1
+
+
+class PagedKVCache:
+    """Fixed pool of KV pages + free list + per-request page tables."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.free: List[int] = list(range(n_pages))
+        self.page_tables: Dict[int, List[int]] = {}
+        self.ref: np.ndarray = np.zeros(n_pages, np.int32)  # prefix sharing
+
+    def alloc(self, rid: int, n: int) -> Optional[List[int]]:
+        if len(self.free) < n:
+            return None
+        pages = [self.free.pop() for _ in range(n)]
+        for p in pages:
+            self.ref[p] += 1
+        self.page_tables.setdefault(rid, []).extend(pages)
+        return pages
+
+    def share(self, rid: int, pages: List[int]):
+        for p in pages:
+            self.ref[p] += 1
+        self.page_tables.setdefault(rid, []).extend(pages)
+
+    def release(self, rid: int):
+        for p in self.page_tables.pop(rid, []):
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self.free.append(p)
+
+    @property
+    def used(self) -> int:
+        return self.n_pages - len(self.free)
+
+
+class PrefixIndex:
+    """Prefix-block hash → page id, on the Elim-ABtree."""
+
+    def __init__(self, mode: str = "elim", capacity: int = 1 << 14):
+        self.tree = ABTree(TreeConfig(capacity=capacity, b=8, a=2), mode=mode)
+
+    def lookup_batch(self, hashes: List[int]) -> List[Optional[int]]:
+        if not hashes:
+            return []
+        out = self.tree.apply_round(
+            [OP_FIND] * len(hashes), hashes, [0] * len(hashes)
+        )
+        res = np.asarray(out.results)
+        fnd = np.asarray(out.found)
+        return [int(r) if f else None for r, f in zip(res, fnd)]
+
+    def publish_batch(self, hashes: List[int], pages: List[int]):
+        if hashes:
+            self.tree.apply_round([OP_INSERT] * len(hashes), hashes, pages)
+
+    def evict_batch(self, hashes: List[int]):
+        if hashes:
+            self.tree.apply_round([OP_DELETE] * len(hashes), hashes, [0] * len(hashes))
+
+    def stats(self) -> dict:
+        return self.tree.stats()
+
+
+def prefix_hashes(tokens: List[int]) -> List[Tuple[int, Tuple[int, ...]]]:
+    """Hash-chain per full PAGE block of the prompt."""
+    out = []
+    prev = 0
+    for i in range(0, len(tokens) - len(tokens) % PAGE, PAGE):
+        block = tuple(tokens[i : i + PAGE])
+        h = _hash_chain(prev, block)
+        out.append((h, block))
+        prev = h
+    return out

@@ -1,0 +1,10 @@
+from repro.train.step import make_serve_step, make_train_step, make_prefill_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "make_train_step",
+    "make_serve_step",
+    "make_prefill_step",
+    "Trainer",
+    "TrainerConfig",
+]

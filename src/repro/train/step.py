@@ -1,0 +1,160 @@
+"""jit-compiled train / prefill / serve steps with explicit shardings.
+
+These are the functions the multi-pod dry-run lowers for every
+(arch × shape × mesh) cell, and the functions the Trainer executes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models import backbone
+from repro.models.config import ModelConfig
+from repro.models.params import RULE_SETS, param_shardings
+from repro.optim import adamw_update, clip_by_global_norm, warmup_cosine
+from repro.parallel.sharding import batch_shardings, cache_shardings, data_axes
+
+
+class TrainStepOut(NamedTuple):
+    params: Any
+    opt_state: Any
+    metrics: Any
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    lr_peak: float = 3e-4,
+    grad_clip: float = 1.0,
+    microbatch: Optional[int] = None,
+    donate: bool = True,
+):
+    """Returns (step_fn, shardings) where step_fn(params, opt, batch, step)
+    is jit-compiled with explicit in/out shardings.
+
+    `microbatch`: if set, the global batch is split into
+    batch//microbatch accumulation steps (scanned) — activation memory ∝
+    microbatch while keeping the same global batch semantics.
+    """
+    rules = RULE_SETS[cfg.rules]
+    spec_tree = backbone.model_spec(cfg)
+    p_shard = param_shardings(spec_tree, mesh, rules)
+    rep = NamedSharding(mesh, PartitionSpec())
+
+    def loss(params, batch):
+        return backbone.loss_fn(params, batch, cfg)
+
+    def grads_of(params, batch):
+        if microbatch:
+            b = jax.tree.leaves(batch)[0].shape[0]
+            n_acc = max(1, b // microbatch)
+
+            def mb(i):
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * microbatch, microbatch),
+                    batch,
+                )
+
+            def body(carry, i):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, mb(i))
+                g_acc = jax.tree.map(lambda a, b_: a + b_, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, lsum), _ = jax.lax.scan(body, (g0, 0.0), jnp.arange(n_acc))
+            g = jax.tree.map(lambda x: x / n_acc, g)
+            return lsum / n_acc, g
+        (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        return l, g
+
+    def step_fn(params, opt_state, batch, step):
+        l, g = grads_of(params, batch)
+        g, gnorm = clip_by_global_norm(g, grad_clip)
+        lr = warmup_cosine(step, peak=lr_peak)
+        params, opt_state = adamw_update(g, opt_state, params, lr)
+        metrics = {"loss": l, "grad_norm": gnorm, "lr": lr}
+        return TrainStepOut(params, opt_state, metrics)
+
+    def opt_shard(ps):
+        from repro.optim.adamw import OptState
+
+        return OptState(m=ps, v=ps, count=rep)
+
+    def batch_shard(batch_tree):
+        return batch_shardings(cfg, batch_tree, mesh)
+
+    shardings = {
+        "params": p_shard,
+        "opt": opt_shard(p_shard),
+        "replicated": rep,
+        "batch_fn": batch_shard,
+    }
+
+    def jitted(batch_tree):
+        return jax.jit(
+            step_fn,
+            in_shardings=(p_shard, opt_shard(p_shard), batch_shard(batch_tree), rep),
+            out_shardings=TrainStepOut(p_shard, opt_shard(p_shard), rep),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    return jitted, shardings
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    """Inference forward over a full prompt (logits for every position).
+    KV-cache emission is elided in the lowered artifact (roofline notes the
+    additional cache-write bytes separately)."""
+    rules = RULE_SETS[cfg.rules]
+    spec_tree = backbone.model_spec(cfg)
+    p_shard = param_shardings(spec_tree, mesh, rules)
+    rep = NamedSharding(mesh, PartitionSpec())
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        extra = {k: v for k, v in batch.items() if k != "tokens"} or None
+        logits = backbone.forward_train(params, tokens, cfg, extra)
+        # return only the final position (the sampling entry point)
+        return logits[:, -1, :]
+
+    def jitted(batch_tree):
+        out_s = NamedSharding(mesh, PartitionSpec(data_axes(mesh) or None, None))
+        return jax.jit(
+            prefill,
+            in_shardings=(p_shard, batch_shardings(cfg, batch_tree, mesh)),
+            out_shardings=out_s,
+        )
+
+    return jitted, {"params": p_shard}
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, s_max: int):
+    """Single-token decode step over a KV cache of length s_max."""
+    rules = RULE_SETS[cfg.rules]
+    spec_tree = backbone.model_spec(cfg)
+    p_shard = param_shardings(spec_tree, mesh, rules)
+    rep = NamedSharding(mesh, PartitionSpec())
+    c_shard = cache_shardings(cfg, batch, s_max, mesh)
+    da = data_axes(mesh)
+    da_size = 1
+    for a in da:
+        da_size *= mesh.shape[a]
+    tok_s = NamedSharding(mesh, PartitionSpec(da if batch % da_size == 0 else None))
+
+    def serve(params, cache, tokens, pos):
+        logits, cache = backbone.forward_decode(params, cache, tokens, pos, cfg)
+        return logits, cache
+
+    jitted = jax.jit(
+        serve,
+        in_shardings=(p_shard, c_shard, tok_s, rep),
+        out_shardings=(NamedSharding(mesh, PartitionSpec(tok_s.spec[0], None)), c_shard),
+        donate_argnums=(1,),
+    )
+    return jitted, {"params": p_shard, "cache": c_shard}

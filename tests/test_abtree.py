@@ -1,0 +1,231 @@
+"""Correctness tests for the batched OCC/Elim-ABtree against the sequential
+oracle, including hypothesis property tests of the paper's invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ABTree,
+    DictOracle,
+    OP_DELETE,
+    OP_FIND,
+    OP_INSERT,
+    OP_NOP,
+    TreeConfig,
+    check_invariants,
+)
+from repro.core.oracle import tree_contents
+
+SMALL = TreeConfig(capacity=512, b=8, a=2, max_height=12)
+
+
+def _run_rounds(tree, oracle, rounds, check_every=1):
+    for i, (ops, keys, vals) in enumerate(rounds):
+        out = tree.apply_round(ops, keys, vals)
+        exp_res, exp_found = oracle.apply_round(ops, keys, vals)
+        got_res = np.asarray(out.results).tolist()
+        got_found = np.asarray(out.found).tolist()
+        for j, (op, k) in enumerate(zip(ops, keys)):
+            assert got_found[j] == exp_found[j], (
+                f"round {i} op {j} ({op},{k}): found {got_found[j]} != {exp_found[j]}"
+            )
+            if exp_found[j]:
+                assert got_res[j] == exp_res[j], (
+                    f"round {i} op {j} ({op},{k}): val {got_res[j]} != {exp_res[j]}"
+                )
+        if (i + 1) % check_every == 0:
+            check_invariants(tree.state, tree.cfg)
+            assert tree_contents(tree.state, tree.cfg) == oracle.items()
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_single_ops(mode):
+    t = ABTree(SMALL, mode=mode)
+    assert t.insert(5, 50) is None
+    assert t.insert(5, 51) == 50  # insert on present returns existing value
+    assert t.find(5) == 50
+    assert t.delete(5) == 50
+    assert t.find(5) is None
+    assert t.delete(5) is None
+    check_invariants(t.state, t.cfg)
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_sequential_fill_and_drain(mode):
+    t = ABTree(SMALL, mode=mode)
+    o = DictOracle()
+    n = 200
+    rounds = []
+    for k in range(n):
+        rounds.append(([OP_INSERT], [k * 7 % n], [k]))
+    for k in range(n):
+        rounds.append(([OP_DELETE], [k * 3 % n], [0]))
+    _run_rounds(t, o, rounds, check_every=20)
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_batch_round_mixed(mode):
+    rng = np.random.default_rng(0)
+    t = ABTree(SMALL, mode=mode)
+    o = DictOracle()
+    for r in range(30):
+        bsz = 64
+        ops = rng.integers(1, 4, bsz).tolist()
+        keys = rng.integers(0, 40, bsz).tolist()  # heavy duplication
+        vals = rng.integers(0, 1000, bsz).tolist()
+        _run_rounds(t, o, [(ops, keys, vals)], check_every=1)
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_batch_zipf_churn(mode):
+    """The paper's target workload: skewed update-heavy (inserts+deletes of
+    the same hot keys)."""
+    rng = np.random.default_rng(1)
+    t = ABTree(SMALL, mode=mode)
+    o = DictOracle()
+    zipf = np.minimum(rng.zipf(1.5, 2000), 500)
+    i = 0
+    for r in range(25):
+        bsz = 80
+        ops = rng.choice([OP_INSERT, OP_DELETE], bsz).tolist()
+        keys = zipf[i : i + bsz].tolist()
+        i += bsz
+        vals = rng.integers(0, 100, bsz).tolist()
+        _run_rounds(t, o, [(ops, keys, vals)], check_every=5)
+
+
+def test_elimination_reduces_writes():
+    """Core paper claim: under same-key contention, Elim does ~1 write per
+    unique key; OCC does ~1 per op."""
+    cfg = SMALL
+    ops = [OP_INSERT, OP_DELETE] * 32  # 64 ops, all on key 7
+    keys = [7] * 64
+    vals = list(range(64))
+
+    te = ABTree(cfg, mode="elim")
+    te.apply_round(ops, keys, vals)
+    to = ABTree(cfg, mode="occ")
+    to.apply_round(ops, keys, vals)
+
+    se, so = te.stats(), to.stats()
+    assert se["slot_writes"] <= 2  # at most one net insert (2 slot writes)
+    assert so["slot_writes"] >= 60  # every op wrote
+    assert se["eliminated"] >= 60
+    assert so["subrounds"] == 64
+    # both must agree with the oracle
+    o = DictOracle()
+    o.apply_round(ops, keys, vals)
+    assert tree_contents(te.state, te.cfg) == o.items()
+    assert tree_contents(to.state, to.cfg) == o.items()
+
+
+def test_empty_and_nop_round():
+    t = ABTree(SMALL)
+    out = t.apply_round([OP_NOP] * 8, [0] * 8, [0] * 8)
+    assert not np.asarray(out.found).any()
+    check_invariants(t.state, t.cfg)
+
+
+def test_large_batch_single_leaf_overflow():
+    """All inserts land in one leaf → cascading splits in one round."""
+    t = ABTree(SMALL)
+    o = DictOracle()
+    ops = [OP_INSERT] * 128
+    keys = list(range(128))
+    vals = [k * 10 for k in keys]
+    _run_rounds(t, o, [(ops, keys, vals)])
+    # drain to force merges
+    ops = [OP_DELETE] * 128
+    _run_rounds(t, o, [(ops, keys, vals)])
+    assert t.items() == {}
+
+
+def test_pool_growth():
+    t = ABTree(TreeConfig(capacity=64, b=8, a=2, max_height=12))
+    o = DictOracle()
+    ops = [OP_INSERT] * 256
+    keys = list(range(256))
+    vals = keys
+    _run_rounds(t, o, [(ops, keys, vals)])
+    assert t.cfg.capacity > 64
+
+
+def test_elim_record_published():
+    """After a modifying round the leaf's ElimRecord reflects the last
+    modification with an odd version (paper §4.1)."""
+    t = ABTree(SMALL)
+    t.apply_round([OP_INSERT], [42], [4200])
+    s = t.state
+    leaf = int(np.asarray(s.root))  # single-leaf tree
+    assert int(np.asarray(s.rec_key)[leaf]) == 42
+    assert int(np.asarray(s.rec_val)[leaf]) == 4200
+    rec_ver = int(np.asarray(s.rec_ver)[leaf])
+    ver = int(np.asarray(s.ver)[leaf])
+    assert rec_ver % 2 == 1 and rec_ver == ver - 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+op_strategy = st.tuples(
+    st.sampled_from([OP_FIND, OP_INSERT, OP_DELETE]),
+    st.integers(min_value=0, max_value=30),
+    st.integers(min_value=0, max_value=10**6),
+)
+
+
+@settings(
+    max_examples=40,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+@given(
+    rounds=st.lists(st.lists(op_strategy, min_size=1, max_size=48), min_size=1, max_size=6),
+    mode=st.sampled_from(["elim", "occ"]),
+)
+def test_property_oracle_equivalence(rounds, mode):
+    """For any op sequence, batched results == sequential oracle and all of
+    the paper's structural invariants hold after every round."""
+    t = ABTree(TreeConfig(capacity=512, b=8, a=2, max_height=12), mode=mode)
+    o = DictOracle()
+    prepared = []
+    for r in rounds:
+        ops = [x[0] for x in r]
+        keys = [x[1] for x in r]
+        vals = [x[2] for x in r]
+        prepared.append((ops, keys, vals))
+    _run_rounds(t, o, prepared, check_every=1)
+
+
+@settings(max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    keys=st.lists(st.integers(min_value=0, max_value=10**9), min_size=1, max_size=200, unique=True),
+    b=st.sampled_from([6, 8, 12]),
+)
+def test_property_bulk_insert_all_found(keys, b):
+    t = ABTree(TreeConfig(capacity=2048, b=b, a=2, max_height=12))
+    ops = [OP_INSERT] * len(keys)
+    vals = [k % 997 for k in keys]
+    t.apply_round(ops, keys, vals)
+    check_invariants(t.state, t.cfg)
+    out = t.apply_round([OP_FIND] * len(keys), keys, [0] * len(keys))
+    assert np.asarray(out.found).all()
+    assert np.asarray(out.results).tolist() == vals
+
+
+def test_range_query_matches_oracle():
+    from repro.core.abtree import range_query
+
+    rng = np.random.default_rng(9)
+    t = ABTree(SMALL)
+    o = DictOracle()
+    keys = rng.choice(5000, size=400, replace=False).tolist()
+    vals = [k * 3 for k in keys]
+    t.apply_round([OP_INSERT] * 400, keys, vals)
+    o.apply_round([OP_INSERT] * 400, keys, vals)
+    for lo, hi in [(0, 5000), (100, 200), (4999, 5000), (200, 100), (2500, 2600)]:
+        got = range_query(t, lo, hi)
+        want = sorted((k, v) for k, v in o.d.items() if lo <= k < hi)
+        assert got == want, (lo, hi)

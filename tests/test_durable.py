@@ -1,0 +1,132 @@
+"""Durable-tree tests: commit/recover roundtrips, crash injection at every
+protocol step (paper §5 strict-linearizability discipline), and the
+persistence-cost accounting that elimination reduces (Table 1 analog)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CrashPoint,
+    DictOracle,
+    DurableABTree,
+    OP_DELETE,
+    OP_INSERT,
+    TreeConfig,
+    check_invariants,
+    recover,
+)
+from repro.core.durable import SimulatedCrash
+from repro.core.oracle import tree_contents
+
+CFG = TreeConfig(capacity=512, b=8, a=2, max_height=12)
+
+
+def _mk_rounds(n_rounds=6, bsz=32, seed=0):
+    rng = np.random.default_rng(seed)
+    rounds = []
+    for _ in range(n_rounds):
+        ops = rng.choice([OP_INSERT, OP_DELETE], bsz).tolist()
+        keys = rng.integers(0, 64, bsz).tolist()
+        vals = rng.integers(0, 1000, bsz).tolist()
+        rounds.append((ops, keys, vals))
+    return rounds
+
+
+def test_commit_recover_roundtrip(tmp_path):
+    d = str(tmp_path / "tree")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=3)
+    o = DictOracle()
+    for ops, keys, vals in _mk_rounds():
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    r = recover(d)
+    check_invariants(r.tree.state, r.tree.cfg)
+    assert tree_contents(r.tree.state, r.tree.cfg) == o.items()
+    # recovered tree remains fully operational
+    r.apply_round([OP_INSERT], [999], [1])
+    assert r.tree.find(999) == 1
+
+
+@pytest.mark.parametrize("step", ["after_segment", "mid_manifest", "before_dirsync"])
+@pytest.mark.parametrize("at_commit", [2, 4])
+def test_crash_injection_recovers_prefix(tmp_path, step, at_commit):
+    """A crash at any protocol step recovers exactly the last committed
+    round (strict linearizability at round granularity):
+      - crash before the manifest rename → previous round's state;
+      - crash after the rename (before dir sync) → either is acceptable in
+        general, but with os.replace durability on a journaled fs the new
+        round is visible; we assert it equals one of the two prefixes."""
+    d = str(tmp_path / "tree")
+    crash = CrashPoint(step=step, at_commit=at_commit)
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=100, crash=crash)
+    o = DictOracle()
+    prefix_states = [o.items()]  # oracle contents after each committed round
+    crashed = False
+    rounds = _mk_rounds(8, seed=at_commit)
+    for i, (ops, keys, vals) in enumerate(rounds):
+        try:
+            t.apply_round(ops, keys, vals)
+            o.apply_round(ops, keys, vals)
+            prefix_states.append(o.items())
+        except SimulatedCrash:
+            crashed = True
+            # the crashed round's effects must NOT be externally visible:
+            # oracle for the crashed round intentionally not applied for the
+            # "previous prefix"; but if the rename landed, the round IS
+            # durable — compute that prefix too.
+            o2 = DictOracle()
+            o2.d = dict(prefix_states[-1])
+            o2.apply_round(ops, keys, vals)
+            prefix_states.append(o2.items())
+            break
+    assert crashed, "crash point did not fire"
+    r = recover(d)
+    check_invariants(r.tree.state, r.tree.cfg)
+    got = tree_contents(r.tree.state, r.tree.cfg)
+    acceptable = prefix_states[-2:] if step != "after_segment" else prefix_states[-2:-1]
+    assert got in acceptable, (
+        f"recovered state is not a committed prefix (step={step})"
+    )
+
+
+def test_elimination_reduces_flushes(tmp_path):
+    """Paper Table 1 analog: p-Elim flushes fewer node images than p-OCC on
+    a skewed update-heavy workload."""
+    rng = np.random.default_rng(7)
+    bsz, n_rounds = 64, 5
+    rounds = []
+    for _ in range(n_rounds):
+        ops = rng.choice([OP_INSERT, OP_DELETE], bsz).tolist()
+        keys = np.minimum(rng.zipf(1.8, bsz), 16).tolist()  # very hot keys
+        vals = rng.integers(0, 100, bsz).tolist()
+        rounds.append((ops, keys, vals))
+
+    te = DurableABTree(str(tmp_path / "elim"), CFG, mode="elim", snapshot_every=10**9)
+    to = DurableABTree(str(tmp_path / "occ"), CFG, mode="occ", snapshot_every=10**9)
+    for ops, keys, vals in rounds:
+        te.apply_round(ops, keys, vals)
+        to.apply_round(ops, keys, vals)
+    se, so = te.stats(), to.stats()
+    assert se["slot_writes"] < so["slot_writes"]
+    # Elim commits once per round; OCC commits once per round too, but its
+    # sub-rounds dirty strictly more node-versions → more flushed bytes in
+    # the occ log would require per-subround commits; at round granularity
+    # the observable difference is writes + eliminated count.
+    assert se["eliminated"] > 0 and so["eliminated"] == 0
+    assert tree_contents(te.tree.state, te.tree.cfg) == tree_contents(
+        to.tree.state, to.tree.cfg
+    )
+
+
+def test_recover_after_growth(tmp_path):
+    d = str(tmp_path / "grow")
+    t = DurableABTree(d, TreeConfig(capacity=64, b=8, a=2, max_height=12),
+                      mode="elim", snapshot_every=10**9)
+    o = DictOracle()
+    keys = list(range(300))
+    t.apply_round([OP_INSERT] * 300, keys, keys)
+    o.apply_round([OP_INSERT] * 300, keys, keys)
+    t.apply_round([OP_DELETE] * 50, keys[:50], [0] * 50)
+    o.apply_round([OP_DELETE] * 50, keys[:50], [0] * 50)
+    r = recover(d)
+    check_invariants(r.tree.state, r.tree.cfg)
+    assert tree_contents(r.tree.state, r.tree.cfg) == o.items()

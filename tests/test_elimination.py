@@ -1,0 +1,99 @@
+"""Property tests for the elimination combine itself (the paper's §4
+algebra): the segmented associative scan must equal a naive sequential fold
+for every op sequence, and the linearization it encodes must be valid."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import elimination as elim
+
+
+def naive_fold(ops, vals, seg_head, present0, val0):
+    """Sequential per-segment fold (ground truth)."""
+    n = len(ops)
+    before_p, before_v, after_p, after_v = [], [], [], []
+    p = v = None
+    for i in range(n):
+        if seg_head[i]:
+            p, v = bool(present0[i]), int(val0[i])
+        before_p.append(p)
+        before_v.append(v)
+        op = int(ops[i])
+        if op == 2 and not p:  # insert
+            p, v = True, int(vals[i])
+        elif op == 3 and p:  # delete
+            p = False
+        after_p.append(p)
+        after_v.append(v)
+    return before_p, before_v, after_p, after_v
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(
+            st.integers(0, 3),  # op (0=nop,1=find,2=ins,3=del)
+            st.integers(1, 50),  # val
+            st.booleans(),  # segment head
+            st.booleans(),  # present0 (if head)
+        ),
+        min_size=1,
+        max_size=100,
+    )
+)
+def test_combine_matches_naive_fold(data):
+    n = len(data)
+    ops = np.array([d[0] for d in data], np.int32)
+    vals = np.array([d[1] for d in data], np.int64)
+    seg_head = np.array([d[2] for d in data], bool)
+    seg_head[0] = True
+    present0 = np.array([d[3] for d in data], bool)
+    val0 = np.where(present0, 99, 0).astype(np.int64)
+
+    res = elim.eliminate_batch(
+        jnp.asarray(ops), jnp.asarray(vals), jnp.asarray(seg_head),
+        jnp.asarray(present0), jnp.asarray(val0),
+    )
+    bp, bv, ap, av = naive_fold(ops, vals, seg_head, present0, val0)
+    np.testing.assert_array_equal(np.asarray(res.before_present), bp)
+    np.testing.assert_array_equal(np.asarray(res.after_present), ap)
+    # values only compared where present
+    got_bv = np.asarray(res.before_val)
+    got_av = np.asarray(res.after_val)
+    for i in range(n):
+        if bp[i]:
+            assert got_bv[i] == bv[i], i
+        if ap[i]:
+            assert got_av[i] == av[i], i
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_ops=st.integers(1, 60),
+    present0=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_single_key_write_collapse(n_ops, present0, seed):
+    """All ops on ONE key: at most one net write regardless of op count —
+    the paper's headline write-collapse."""
+    rng = np.random.default_rng(seed)
+    ops = rng.integers(1, 4, n_ops).astype(np.int32)
+    vals = rng.integers(1, 100, n_ops).astype(np.int64)
+    seg_head = np.zeros(n_ops, bool)
+    seg_head[0] = True
+    p0 = np.full(n_ops, present0)
+    v0 = np.where(p0, 7, 0).astype(np.int64)
+    res = elim.eliminate_batch(
+        jnp.asarray(ops), jnp.asarray(vals), jnp.asarray(seg_head),
+        jnp.asarray(p0), jnp.asarray(v0),
+    )
+    n_net = int(
+        jnp.sum(res.net_insert) + jnp.sum(res.net_delete) + jnp.sum(res.net_overwrite)
+    )
+    assert n_net <= 1
+    # eliminated counter consistency: would-write ops minus net writes
+    would = int(np.sum((ops == 2) & ~np.asarray(res.before_present))
+                + np.sum((ops == 3) & np.asarray(res.before_present)))
+    assert int(res.n_eliminated) == would - n_net

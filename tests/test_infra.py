@@ -1,0 +1,231 @@
+"""Infrastructure tests: optimizer, checkpoint/restart + elasticity,
+trainer fault tolerance, gradient compression, EmbedElim, data pipeline
+determinism, sharding helpers."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import backbone, init_params, reduced
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.sparse import embed_elim_update, embed_occ_update
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_decreases_loss():
+    cfg = reduced(get_config("qwen2-0.5b"), n_layers=2)
+    params = init_params(backbone.model_spec(cfg))
+    opt = adamw_init(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32)}
+
+    @jax.jit
+    def step(params, opt):
+        (l, _), g = jax.value_and_grad(
+            lambda p: backbone.loss_fn(p, batch, cfg), has_aux=True
+        )(params)
+        g, _ = clip_by_global_norm(g, 1.0)
+        params, opt = adamw_update(g, opt, params, jnp.float32(1e-3))
+        return params, opt, l
+
+    losses = []
+    for _ in range(8):
+        params, opt, l = step(params, opt)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((10,)) * 4.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(gn), np.sqrt(90 + 160), rtol=1e-5)
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EmbedElim (paper technique on the sparse-update path)
+# ---------------------------------------------------------------------------
+
+
+def test_embed_elim_matches_occ():
+    rng = np.random.default_rng(3)
+    v, d, t = 50, 8, 200
+    table = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    ids = jnp.asarray(np.minimum(rng.zipf(1.5, t), v) - 1, jnp.int32)
+    grads = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+
+    elim_out, stats = embed_elim_update(table, ids, grads, 0.1)
+    occ_out = embed_occ_update(table, ids, grads, 0.1)
+    np.testing.assert_allclose(np.asarray(elim_out), np.asarray(occ_out), atol=1e-5)
+    assert int(stats.eliminated) > 0  # zipf ⇒ duplicates collapsed
+    assert int(stats.writes_elim) == len(set(np.asarray(ids).tolist()))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_int8_quantization_roundtrip():
+    from repro.parallel.compress import dequantize_int8, quantize_int8
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((777,)) * 0.01, jnp.float32)
+    q, s = quantize_int8(x)
+    y = dequantize_int8(q, s, x.shape, x.dtype)
+    err = float(jnp.max(jnp.abs(x - y)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-8
+
+
+def test_error_feedback_unbiased():
+    """With error feedback, the cumulative applied update converges to the
+    cumulative true gradient (compression bias vanishes)."""
+    from repro.parallel.compress import _ef_quantize, dequantize_int8
+
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((256,)) * 1e-3, jnp.float32)
+    err = jnp.zeros_like(g)
+    applied = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s, err = _ef_quantize(g, err)
+        applied = applied + dequantize_int8(q, s, g.shape, g.dtype)
+    # applied ≈ 50·g up to one quantization step of residual
+    np.testing.assert_allclose(
+        np.asarray(applied), np.asarray(50 * g), atol=float(jnp.max(jnp.abs(g)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# checkpoint + trainer fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager, latest_step, restore
+
+    cfg = reduced(get_config("qwen2-0.5b"), n_layers=2)
+    params = init_params(backbone.model_spec(cfg))
+    opt = adamw_init(params)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, {"params": params, "opt": opt}, extra={"note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    got = restore(str(tmp_path), 7, {"params": params, "opt": opt})
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves({"params": params, "opt": opt})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_crash_restart_resume(tmp_path):
+    """Inject a hard failure mid-training; a fresh Trainer must resume from
+    the last durable checkpoint and finish, with the data pipeline
+    continuing deterministically from the restored step."""
+    from repro.data import make_data_iter
+    from repro.launch.mesh import make_host_mesh
+    from repro.train import Trainer, TrainerConfig
+    from repro.train.trainer import SimulatedFailure
+
+    cfg = reduced(get_config("qwen2-0.5b"), n_layers=1)
+    mesh = make_host_mesh()
+    mk_iter = lambda step: make_data_iter(cfg, batch=4, seq=16, start_step=step)
+
+    tcfg = TrainerConfig(
+        ckpt_dir=str(tmp_path), max_steps=12, ckpt_every=4, fail_at_step=6,
+        log_every=1,
+    )
+    t1 = Trainer(cfg, tcfg, mesh, mk_iter)
+    with pytest.raises(SimulatedFailure):
+        t1.run()
+
+    # restart: resumes from step 4 (last durable commit before the crash)
+    tcfg2 = TrainerConfig(ckpt_dir=str(tmp_path), max_steps=12, ckpt_every=4, log_every=1)
+    t2 = Trainer(cfg, tcfg2, mesh, mk_iter)
+    assert t2.resumed_from == 4
+    out = t2.run()
+    assert out["final_step"] == 12
+    assert np.isfinite(out["final_loss"])
+
+
+def test_elastic_restore_changes_sharding(tmp_path):
+    """A checkpoint written under one mesh restores under another (the
+    elastic-scaling path): values identical, shardings = new mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.checkpoint import CheckpointManager, restore
+
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"))
+    x = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, x)
+    sh = {"w": NamedSharding(mesh1, PartitionSpec(None, None))}
+    got = restore(str(tmp_path), 1, x, sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(x["w"]))
+    assert got["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_resume():
+    from repro.data import make_data_iter
+
+    cfg = reduced(get_config("qwen2-0.5b"))
+    it1 = make_data_iter(cfg, batch=4, seq=8, seed=1)
+    seq1 = [next(it1)["tokens"] for _ in range(5)]
+    it2 = make_data_iter(cfg, batch=4, seq=8, seed=1, start_step=3)
+    seq2 = [next(it2)["tokens"] for _ in range(2)]
+    np.testing.assert_array_equal(seq1[3], seq2[0])
+    np.testing.assert_array_equal(seq1[4], seq2[1])
+
+
+def test_zipf_workload_is_skewed():
+    from repro.data.workloads import WorkloadConfig, op_stream
+
+    cfg = WorkloadConfig(key_range=1000, dist="zipf", zipf_s=1.2, batch=4096)
+    ops, keys, vals = next(iter(op_stream(cfg, 1)))
+    _, counts = np.unique(keys, return_counts=True)
+    assert counts.max() > 50  # hot keys dominate
+    assert keys.max() < 1000 and keys.min() >= 0
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_serve_engine_end_to_end():
+    from repro.serve import Request, ServeEngine
+
+    cfg = reduced(get_config("qwen2-0.5b"), n_layers=1)
+    eng = ServeEngine(cfg, max_batch=2, s_max=64, n_pages=64)
+    rng = np.random.default_rng(0)
+    for rid in range(4):
+        prompt = rng.integers(0, cfg.vocab, 8).tolist()
+        eng.submit(Request(rid=rid, prompt=prompt, max_new=4))
+    done = eng.run_until_done(max_ticks=500)
+    assert len(done) == 4
+    assert all(len(r.out) == 4 for r in done)
+    s = eng.stats()
+    assert s["n_done"] == 4
+    assert s["pages_used"] == 0  # all released
+
+
+def test_prefix_index_hit_on_shared_prompt():
+    from repro.serve.pages import PAGE, PrefixIndex, prefix_hashes
+
+    idx = PrefixIndex()
+    prompt = list(range(PAGE * 2))
+    chain = prefix_hashes(prompt)
+    idx.publish_batch([h for h, _ in chain], [11, 22])
+    hits = idx.lookup_batch([h for h, _ in chain])
+    assert hits == [11, 22]
+    # a different prompt misses
+    other = prefix_hashes(list(range(7, 7 + PAGE)))
+    assert idx.lookup_batch([other[0][0]]) == [None]

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: REDUCED same-family configs run one
+forward + one train-grad step + one decode step on CPU, asserting shapes
+and finiteness (the full configs are exercised only by the dry-run)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (
+    forward_decode,
+    forward_train,
+    init_cache,
+    init_params,
+    loss_fn,
+    model_spec,
+    reduced,
+)
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_frames, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "vlm":
+        batch["vis_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vis_tokens, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = reduced(get_config(arch))
+    rng = np.random.default_rng(42)
+    params = init_params(model_spec(cfg))
+    batch = _batch(cfg, rng)
+    extra = {k: v for k, v in batch.items() if k != "tokens"} or None
+
+    logits = forward_train(params, batch["tokens"], cfg, extra)
+    assert logits.shape == (B, S, cfg.vocab), logits.shape
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
+
+    loss, metrics = loss_fn(params, batch, cfg)
+    assert bool(jnp.isfinite(loss)), "non-finite loss"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_grad_step(arch):
+    cfg = reduced(get_config(arch))
+    rng = np.random.default_rng(0)
+    params = init_params(model_spec(cfg))
+    batch = _batch(cfg, rng)
+
+    grads = jax.grad(lambda p: loss_fn(p, batch, cfg)[0])(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), "non-finite grads"
+    # at least one grad should be nonzero
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    rng = np.random.default_rng(1)
+    params = init_params(model_spec(cfg))
+    cache = init_cache(cfg, B, 64)
+    if cfg.family == "audio":
+        # encoder output lives in the cache
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_frames, cfg.d_model)), jnp.float32
+        )
+        from repro.models.backbone import _audio_encode
+
+        cache["enc_out"] = _audio_encode(params, frames, cfg)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (B,)), jnp.int32)
+    logits, cache2 = forward_decode(params, cache, tok, jnp.int32(0), cfg)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # a second step at pos 1 must also work with the returned cache
+    logits2, _ = forward_decode(params, cache2, tok, jnp.int32(1), cfg)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "xlstm-350m", "zamba2-1.2b"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode logits must match teacher-forced forward logits
+    (cache correctness): run forward on a short prompt, then decode the
+    same tokens step by step and compare the final-position logits."""
+    cfg = reduced(get_config(arch), n_layers=2)
+    rng = np.random.default_rng(5)
+    params = init_params(model_spec(cfg))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+
+    full = forward_train(params, tokens, cfg, None)  # (1, 8, V)
+
+    cache = init_cache(cfg, 1, 16)
+    for t in range(8):
+        logits, cache = forward_decode(params, cache, tokens[:, t], jnp.int32(t), cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits[0]), np.asarray(full[0, -1]), atol=2e-2, rtol=2e-2
+    )

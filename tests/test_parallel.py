@@ -1,0 +1,100 @@
+"""Multi-device parallel-layer tests (subprocess with 8 host devices):
+compressed cross-pod gradient reduction, sharding helpers, and a sharded
+end-to-end train step."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, timeout=560):
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO,
+    )
+    assert out.returncode == 0, (out.stdout + out.stderr)[-3000:]
+    return out.stdout
+
+
+def test_compressed_grad_reduce_multidevice():
+    _run(
+        """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import numpy as np, jax, jax.numpy as jnp
+from repro.parallel.compress import compressed_grad_reduce, init_error_feedback
+mesh = jax.make_mesh((2,2,2), ('pod','data','model'))
+g = {'w': jnp.asarray(np.random.default_rng(0).standard_normal((64,)), jnp.float32)}
+e = init_error_feedback(g)
+with mesh:
+    out, e2 = jax.jit(lambda g_, e_: compressed_grad_reduce(g_, e_, mesh))(g, e)
+np.testing.assert_allclose(np.asarray(out['w']), np.asarray(g['w']), atol=2e-2)
+print('OK')
+"""
+    )
+
+
+def test_sharded_train_step_runs_multidevice():
+    """One real train step on an 8-device (data=4, model=2) mesh with the
+    production sharding rules — numerics must match the 1-device run."""
+    _run(
+        """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import backbone, init_params, reduced
+from repro.optim.adamw import adamw_init
+from repro.train.step import make_train_step
+
+cfg = reduced(get_config('qwen2-0.5b'), n_layers=2, d_model=64, n_heads=4, n_kv=2)
+mesh = jax.make_mesh((4, 2), ('data', 'model'))
+params = init_params(backbone.model_spec(cfg))
+opt = adamw_init(params)
+rng = np.random.default_rng(0)
+batch = {'tokens': jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)), jnp.int32)}
+with mesh:
+    jit_maker, sh = make_train_step(cfg, mesh, donate=False)
+    sd = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+    step = jit_maker(sd)
+    out = step(params, opt, batch, jnp.int32(0))
+loss_sharded = float(out.metrics['loss'])
+
+# single-device reference
+l_ref, _ = backbone.loss_fn(params, batch, cfg)
+np.testing.assert_allclose(loss_sharded, float(l_ref), rtol=2e-4)
+print('OK sharded loss', loss_sharded)
+"""
+    )
+
+
+def test_cache_pspecs_cover_all_archs():
+    """Sharding assignment must produce valid PartitionSpecs for every
+    (arch, decode shape) without error."""
+    _run(
+        """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import jax
+from repro.configs import ARCH_IDS, SHAPES, get_config, cell_status
+from repro.parallel.sharding import cache_pspecs
+mesh = jax.make_mesh((2,2,2), ('pod','data','model'))
+n = 0
+for arch in ARCH_IDS:
+    cfg = get_config(arch)
+    for sn in ('decode_32k', 'long_500k'):
+        shape = SHAPES[sn]
+        if cell_status(cfg, shape) != 'run':
+            continue
+        specs = cache_pspecs(cfg, shape.batch, shape.seq, mesh)
+        n += len(jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, '__iter__') and not isinstance(x, dict)))
+print('OK', n)
+"""
+    )

@@ -1,0 +1,53 @@
+"""Tests for the PP stage loop and the dedup index."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_pipeline_matches_sequential():
+    """4-stage pipeline over a 4-pod mesh == sequential layer stack."""
+    code = """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4'
+import numpy as np, jax, jax.numpy as jnp
+from repro.parallel.pipeline import pipeline_apply
+
+mesh = jax.make_mesh((4,), ('pod',))
+rng = np.random.default_rng(0)
+n_stages, m, b, d = 4, 3, 2, 8
+w = jnp.asarray(rng.standard_normal((n_stages, d, d)) * 0.3, jnp.float32)
+x = jnp.asarray(rng.standard_normal((m, b, d)), jnp.float32)
+
+body = lambda wi, h: jnp.tanh(h @ wi)
+with mesh:
+    out = pipeline_apply({'w': w}, x, lambda p, h: body(p['w'], h), mesh)
+
+ref = x
+for s in range(n_stages):
+    ref = body(w[s], ref)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+print('PIPELINE_OK')
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=560,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}, cwd=REPO,
+    )
+    assert "PIPELINE_OK" in out.stdout, (out.stdout + out.stderr)[-3000:]
+
+
+def test_dedup_index():
+    from repro.data.dedup import DedupIndex
+
+    idx = DedupIndex(capacity=1024)
+    docs = [[1, 2, 3], [4, 5, 6], [1, 2, 3], [7, 8]]  # in-batch dup
+    keep, stats = idx.filter_batch(docs)
+    assert keep == [0, 1, 3]
+    # history dup across batches
+    keep2, stats2 = idx.filter_batch([[4, 5, 6], [9, 9]])
+    assert keep2 == [1]
+    assert stats2["duplicates"] == 2
