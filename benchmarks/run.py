@@ -3,6 +3,8 @@ Prints ``name,us_per_call,derived`` CSV.
 
   microbench    — Figs 12–15 (uniform/zipf × update-rate grid, Elim vs OCC)
   ycsb          — Fig 16 (YCSB-A analog)
+  ycsb_e        — YCSB-E analog (95% range scans / 5% inserts)
+  range_scan    — scan_round throughput + kernels/range_scan hot loop
   persistence   — Table 1 (durable overhead + flush traffic)
   elim_rate     — §4 mechanism (elimination fraction vs skew)
   embed_elim    — framework integration (sparse-update write collapse)
@@ -14,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV.
 from __future__ import annotations
 
 import argparse
+import functools
 import os
 import sys
 import traceback
@@ -25,11 +28,21 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import elim_rate, embed_elim, kernels_bench, microbench, persistence, ycsb
+    from benchmarks import (
+        elim_rate,
+        embed_elim,
+        kernels_bench,
+        microbench,
+        persistence,
+        range_scan,
+        ycsb,
+    )
 
     sections = {
         "microbench": microbench.main,
         "ycsb": ycsb.main,
+        "ycsb_e": functools.partial(ycsb.main, workload="E"),
+        "range_scan": range_scan.main,
         "persistence": persistence.main,
         "elim_rate": elim_rate.main,
         "embed_elim": embed_elim.main,

@@ -1,20 +1,40 @@
-"""YCSB Workload-A analog (paper Fig 16): 50% reads / 50% writes where a
-"write" reads the row pointer from the index then mutates the row payload
-(NOT the index) — index traffic is find-dominated, Zipf 0.5."""
+"""YCSB workload analogs on the batched tree index.
+
+  A (paper Fig 16): 50% reads / 50% writes where a "write" reads the row
+    pointer from the index then mutates the row payload (NOT the index) —
+    index traffic is find-dominated, Zipf 0.5.
+  E: 95% short range scans / 5% inserts (Zipf start keys) — the scan-heavy
+    mix served by the range-scan subsystem (``ABTree.scan_round``).
+
+``python benchmarks/ycsb.py [--workload A|E] [--quick]``
+"""
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
 import numpy as np
 
+if __package__ in (None, ""):  # `python benchmarks/ycsb.py` (not -m)
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_ROOT, os.path.join(_ROOT, "src")]
+
 from repro.configs.abtree import TPU8
 from repro.core import ABTree, OP_FIND
-from repro.data.workloads import WorkloadConfig, prefill_tree, zipf_keys
+from repro.data.workloads import (
+    WorkloadConfig,
+    prefill_tree,
+    split_scan_round,
+    ycsb_e_stream,
+    zipf_keys,
+)
 
 from benchmarks.common import emit
 
 
-def main(quick=False):
+def _run_a(quick=False):
     key_range = 4096
     batch = 512
     rounds = 10 if quick else 30
@@ -44,5 +64,51 @@ def main(quick=False):
         )
 
 
+def _run_e(quick=False):
+    key_range = 4096
+    batch = 256
+    rounds = 6 if quick else 20
+    cap = 128
+    wl = WorkloadConfig(key_range=key_range, dist="zipf", zipf_s=1.0, batch=batch, seed=5)
+    for mode in ("elim", "occ"):
+        tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
+        prefill_tree(tree, wl)
+        # warm both round types: several rounds so the scan frontier reaches
+        # steady state and every (frontier, cap) jit compile lands outside
+        # the timed region (the compile cache is shared across modes).
+        for ops, keys, vals in ycsb_e_stream(wl, 3):
+            (lo, hi), point = split_scan_round(ops, keys, vals)
+            tree.scan_round(lo, hi, cap=cap)
+            tree.apply_round(*point)
+        n_ops = n_items = 0
+        t0 = time.perf_counter()
+        for ops, keys, vals in ycsb_e_stream(wl, rounds):
+            (lo, hi), point = split_scan_round(ops, keys, vals)
+            out = tree.scan_round(lo, hi, cap=cap)
+            tree.apply_round(*point)
+            n_ops += len(ops)
+            n_items += int(np.sum(np.asarray(out.count)))
+        dt = time.perf_counter() - t0
+        emit(
+            f"ycsb_e.{mode}",
+            dt / n_ops * 1e6,
+            f"tx/s={n_ops/dt:.0f};items/s={n_items/dt:.0f};"
+            f"scan_retries={tree.stats()['scan_retries']}",
+        )
+
+
+def main(quick=False, workload="A"):
+    if workload.upper() == "A":
+        _run_a(quick=quick)
+    elif workload.upper() == "E":
+        _run_e(quick=quick)
+    else:
+        raise ValueError(f"unknown YCSB workload {workload!r} (A or E)")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="A", choices=["A", "E", "a", "e"])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick, workload=args.workload)

@@ -1,0 +1,37 @@
+"""Version-compat wrapper for shard_map.
+
+Newer jax exposes ``jax.shard_map(..., axis_names=..., check_vma=...)``;
+the jax pinned in some environments only has
+``jax.experimental.shard_map.shard_map(..., auto=..., check_rep=...)``.
+This module has no repro-internal imports so both ``repro.models`` and
+``repro.parallel`` can use it without import cycles.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs, manual):
+    """shard_map ``fn`` with the given ``manual`` axis names; every other
+    mesh axis stays auto (the partitioner shards inside the body).
+    Replication checking is disabled on both API spellings."""
+    manual = set(manual)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names=manual,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+        auto=frozenset(mesh.axis_names) - manual,
+    )

@@ -16,8 +16,12 @@ from repro.core.abtree import (  # noqa: E402
     OP_FIND,
     OP_INSERT,
     OP_DELETE,
+    OP_RANGE,
     EMPTY,
     NOTFOUND,
+    ScanConflictError,
+    ScanOutput,
+    range_query,
 )
 from repro.core.elimination import eliminate_batch, EliminationResult  # noqa: E402
 from repro.core.oracle import DictOracle, check_invariants  # noqa: E402
@@ -31,8 +35,12 @@ __all__ = [
     "OP_FIND",
     "OP_INSERT",
     "OP_DELETE",
+    "OP_RANGE",
     "EMPTY",
     "NOTFOUND",
+    "ScanConflictError",
+    "ScanOutput",
+    "range_query",
     "eliminate_batch",
     "EliminationResult",
     "DictOracle",

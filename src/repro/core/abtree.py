@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import elimination as elim
+from repro.kernels.range_scan.ref import range_scan_ref
 
 # ----------------------------------------------------------------------------
 # Constants & state
@@ -62,8 +63,15 @@ OP_NOP = int(elim.OP_NOP)
 OP_FIND = int(elim.OP_FIND)
 OP_INSERT = int(elim.OP_INSERT)
 OP_DELETE = int(elim.OP_DELETE)
+OP_RANGE = 4  # range scan [lo, hi) — routed through scan_round, never the combine
 
 INT_MAX = np.int32(2**31 - 1)
+KEY_MIN = jnp.iinfo(jnp.int64).min  # -inf bound for leftmost child ranges
+
+
+class ScanConflictError(RuntimeError):
+    """An optimistic range scan failed version validation repeatedly
+    (concurrent update rounds kept touching the scanned subtree)."""
 
 
 class TreeConfig(NamedTuple):
@@ -80,6 +88,8 @@ class TreeStats(NamedTuple):
     eliminated: jax.Array  # update ops eliminated (write avoided)
     rounds: jax.Array
     subrounds: jax.Array  # OCC sub-rounds executed
+    scans: jax.Array  # range-scan ops served
+    scan_retries: jax.Array  # scan rounds re-run after version conflicts
 
 
 class TreeState(NamedTuple):
@@ -132,7 +142,7 @@ def make_tree(cfg: TreeConfig) -> TreeState:
         root=jnp.int32(0),
         height=jnp.int32(1),
         dirty=jnp.zeros((n,), bool).at[0].set(True),
-        stats=TreeStats(*([jnp.int64(0)] * 6)),
+        stats=TreeStats(*([jnp.int64(0)] * 8)),
     )
 
 
@@ -656,6 +666,105 @@ class RoundOutput(NamedTuple):
     found: jax.Array  # (B,) bool
 
 
+class ScanOutput(NamedTuple):
+    keys: jax.Array  # (B, cap) ascending matches, EMPTY-padded
+    vals: jax.Array  # (B, cap) values (0 where key slot is EMPTY)
+    count: jax.Array  # (B,) int32 — entries emitted (≤ cap)
+    truncated: jax.Array  # (B,) bool — more matches existed than cap
+
+
+# ----------------------------------------------------------------------------
+# Range-scan phase: frontier expansion + lane-parallel gather
+# ----------------------------------------------------------------------------
+
+
+def frontier_expand(
+    state: TreeState, cfg: TreeConfig, lo: jax.Array, hi: jax.Array, frontier_cap: int
+):
+    """Expand each query's root into its leaf frontier — the set of leaves
+    whose key range intersects ``[lo, hi)`` — level by level, wholly on
+    device.  Internal nodes expand to the children whose range intersects
+    the interval (the batched form of ``range_query``'s host DFS); leaves
+    self-propagate, so after ``max_height`` iterations every frontier slot
+    is a leaf.
+
+    Returns ``(leaves (B,F), cand_keys (B,F·b), cand_vals (B,F·b),
+    touched (L,B,F), overflow (B,))``.  ``touched`` records every node id
+    whose routers/slots the expansion read (scratch-padded) — the read set
+    the optimistic reader validates versions against.  ``overflow`` marks
+    queries whose intersecting-node count exceeded F at some level: their
+    results may be missing keys and the caller must re-run with a larger
+    frontier."""
+    bsz = lo.shape[0]
+    f, b = frontier_cap, cfg.b
+    scratch = state.keys.shape[0] - 1  # empty pseudo-leaf; ver never bumps
+
+    frontier0 = jnp.full((bsz, f), scratch, jnp.int32).at[:, 0].set(state.root)
+    valid0 = jnp.zeros((bsz, f), bool).at[:, 0].set(True)
+    touched0 = jnp.full((cfg.max_height, bsz, f), scratch, jnp.int32)
+    overflow0 = jnp.zeros((bsz,), bool)
+
+    def body(level, carry):
+        frontier, valid, touched, overflow = carry
+        node = jnp.where(valid, frontier, scratch)
+        touched = touched.at[level].set(node)
+        leaf = state.is_leaf[node]  # (B,F); scratch is a leaf
+        routers = state.keys[node][:, :, : b - 1]  # (B,F,b-1); unused = EMPTY
+        sz = state.size[node]  # (B,F)
+        # child j covers [clo_j, chi_j): clo_0 = -inf, chi_{sz-1} = +inf
+        # (stale routers beyond sz-1 are EMPTY, which acts as +inf).
+        pad_lo = jnp.full((bsz, f, 1), KEY_MIN, KEY_DTYPE)
+        pad_hi = jnp.full((bsz, f, 1), EMPTY, KEY_DTYPE)
+        clo = jnp.concatenate([pad_lo, routers], axis=2)  # (B,F,b)
+        chi = jnp.concatenate([routers, pad_hi], axis=2)
+        j = jnp.arange(b, dtype=jnp.int32)[None, None, :]
+        isect = (
+            (j < sz[:, :, None])
+            & (chi > lo[:, None, None])
+            & (clo < hi[:, None, None])
+        )
+        expand = (valid & ~leaf)[:, :, None] & isect  # (B,F,b)
+        keep = valid & leaf  # leaves ride along unchanged
+        cand = jnp.concatenate(
+            [
+                jnp.where(expand, state.children[node], scratch),
+                jnp.where(keep, frontier, scratch)[:, :, None],
+            ],
+            axis=2,
+        ).reshape(bsz, f * (b + 1))
+        cand_valid = jnp.concatenate(
+            [expand, keep[:, :, None]], axis=2
+        ).reshape(bsz, f * (b + 1))
+        overflow = overflow | (jnp.sum(cand_valid, axis=1) > f)
+        order = jnp.argsort(~cand_valid, axis=1, stable=True).astype(jnp.int32)
+        frontier = jnp.take_along_axis(cand, order, axis=1)[:, :f].astype(jnp.int32)
+        valid = jnp.take_along_axis(cand_valid, order, axis=1)[:, :f]
+        return frontier, valid, touched, overflow
+
+    frontier, valid, touched, overflow = jax.lax.fori_loop(
+        0, cfg.max_height, body, (frontier0, valid0, touched0, overflow0)
+    )
+    leaves = jnp.where(valid, frontier, scratch)
+    cand_keys = jnp.where(valid[:, :, None], state.keys[leaves], EMPTY)
+    cand_vals = state.vals[leaves]
+    return (
+        leaves,
+        cand_keys.reshape(bsz, f * b),
+        cand_vals.reshape(bsz, f * b),
+        touched,
+        overflow,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(1, 4, 5))
+def _phase_scan(state: TreeState, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int):
+    """jit: frontier expansion + in-range gather (jnp twin of
+    kernels/range_scan; the Pallas kernel serves int32 device keys)."""
+    leaves, ck, cv, touched, overflow = frontier_expand(state, cfg, lo, hi, frontier_cap)
+    keys, vals, count, truncated = range_scan_ref(ck, cv, lo, hi, cap)
+    return ScanOutput(keys=keys, vals=vals, count=count, truncated=truncated), touched, overflow
+
+
 @functools.partial(jax.jit, static_argnums=(2,))
 def _phase_search_combine(state: TreeState, batch, cfg: TreeConfig):
     """jit: sort → descend → probe → eliminate.  Returns everything apply
@@ -771,12 +880,25 @@ class ABTree:
         # batched analog of the paper's per-update flush+fence); Elim
         # commits once per round.  See core/durable.py.
         self.subround_hook = None
+        # optimistic-reader hook: called between a scan's gather and its
+        # version validation.  Models update rounds from other engine
+        # replicas interleaving with the scan (tests use it to force the
+        # retry/conflict paths); production single-replica use leaves None.
+        self.scan_hook = None
+        self._scan_frontier = 8  # leaf-frontier pad width (doubles on overflow)
 
     # -- public API -----------------------------------------------------------
 
     def apply_round(self, ops, keys, vals=None) -> RoundOutput:
         """Apply one round of concurrent ops (1-D arrays, equal length).
         Returns per-op results in arrival order."""
+        if np.any(np.asarray(ops) == OP_RANGE):
+            # a hard error (not assert: -O must not let op code 4 reach the
+            # combine, where it would silently act as a find)
+            raise ValueError(
+                "OP_RANGE ops must be routed through scan_round "
+                "(see data/workloads.split_scan_round)"
+            )
         ops = jnp.asarray(ops, jnp.int32)
         keys = jnp.asarray(keys, KEY_DTYPE)
         vals = jnp.zeros_like(keys) if vals is None else jnp.asarray(vals, VAL_DTYPE)
@@ -789,6 +911,71 @@ class ABTree:
         st = self.state.stats
         self.state = self.state._replace(stats=st._replace(rounds=st.rounds + 1))
         return out
+
+    def scan_round(self, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
+        """Apply one round of concurrent range scans: for each query i,
+        return the ≤ ``cap`` smallest keys in ``[lo[i], hi[i])`` with their
+        values, ascending (``truncated[i]`` marks clipped results).
+
+        Scans follow the paper's optimistic-reader discipline: the gather
+        runs against a state snapshot, recording every node it reads; the
+        node versions are then re-validated against the live state, and the
+        scan re-runs if an interleaved update round bumped any of them
+        (``ScanConflictError`` after ``max_retries``).  Scan rounds
+        interleave legally with elim/occ update rounds at round granularity
+        — each scan linearizes at its validation point."""
+        lo = jnp.atleast_1d(jnp.asarray(lo, KEY_DTYPE))
+        hi = jnp.atleast_1d(jnp.asarray(hi, KEY_DTYPE))
+        assert lo.shape == hi.shape and lo.ndim == 1
+        bsz = int(lo.shape[0])
+        if bsz == 0:
+            return ScanOutput(
+                keys=jnp.full((0, cap), EMPTY, KEY_DTYPE),
+                vals=jnp.zeros((0, cap), VAL_DTYPE),
+                count=jnp.zeros((0,), jnp.int32),
+                truncated=jnp.zeros((0,), bool),
+            )
+        # pad the batch to a power-of-two bucket: workload rounds produce a
+        # different scan count every round, and an exact-size jit would
+        # recompile _phase_scan for each.  Pad lanes scan [EMPTY, EMPTY):
+        # no child range satisfies chi > EMPTY, so they expand past the
+        # root into nothing and add no nodes to the validated read set
+        # (padding with [0, 0) would walk the leftmost spine and conflict
+        # with updates the real scans never read).
+        padded = max(8, 1 << (bsz - 1).bit_length())
+        if padded != bsz:
+            pad = jnp.full((padded - bsz,), EMPTY, KEY_DTYPE)
+            lo = jnp.concatenate([lo, pad])
+            hi = jnp.concatenate([hi, pad])
+        for attempt in range(max_retries):
+            snap = self.state
+            guard = 0
+            while True:
+                out, touched, overflow = _phase_scan(
+                    snap, self.cfg, lo, hi, self._scan_frontier, cap
+                )
+                if not bool(jnp.any(overflow)):
+                    break
+                guard += 1
+                assert guard < 32, "scan frontier growth diverged"
+                self._scan_frontier *= 2  # recompile-bounded (powers of two)
+            if self.scan_hook is not None:
+                self.scan_hook()
+            ids = np.unique(np.asarray(touched))
+            if np.array_equal(np.asarray(snap.ver)[ids], np.asarray(self.state.ver)[ids]):
+                st = self.state.stats
+                self.state = self.state._replace(
+                    stats=st._replace(
+                        scans=st.scans + jnp.int64(bsz),
+                        scan_retries=st.scan_retries + jnp.int64(attempt),
+                    )
+                )
+                if padded != bsz:
+                    out = ScanOutput(*(x[:bsz] for x in out))
+                return out
+        raise ScanConflictError(
+            f"scan_round: version validation failed {max_retries} times"
+        )
 
     def find(self, key) -> Optional[int]:
         out = self.apply_round([OP_FIND], [key])
@@ -1061,4 +1248,4 @@ def range_query(tree: "ABTree", lo: int, hi: int, max_retries: int = 8):
         ver_after = np.asarray(tree.state.ver)
         if all(ver_before[t] == ver_after[t] for t in touched):
             return sorted(out)
-    raise RuntimeError("range_query: version validation failed repeatedly")
+    raise ScanConflictError("range_query: version validation failed repeatedly")

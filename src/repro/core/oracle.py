@@ -76,6 +76,12 @@ class DictOracle:
     def items(self) -> dict:
         return dict(sorted(self.d.items()))
 
+    def range(self, lo: int, hi: int) -> List[Tuple[int, int]]:
+        """All (k, v) with lo ≤ k < hi, ascending — the linearized result a
+        scan round must produce (clip to ``cap`` to compare truncated
+        scans)."""
+        return sorted((k, v) for k, v in self.d.items() if lo <= k < hi)
+
 
 def check_invariants(state: TreeState, cfg) -> None:
     """Host walk asserting the paper's structural invariants (see module

@@ -1,12 +1,14 @@
 """Dictionary-operation workload generators for the paper's benchmarks
-(SetBench-style): uniform / Zipfian key streams × update fraction."""
+(SetBench-style): uniform / Zipfian key streams × update fraction, plus the
+YCSB-E scan-heavy mix served by the range-scan subsystem."""
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
-from repro.core.abtree import OP_DELETE, OP_FIND, OP_INSERT
+from repro.core.abtree import OP_DELETE, OP_FIND, OP_INSERT, OP_NOP, OP_RANGE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -19,29 +21,32 @@ class WorkloadConfig:
     seed: int = 0
 
 
+@functools.lru_cache(maxsize=32)
+def _zipf_cdf(key_range: int, s: float) -> np.ndarray:
+    """Inverse-CDF table for bounded Zipf(s) over [0, key_range) — built
+    once per (key_range, s); every sampler below shares it."""
+    ranks = np.arange(1, key_range + 1, dtype=np.float64)
+    w = 1.0 / np.power(ranks, s)
+    return np.cumsum(w) / np.sum(w)
+
+
 def zipf_keys(rng: np.random.Generator, n: int, key_range: int, s: float):
     """Bounded Zipf(s) over [0, key_range) via inverse-CDF sampling (exact,
     unlike np.random.zipf which is unbounded)."""
-    ranks = np.arange(1, key_range + 1, dtype=np.float64)
-    w = 1.0 / np.power(ranks, s)
-    cdf = np.cumsum(w) / np.sum(w)
-    u = rng.random(n)
-    return np.searchsorted(cdf, u).astype(np.int64)
+    return np.searchsorted(_zipf_cdf(key_range, s), rng.random(n)).astype(np.int64)
+
+
+def _sample_keys(rng: np.random.Generator, cfg: WorkloadConfig) -> np.ndarray:
+    if cfg.dist == "zipf":
+        return zipf_keys(rng, cfg.batch, cfg.key_range, cfg.zipf_s)
+    return rng.integers(0, cfg.key_range, cfg.batch).astype(np.int64)
 
 
 def op_stream(cfg: WorkloadConfig, n_rounds: int):
     """Yields (ops, keys, vals) rounds."""
     rng = np.random.default_rng(cfg.seed)
-    # precompute zipf cdf once
-    if cfg.dist == "zipf":
-        ranks = np.arange(1, cfg.key_range + 1, dtype=np.float64)
-        w = 1.0 / np.power(ranks, cfg.zipf_s)
-        cdf = np.cumsum(w) / np.sum(w)
     for _ in range(n_rounds):
-        if cfg.dist == "zipf":
-            keys = np.searchsorted(cdf, rng.random(cfg.batch)).astype(np.int64)
-        else:
-            keys = rng.integers(0, cfg.key_range, cfg.batch).astype(np.int64)
+        keys = _sample_keys(rng, cfg)
         u = rng.random(cfg.batch)
         ops = np.where(
             u < cfg.update_frac / 2,
@@ -50,6 +55,45 @@ def op_stream(cfg: WorkloadConfig, n_rounds: int):
         ).astype(np.int32)
         vals = rng.integers(0, 1 << 30, cfg.batch).astype(np.int64)
         yield ops, keys, vals
+
+
+def ycsb_e_stream(
+    cfg: WorkloadConfig,
+    n_rounds: int,
+    scan_frac: float = 0.95,
+    max_span: int = 64,
+):
+    """YCSB Workload-E analog: ``scan_frac`` short range scans (start key
+    from the configured distribution, span uniform in [1, max_span]) and
+    the remainder inserts.  OP_RANGE rows encode lo = key, span = val —
+    split them out with ``split_scan_round`` before applying."""
+    rng = np.random.default_rng(cfg.seed)
+    for _ in range(n_rounds):
+        keys = _sample_keys(rng, cfg)
+        u = rng.random(cfg.batch)
+        ops = np.where(u < scan_frac, OP_RANGE, OP_INSERT).astype(np.int32)
+        spans = rng.integers(1, max_span + 1, cfg.batch).astype(np.int64)
+        vals = np.where(
+            ops == OP_RANGE, spans, rng.integers(0, 1 << 30, cfg.batch)
+        ).astype(np.int64)
+        yield ops, keys, vals
+
+
+def split_scan_round(ops: np.ndarray, keys: np.ndarray, vals: np.ndarray):
+    """Split one mixed round into its scan half and its point-op half.
+
+    Returns ``((lo, hi), (ops', keys', vals'))``: OP_RANGE rows become
+    ``[lo, lo + span)`` scan intervals (for ``ABTree.scan_round``); in the
+    point-op arrays they are masked to OP_NOP so per-op result positions
+    are preserved for ``apply_round``."""
+    ops = np.asarray(ops)
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    is_scan = ops == OP_RANGE
+    lo = keys[is_scan]
+    hi = lo + np.maximum(vals[is_scan], 1)
+    point_ops = np.where(is_scan, OP_NOP, ops).astype(np.int32)
+    return (lo, hi), (point_ops, keys, np.where(is_scan, 0, vals))
 
 
 def prefill_tree(tree, cfg: WorkloadConfig, target_frac: float = 0.5):

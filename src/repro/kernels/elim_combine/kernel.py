@@ -26,6 +26,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 # op codes (match core.elimination)
 OP_NOP, OP_FIND, OP_INSERT, OP_DELETE = 0, 1, 2, 3
+# NOTE: kind selects below pin .astype(jnp.int32) — under jax_enable_x64 a
+# jnp.where whose branches are both weak Python ints resolves to int64, and
+# the resulting transition tuples then fail the int32 ref stores.
 K_ABSENT, K_CONST, K_KEEP = 0, 1, 2
 
 
@@ -43,7 +46,9 @@ def _compose(f, g):
 
     f_p_present = fp_k != K_ABSENT
     g_keep = gp_k == K_KEEP
-    hp_k_fp = jnp.where(g_keep, jnp.where(fp_k == K_KEEP, K_KEEP, K_CONST), gp_k)
+    hp_k_fp = jnp.where(
+        g_keep, jnp.where(fp_k == K_KEEP, K_KEEP, K_CONST).astype(jnp.int32), gp_k
+    )
     hp_v_fp = jnp.where(g_keep, fp_v, gp_v)
     h_p_k = jnp.where(f_p_present, hp_k_fp, ga_k)
     h_p_v = jnp.where(f_p_present, hp_v_fp, ga_v)
@@ -90,9 +95,9 @@ def _combine_kernel(
     # lift ops → transitions
     is_ins = (ops == OP_INSERT).astype(jnp.int32)
     is_del = ops == OP_DELETE
-    a_k = jnp.where(is_ins == 1, K_CONST, K_ABSENT)
+    a_k = jnp.where(is_ins == 1, K_CONST, K_ABSENT).astype(jnp.int32)
     a_v = jnp.where(is_ins == 1, vals, 0)
-    p_k = jnp.where(is_del, K_ABSENT, K_KEEP)
+    p_k = jnp.where(is_del, K_ABSENT, K_KEEP).astype(jnp.int32)
     p_v = jnp.zeros_like(vals)
     t = (a_k, a_v, p_k, p_v, head)
 

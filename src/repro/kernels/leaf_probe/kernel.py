@@ -35,7 +35,9 @@ def _probe_kernel(leaf_keys_ref, leaf_vals_ref, query_ref, slot_ref, val_ref, *,
     found = slot < b + 1
     # select value at slot (masked sum avoids a gather)
     sel = iota == slot
-    val = jnp.sum(jnp.where(sel, vals, 0), axis=1, keepdims=True)
+    # dtype pinned: under jax_enable_x64 an un-pinned int32 sum promotes to
+    # int64 and the store into the int32 output ref fails.
+    val = jnp.sum(jnp.where(sel, vals, 0), axis=1, keepdims=True, dtype=jnp.int32)
     slot_ref[...] = jnp.where(found, slot, -1)
     val_ref[...] = jnp.where(found, val, jnp.int32(0))
 

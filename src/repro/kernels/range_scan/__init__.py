@@ -1,0 +1,5 @@
+from repro.kernels.range_scan.kernel import range_scan_pallas
+from repro.kernels.range_scan.ops import range_scan
+from repro.kernels.range_scan.ref import range_scan_ref
+
+__all__ = ["range_scan", "range_scan_pallas", "range_scan_ref"]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: batched range-scan gather over unsorted leaf slots.
+
+The tree's unsorted leaves make a range scan a *mask + compact* problem: the
+leaf frontier for a query ``[lo, hi)`` is gathered by the caller (HBM → VMEM
+rows, exactly the ``leaf_probe`` layout) and flattened to ``n`` candidate
+slots per query; the kernel then
+
+  1. lane-parallel compares every candidate against the interval (one VPU
+     op per VREG of slots),
+  2. compacts the matches into a fixed-capacity, *ascending* output via
+     rank-selection: the rank of a matching key is the number of smaller
+     matching keys, computed as a masked pairwise compare-reduce.  Output
+     lane ``c`` then selects the key with rank ``c`` by masked sum — no
+     scatter, no sort network, all VPU-friendly ops.
+
+The pairwise rank is O(n²) per query; n = frontier_leaves × b is small
+(≤ a few hundred) and the compare runs at VREG width, so the kernel stays
+memory-bound on the leaf gather like the rest of the round.  Keys are int32
+on device (TPU has no int64 vector support — the tree's 64-bit keys take the
+pure-jnp ref path; see ops.py).
+
+Dtype discipline: the host package enables jax_enable_x64, under which
+integer reductions of int32 promote to int64 — every reduction here pins
+``dtype=jnp.int32`` so stores match the int32 output refs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT32_MAX = jnp.iinfo(jnp.int32).max  # EMPTY sentinel for device keys
+
+
+def _range_scan_kernel(
+    cand_keys_ref, cand_vals_ref, lo_ref, hi_ref,
+    keys_ref, vals_ref, count_ref, trunc_ref,
+    *, cap: int,
+):
+    """One (TB, n) tile: interval mask + rank-select compaction."""
+    rows = cand_keys_ref[...]  # (TB, n) int32
+    vals = cand_vals_ref[...]  # (TB, n) int32
+    lo = lo_ref[...]  # (TB, 1)
+    hi = hi_ref[...]  # (TB, 1)
+
+    match = (rows >= lo) & (rows < hi) & (rows != INT32_MAX)  # (TB, n)
+    key_m = jnp.where(match, rows, INT32_MAX)
+
+    # rank of each matching key = #matching keys strictly smaller (keys are
+    # unique within a tree, and non-matches sit at INT32_MAX, never smaller).
+    lt = key_m[:, :, None] > key_m[:, None, :]  # (TB, n, n): j smaller than i
+    rank = jnp.sum(lt.astype(jnp.int32), axis=2, dtype=jnp.int32)  # (TB, n)
+
+    # output lane c takes the key of rank c (masked sum — no gather/scatter).
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], rows.shape[1], cap), 2)
+    sel = match[:, :, None] & (rank[:, :, None] == c_iota)  # (TB, n, cap)
+    hit = jnp.sum(sel.astype(jnp.int32), axis=1, dtype=jnp.int32) > 0  # (TB, cap)
+    out_k = jnp.sum(jnp.where(sel, rows[:, :, None], jnp.int32(0)), axis=1, dtype=jnp.int32)
+    out_v = jnp.sum(jnp.where(sel, vals[:, :, None], jnp.int32(0)), axis=1, dtype=jnp.int32)
+
+    total = jnp.sum(match.astype(jnp.int32), axis=1, keepdims=True, dtype=jnp.int32)
+    keys_ref[...] = jnp.where(hit, out_k, jnp.int32(INT32_MAX))
+    vals_ref[...] = jnp.where(hit, out_v, jnp.int32(0))
+    count_ref[...] = jnp.minimum(total, jnp.int32(cap))
+    trunc_ref[...] = (total > cap).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "block_b", "interpret"))
+def range_scan_pallas(
+    cand_keys: jax.Array,  # (B, n) int32 gathered leaf slots, INT32_MAX-padded
+    cand_vals: jax.Array,  # (B, n) int32
+    lo: jax.Array,  # (B,) int32 inclusive
+    hi: jax.Array,  # (B,) int32 exclusive
+    *,
+    cap: int = 128,
+    block_b: int = 8,
+    interpret: bool = True,
+):
+    """Returns ``(keys (B,cap), vals (B,cap), count (B,), truncated (B,))``
+    with keys ascending and INT32_MAX-padded."""
+    bsz, n = cand_keys.shape
+    pad = (-bsz) % block_b
+    if pad:
+        cand_keys = jnp.pad(cand_keys, ((0, pad), (0, 0)), constant_values=INT32_MAX)
+        cand_vals = jnp.pad(cand_vals, ((0, pad), (0, 0)))
+        lo = jnp.pad(lo, (0, pad))
+        hi = jnp.pad(hi, (0, pad))
+    m = cand_keys.shape[0]
+    grid = (m // block_b,)
+    out_shape = [
+        jax.ShapeDtypeStruct((m, cap), jnp.int32),  # keys
+        jax.ShapeDtypeStruct((m, cap), jnp.int32),  # vals
+        jax.ShapeDtypeStruct((m, 1), jnp.int32),  # count
+        jax.ShapeDtypeStruct((m, 1), jnp.int32),  # truncated
+    ]
+    keys, vals, count, trunc = pl.pallas_call(
+        functools.partial(_range_scan_kernel, cap=cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, cap), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, cap), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(cand_keys, cand_vals, lo[:, None].astype(jnp.int32), hi[:, None].astype(jnp.int32))
+    return (
+        keys[:bsz],
+        vals[:bsz],
+        count[:bsz, 0],
+        trunc[:bsz, 0].astype(bool),
+    )

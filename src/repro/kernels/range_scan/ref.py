@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the range_scan kernel.
+
+Dtype-generic (works on the tree's int64 keys as well as the kernel's
+int32 device keys): the EMPTY sentinel is derived from the key dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def range_scan_ref(
+    cand_keys: jax.Array,  # (B, n) gathered leaf slots, EMPTY-padded
+    cand_vals: jax.Array,  # (B, n)
+    lo: jax.Array,  # (B,) inclusive lower bound
+    hi: jax.Array,  # (B,) exclusive upper bound
+    cap: int,  # static output capacity per query
+):
+    """Select the ≤ ``cap`` smallest candidate keys in [lo, hi) per query.
+
+    Returns ``(keys, vals, count, truncated)``:
+      keys      (B, cap) — ascending, EMPTY-padded
+      vals      (B, cap) — 0 where the key slot is EMPTY
+      count     (B,) int32 — number of emitted entries (≤ cap)
+      truncated (B,) bool — more than ``cap`` keys matched
+    """
+    empty = jnp.iinfo(cand_keys.dtype).max
+    match = (cand_keys >= lo[:, None]) & (cand_keys < hi[:, None]) & (cand_keys != empty)
+    key_m = jnp.where(match, cand_keys, empty)
+    order = jnp.argsort(key_m, axis=1, stable=True).astype(jnp.int32)
+    sk = jnp.take_along_axis(key_m, order, axis=1)[:, :cap]
+    sv = jnp.take_along_axis(cand_vals, order, axis=1)[:, :cap]
+    if sk.shape[1] < cap:  # fewer candidates than cap: keep the (B, cap) contract
+        pad = ((0, 0), (0, cap - sk.shape[1]))
+        sk = jnp.pad(sk, pad, constant_values=int(empty))
+        sv = jnp.pad(sv, pad)
+    emitted = sk != empty
+    total = jnp.sum(match, axis=1).astype(jnp.int32)
+    return (
+        sk,
+        jnp.where(emitted, sv, jnp.zeros_like(sv)),
+        jnp.minimum(total, jnp.int32(cap)),
+        total > cap,
+    )

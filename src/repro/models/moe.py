@@ -100,15 +100,16 @@ def _grouped_dispatch(p, xg, cfg, cap: int):
         return run(p, xg)
     from jax.sharding import PartitionSpec as PS
 
-    # jax.shard_map with axis_names = the manual axes; the model axis stays
-    # auto so the partitioner still applies TP/EP weight sharding inside.
-    fn = jax.shard_map(
+    from repro._shardmap_compat import shard_map_compat
+
+    # shard_map with the manual axes; the model axis stays auto so the
+    # partitioner still applies TP/EP weight sharding inside.
+    fn = shard_map_compat(
         run,
         mesh=mesh,
         in_specs=(jax.tree.map(lambda _: PS(), p), PS(manual, None, None)),
         out_specs=PS(manual, None, None),
-        axis_names=set(manual),
-        check_vma=False,
+        manual=manual,
     )
     return fn(p, xg)
 

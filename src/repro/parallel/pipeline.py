@@ -79,12 +79,13 @@ def pipeline_apply(
         jax.tree.map(lambda _: PS(axis), stage_params),
         PS(),  # microbatches replicated in (activations stream through)
     )
-    fn = jax.shard_map(
+    from repro._shardmap_compat import shard_map_compat
+
+    fn = shard_map_compat(
         shard_fn,
         mesh=mesh,
         in_specs=in_specs,
         out_specs=PS(),
-        axis_names=manual,
-        check_vma=False,
+        manual=manual,
     )
     return fn(stage_params, x)

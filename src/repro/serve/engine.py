@@ -26,7 +26,13 @@ import jax.numpy as jnp
 
 from repro.models import backbone, init_params
 from repro.models.config import ModelConfig
-from repro.serve.pages import PAGE, PagedKVCache, PrefixIndex, prefix_hashes
+from repro.serve.pages import (
+    PAGE,
+    PagedKVCache,
+    PrefixIndex,
+    SessionIndex,
+    prefix_hashes,
+)
 
 
 @dataclasses.dataclass
@@ -57,6 +63,10 @@ class ServeEngine:
         self.params = init_params(backbone.model_spec(cfg))
         self.kv = PagedKVCache(n_pages)
         self.index = PrefixIndex(mode=index_mode)
+        self.sessions = SessionIndex(mode=index_mode)
+        self._evict_floor = 0  # session ids below this are already swept
+        self._retired_since_sweep = 0
+        self._max_rid = -1  # highest session id ever admitted
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * max_batch  # slot → rid
@@ -99,6 +109,9 @@ class ServeEngine:
             self.index.publish_batch(
                 [h for h, _ in chain[n_hit:]], pages[: len(chain) - n_hit] or [0]
             ) if chain[n_hit:] else None
+            # session index: rid → first page of the request's page table
+            self.sessions.publish_batch([req.rid], [pages[0]])
+            self._max_rid = max(self._max_rid, req.rid)
             # teacher-forced prefill through the decode path (simple engine:
             # prompt tokens streamed token-by-token into the slot's cache)
             self.slots[slot] = req.rid
@@ -156,6 +169,18 @@ class ServeEngine:
         chain = prefix_hashes(req.prompt)
         if chain and self.kv.used > self.kv.n_pages // 2:
             self.index.evict_batch([h for h, _ in chain])
+        # session-range sweep: retired ids accumulate below the lowest live
+        # id, so one scan round + one delete round clears them in bulk
+        # (amortized — no per-rid delete round at retire time).
+        self._retired_since_sweep += 1
+        if self._retired_since_sweep >= 8 or not self.running:
+            # with nothing running, sweep past the highest id ever admitted
+            # (the last retiree may have a lower rid than earlier ones)
+            live_floor = min(self.running.keys(), default=self._max_rid + 1)
+            if live_floor > self._evict_floor:
+                self.sessions.evict_range(self._evict_floor, live_floor)
+                self._evict_floor = live_floor
+            self._retired_since_sweep = 0
 
     def run_until_done(self, max_ticks: int = 10000):
         t = 0
@@ -167,6 +192,7 @@ class ServeEngine:
     def stats(self) -> dict:
         s = dict(self.index.stats())
         s["pages_used"] = self.kv.used
+        s["session_scans"] = self.sessions.stats()["scans"]
         lat = [r.t_done - r.t_submit for r in self.done if r.t_done]
         s["n_done"] = len(self.done)
         s["mean_latency_s"] = float(np.mean(lat)) if lat else 0.0

@@ -2,8 +2,14 @@
 oracle, including hypothesis property tests of the paper's invariants."""
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+try:  # property tests need hypothesis; deterministic tests run without it
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     ABTree,
@@ -166,53 +172,71 @@ def test_elim_record_published():
 
 
 # ---------------------------------------------------------------------------
-# hypothesis property tests
+# hypothesis property tests (skipped when hypothesis is not installed)
 # ---------------------------------------------------------------------------
 
-op_strategy = st.tuples(
-    st.sampled_from([OP_FIND, OP_INSERT, OP_DELETE]),
-    st.integers(min_value=0, max_value=30),
-    st.integers(min_value=0, max_value=10**6),
-)
+if HAVE_HYPOTHESIS:
+    op_strategy = st.tuples(
+        st.sampled_from([OP_FIND, OP_INSERT, OP_DELETE]),
+        st.integers(min_value=0, max_value=30),
+        st.integers(min_value=0, max_value=10**6),
+    )
 
+    @settings(
+        max_examples=40,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    @given(
+        rounds=st.lists(
+            st.lists(op_strategy, min_size=1, max_size=48), min_size=1, max_size=6
+        ),
+        mode=st.sampled_from(["elim", "occ"]),
+    )
+    def test_property_oracle_equivalence(rounds, mode):
+        """For any op sequence, batched results == sequential oracle and all
+        of the paper's structural invariants hold after every round."""
+        t = ABTree(TreeConfig(capacity=512, b=8, a=2, max_height=12), mode=mode)
+        o = DictOracle()
+        prepared = []
+        for r in rounds:
+            ops = [x[0] for x in r]
+            keys = [x[1] for x in r]
+            vals = [x[2] for x in r]
+            prepared.append((ops, keys, vals))
+        _run_rounds(t, o, prepared, check_every=1)
 
-@settings(
-    max_examples=40,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-@given(
-    rounds=st.lists(st.lists(op_strategy, min_size=1, max_size=48), min_size=1, max_size=6),
-    mode=st.sampled_from(["elim", "occ"]),
-)
-def test_property_oracle_equivalence(rounds, mode):
-    """For any op sequence, batched results == sequential oracle and all of
-    the paper's structural invariants hold after every round."""
-    t = ABTree(TreeConfig(capacity=512, b=8, a=2, max_height=12), mode=mode)
-    o = DictOracle()
-    prepared = []
-    for r in rounds:
-        ops = [x[0] for x in r]
-        keys = [x[1] for x in r]
-        vals = [x[2] for x in r]
-        prepared.append((ops, keys, vals))
-    _run_rounds(t, o, prepared, check_every=1)
+    @settings(
+        max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+    )
+    @given(
+        keys=st.lists(
+            st.integers(min_value=0, max_value=10**9),
+            min_size=1,
+            max_size=200,
+            unique=True,
+        ),
+        b=st.sampled_from([6, 8, 12]),
+    )
+    def test_property_bulk_insert_all_found(keys, b):
+        t = ABTree(TreeConfig(capacity=2048, b=b, a=2, max_height=12))
+        ops = [OP_INSERT] * len(keys)
+        vals = [k % 997 for k in keys]
+        t.apply_round(ops, keys, vals)
+        check_invariants(t.state, t.cfg)
+        out = t.apply_round([OP_FIND] * len(keys), keys, [0] * len(keys))
+        assert np.asarray(out.found).all()
+        assert np.asarray(out.results).tolist() == vals
 
+else:
 
-@settings(max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(
-    keys=st.lists(st.integers(min_value=0, max_value=10**9), min_size=1, max_size=200, unique=True),
-    b=st.sampled_from([6, 8, 12]),
-)
-def test_property_bulk_insert_all_found(keys, b):
-    t = ABTree(TreeConfig(capacity=2048, b=b, a=2, max_height=12))
-    ops = [OP_INSERT] * len(keys)
-    vals = [k % 997 for k in keys]
-    t.apply_round(ops, keys, vals)
-    check_invariants(t.state, t.cfg)
-    out = t.apply_round([OP_FIND] * len(keys), keys, [0] * len(keys))
-    assert np.asarray(out.found).all()
-    assert np.asarray(out.results).tolist() == vals
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_oracle_equivalence():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_bulk_insert_all_found():
+        pass
 
 
 def test_range_query_matches_oracle():

@@ -2,6 +2,9 @@
 algebra): the segmented associative scan must equal a naive sequential fold
 for every op sequence, and the linearization it encodes must be valid."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,247 @@
+"""Range-scan subsystem tests: ``ABTree.scan_round`` vs ``DictOracle.range``
+vs the host ``range_query`` on trees mutated by interleaved update rounds,
+the ``kernels/range_scan`` Pallas kernel vs its jnp ref, the optimistic
+retry/conflict paths, and the serving session-range eviction sweep."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    ABTree,
+    DictOracle,
+    EMPTY,
+    OP_DELETE,
+    OP_INSERT,
+    OP_RANGE,
+    ScanConflictError,
+    TreeConfig,
+    range_query,
+)
+from repro.kernels.range_scan import range_scan, range_scan_pallas, range_scan_ref
+
+SMALL = TreeConfig(capacity=512, b=8, a=2, max_height=12)
+
+
+def _scan_items(out, i):
+    c = int(np.asarray(out.count)[i])
+    ks = np.asarray(out.keys)[i]
+    vs = np.asarray(out.vals)[i]
+    return [(int(ks[j]), int(vs[j])) for j in range(c)]
+
+
+def _check_scans(tree, oracle, los, his, cap=512):
+    out = tree.scan_round(los, his, cap=cap)
+    for i, (lo, hi) in enumerate(zip(los, his)):
+        want = oracle.range(int(lo), int(hi))
+        got = _scan_items(out, i)
+        if len(want) > cap:
+            assert bool(np.asarray(out.truncated)[i])
+            want = want[:cap]
+        else:
+            assert not bool(np.asarray(out.truncated)[i])
+        assert got == want, (i, int(lo), int(hi), got[:4], want[:4])
+        # padding beyond count is EMPTY
+        assert all(
+            int(k) == int(EMPTY) for k in np.asarray(out.keys)[i, len(got) :]
+        )
+    return out
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_scan_edge_ranges(mode):
+    """Empty / full / reversed / single-key / leaf-straddling ranges."""
+    t = ABTree(SMALL, mode=mode)
+    o = DictOracle()
+    keys = list(range(0, 400, 3))  # many leaves; boundaries at leaf splits
+    vals = [k * 7 for k in keys]
+    t.apply_round([OP_INSERT] * len(keys), keys, vals)
+    o.apply_round([OP_INSERT] * len(keys), keys, vals)
+    los = np.array([0, 50, 399, 100, 0, 250, 120, 10**9], np.int64)
+    his = np.array([400, 50, 400, 90, 10**9, 251, 131, 2 * 10**9], np.int64)
+    _check_scans(t, o, los, his)
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_scan_interleaved_with_update_rounds(mode):
+    """Randomized schedules of update rounds and scan rounds must stay
+    oracle-exact (and agree with the host range_query)."""
+    rng = np.random.default_rng(42)
+    t = ABTree(SMALL, mode=mode)
+    o = DictOracle()
+    for r in range(12):
+        bsz = 48
+        ops = rng.choice([OP_INSERT, OP_DELETE], bsz).astype(np.int32)
+        keys = rng.integers(0, 600, bsz).astype(np.int64)
+        vals = rng.integers(0, 1000, bsz).astype(np.int64)
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+        los = rng.integers(0, 600, 8).astype(np.int64)
+        his = los + rng.integers(0, 300, 8).astype(np.int64)
+        out = _check_scans(t, o, los, his)
+        # spot-check one query against the host-side DFS reader
+        assert _scan_items(out, 0) == range_query(t, int(los[0]), int(his[0]))
+
+
+def test_scan_output_shape_is_cap_even_for_tiny_trees():
+    """ScanOutput is (B, cap) regardless of how few candidate slots the
+    leaf frontier holds (regression: the ref used to clip to n < cap)."""
+    t = ABTree(SMALL)
+    t.apply_round([OP_INSERT] * 3, [1, 2, 3], [10, 20, 30])
+    out = t.scan_round([0, 2], [10, 3], cap=128)
+    assert out.keys.shape == (2, 128) and out.vals.shape == (2, 128)
+    assert _scan_items(out, 0) == [(1, 10), (2, 20), (3, 30)]
+    assert int(np.asarray(out.keys)[0, 127]) == int(EMPTY)
+
+
+def test_scan_truncation_at_capacity():
+    t = ABTree(SMALL)
+    o = DictOracle()
+    keys = list(range(200))
+    t.apply_round([OP_INSERT] * 200, keys, keys)
+    o.apply_round([OP_INSERT] * 200, keys, keys)
+    out = t.scan_round([0, 50], [200, 60], cap=16)
+    assert int(np.asarray(out.count)[0]) == 16
+    assert bool(np.asarray(out.truncated)[0])
+    assert _scan_items(out, 0) == o.range(0, 200)[:16]  # smallest keys win
+    assert int(np.asarray(out.count)[1]) == 10
+    assert not bool(np.asarray(out.truncated)[1])
+
+
+def test_scan_full_key_space_grows_frontier():
+    t = ABTree(TreeConfig(capacity=2048, b=8, a=2, max_height=12))
+    rng = np.random.default_rng(3)
+    keys = rng.choice(10**8, size=900, replace=False).astype(np.int64)
+    t.apply_round(np.full(900, OP_INSERT, np.int32), keys, keys)
+    f0 = t._scan_frontier
+    out = t.scan_round([0], [int(EMPTY) - 1], cap=1024)
+    assert int(np.asarray(out.count)[0]) == 900
+    assert t._scan_frontier > f0  # full-tree frontier forced doubling
+    got = [k for k, _ in _scan_items(out, 0)]
+    assert got == sorted(int(k) for k in keys)
+
+
+def test_scan_retry_then_conflict():
+    """An interleaved update round invalidates the scan (retry, counted in
+    stats); a persistent mutator exhausts retries → ScanConflictError."""
+    t = ABTree(SMALL)
+    o = DictOracle()
+    keys = list(range(100))
+    t.apply_round([OP_INSERT] * 100, keys, keys)
+    o.apply_round([OP_INSERT] * 100, keys, keys)
+
+    fired = []
+
+    def once():
+        if not fired:
+            fired.append(1)
+            t.apply_round([OP_DELETE] * 5, list(range(5)), [0] * 5)
+            o.apply_round([OP_DELETE] * 5, list(range(5)), [0] * 5)
+
+    t.scan_hook = once
+    out = t.scan_round([0], [50], cap=128)
+    t.scan_hook = None
+    assert _scan_items(out, 0) == o.range(0, 50)  # post-update linearization
+    assert t.stats()["scan_retries"] >= 1
+
+    flip = []
+
+    def always():
+        # toggle a key so every validation sees a bumped version (a same-
+        # round insert+delete would be eliminated without any write)
+        op = OP_INSERT if len(flip) % 2 == 0 else OP_DELETE
+        flip.append(1)
+        t.apply_round([op], [500], [1])
+
+    t.scan_hook = always
+    with pytest.raises(ScanConflictError):
+        t.scan_round([0], [1000], max_retries=3)
+    t.scan_hook = None
+
+
+def test_range_query_raises_scan_conflict_type():
+    assert issubclass(ScanConflictError, RuntimeError)
+
+
+def test_op_range_rejected_by_apply_round():
+    t = ABTree(SMALL)
+    with pytest.raises(ValueError, match="scan_round"):
+        t.apply_round([OP_RANGE], [0], [10])
+
+
+# ---------------------------------------------------------------------------
+# kernels/range_scan: Pallas kernel vs jnp ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "bsz,n,cap", [(1, 16, 4), (7, 48, 8), (64, 64, 16), (33, 96, 96), (4, 8, 16)]
+)
+def test_range_scan_kernel_matches_ref(bsz, n, cap):
+    rng = np.random.default_rng(bsz * 7 + n)
+    empty32 = np.iinfo(np.int32).max
+    keys = np.stack([rng.choice(10**6, size=n, replace=False) for _ in range(bsz)])
+    keys = np.where(rng.random((bsz, n)) < 0.25, empty32, keys).astype(np.int32)
+    vals = rng.integers(0, 10**6, (bsz, n)).astype(np.int32)
+    lo = rng.integers(0, 10**6, bsz).astype(np.int32)
+    hi = lo + rng.integers(0, 10**6, bsz).astype(np.int32)
+    got = range_scan_pallas(
+        jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi),
+        cap=cap, interpret=True,
+    )
+    want = range_scan_ref(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi), cap)
+    for g, w, name in zip(got, want, ("keys", "vals", "count", "truncated")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+def test_range_scan_ops_narrow_int64_roundtrip():
+    """ops.range_scan narrows 64-bit keys that fit in 32 bits onto the
+    kernel and widens the result, restoring the EMPTY sentinel."""
+    rng = np.random.default_rng(0)
+    bsz, n, cap = 5, 32, 8
+    empty = int(EMPTY)
+    keys = np.stack([rng.choice(10**6, size=n, replace=False) for _ in range(bsz)])
+    keys = np.where(rng.random((bsz, n)) < 0.3, empty, keys).astype(np.int64)
+    vals = rng.integers(0, 10**6, (bsz, n)).astype(np.int64)
+    lo = rng.integers(0, 10**6, bsz).astype(np.int64)
+    hi = lo + rng.integers(0, 10**6, bsz).astype(np.int64)
+    args = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi))
+    got = range_scan(*args, cap=cap, narrow=True)
+    want = range_scan_ref(*args, cap)
+    for g, w, name in zip(got, want, ("keys", "vals", "count", "truncated")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    assert got[0].dtype == jnp.int64
+
+
+# ---------------------------------------------------------------------------
+# workload + serving integration
+# ---------------------------------------------------------------------------
+
+
+def test_ycsb_e_stream_split():
+    from repro.data.workloads import WorkloadConfig, split_scan_round, ycsb_e_stream
+
+    wl = WorkloadConfig(key_range=1000, dist="zipf", batch=128, seed=2)
+    (ops, keys, vals) = next(iter(ycsb_e_stream(wl, 1, scan_frac=0.9, max_span=16)))
+    n_scan = int(np.sum(ops == OP_RANGE))
+    assert 0 < n_scan < len(ops)
+    (lo, hi), (pops, pkeys, pvals) = split_scan_round(ops, keys, vals)
+    assert lo.shape == hi.shape == (n_scan,)
+    assert np.all(hi > lo) and np.all(hi - lo <= 16)
+    assert not np.any(pops == OP_RANGE)
+    assert pops.shape == ops.shape  # result positions preserved
+    t = ABTree(SMALL)
+    t.scan_round(lo, hi, cap=32)
+    t.apply_round(pops, pkeys, pvals)
+
+
+def test_session_index_range_eviction():
+    from repro.serve.pages import SessionIndex
+
+    si = SessionIndex(mode="elim")
+    si.publish_batch(list(range(100, 140)), list(range(40)))
+    freed = si.evict_range(100, 120, cap=8)  # cap < matches → chunked sweep
+    assert sorted(freed) == list(range(20))
+    assert si.lookup_batch([105, 125]) == [None, 25]
+    assert sorted(si.evict_range(0, 1000)) == list(range(20, 40))
+    assert si.tree.items() == {}
