@@ -1,5 +1,7 @@
 """Benchmark aggregator — one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes each section's records
+to ``results/BENCH_<section>.json`` (machine-readable: ops/s, round
+counts, conflict retries, …) so the perf trajectory accumulates.
 
   microbench    — Figs 12–15 (uniform/zipf × update-rate grid, Elim vs OCC)
   ycsb          — Fig 16 (YCSB-A analog)
@@ -48,6 +50,8 @@ def main() -> None:
         "embed_elim": embed_elim.main,
         "kernels": kernels_bench.main,
     }
+    from benchmarks.common import drain_records, write_bench_json
+
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if args.only and name != args.only:
@@ -58,6 +62,10 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name}.ERROR,0.0,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+        records = drain_records()
+        if records:
+            path = write_bench_json(name, records)
+            print(f"# wrote {path}")
 
     # roofline summary (from the dry-run artifact, if present)
     if args.only in (None, "roofline"):

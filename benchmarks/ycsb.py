@@ -4,9 +4,15 @@
     pointer from the index then mutates the row payload (NOT the index) —
     index traffic is find-dominated, Zipf 0.5.
   E: 95% short range scans / 5% inserts (Zipf start keys) — the scan-heavy
-    mix served by the range-scan subsystem (``ABTree.scan_round``).
+    mix.  Runs FUSED by default: each mixed batch is ONE ``apply_round``
+    call (scans linearized before the round's writes by the round engine).
+    ``--scan-path split`` selects the legacy baseline (host-side
+    ``split_scan_round`` → one scan round + one point round per batch, 2×
+    the round count); ``--scan-path both`` (the default) A/Bs the two and
+    reports the round counts side by side.
 
-``python benchmarks/ycsb.py [--workload A|E] [--quick]``
+``python benchmarks/ycsb.py [--workload A|E] [--scan-path fused|split|both]
+[--quick]``
 """
 from __future__ import annotations
 
@@ -61,47 +67,96 @@ def _run_a(quick=False):
             f"ycsb_a.{mode}",
             dt / n_ops * 1e6,
             f"tx/s={n_ops/dt:.0f}",
+            ops_per_s=n_ops / dt,
+            rounds=rounds,
         )
 
 
-def _run_e(quick=False):
+def _run_e_path(mode, path, wl, rounds, cap):
+    """Run YCSB-E in one (tree mode, scan path) config; returns metrics.
+
+    fused: one ``apply_round`` per mixed batch (the round engine's fused
+    scan+update pipeline).  split: the legacy host-split baseline — one
+    ``scan_round`` + one ``apply_round`` per batch (2 rounds/batch)."""
+    key_range = wl.key_range
+    tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
+    prefill_tree(tree, wl)
+    # warm: several rounds so the scan frontier reaches steady state and
+    # every (frontier, cap) jit compile lands outside the timed region
+    # (the compile cache is shared across modes).
+    for ops, keys, vals in ycsb_e_stream(wl, 3):
+        if path == "fused":
+            tree.apply_round(ops, keys, vals, scan_cap=cap)
+        else:
+            (lo, hi), point = split_scan_round(ops, keys, vals)
+            tree.scan_round(lo, hi, cap=cap)
+            tree.apply_round(*point)
+    n_ops = n_items = n_rounds = 0
+    t0 = time.perf_counter()
+    for ops, keys, vals in ycsb_e_stream(wl, rounds):
+        if path == "fused":
+            out = tree.apply_round(ops, keys, vals, scan_cap=cap)
+            n_items += int(np.sum(np.asarray(out.scan.count)))
+            n_rounds += 1
+        else:
+            (lo, hi), point = split_scan_round(ops, keys, vals)
+            out = tree.scan_round(lo, hi, cap=cap)
+            tree.apply_round(*point)
+            n_items += int(np.sum(np.asarray(out.count)))
+            n_rounds += 2
+        n_ops += len(ops)
+    dt = time.perf_counter() - t0
+    return {
+        "ops_per_s": n_ops / dt,
+        "items_per_s": n_items / dt,
+        "rounds": n_rounds,
+        "scan_retries": tree.stats()["scan_retries"],
+        "us_per_op": dt / n_ops * 1e6,
+    }
+
+
+def _run_e(quick=False, scan_path="both"):
     key_range = 4096
     batch = 256
     rounds = 6 if quick else 20
     cap = 128
     wl = WorkloadConfig(key_range=key_range, dist="zipf", zipf_s=1.0, batch=batch, seed=5)
+    paths = ("fused", "split") if scan_path == "both" else (scan_path,)
     for mode in ("elim", "occ"):
-        tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
-        prefill_tree(tree, wl)
-        # warm both round types: several rounds so the scan frontier reaches
-        # steady state and every (frontier, cap) jit compile lands outside
-        # the timed region (the compile cache is shared across modes).
-        for ops, keys, vals in ycsb_e_stream(wl, 3):
-            (lo, hi), point = split_scan_round(ops, keys, vals)
-            tree.scan_round(lo, hi, cap=cap)
-            tree.apply_round(*point)
-        n_ops = n_items = 0
-        t0 = time.perf_counter()
-        for ops, keys, vals in ycsb_e_stream(wl, rounds):
-            (lo, hi), point = split_scan_round(ops, keys, vals)
-            out = tree.scan_round(lo, hi, cap=cap)
-            tree.apply_round(*point)
-            n_ops += len(ops)
-            n_items += int(np.sum(np.asarray(out.count)))
-        dt = time.perf_counter() - t0
-        emit(
-            f"ycsb_e.{mode}",
-            dt / n_ops * 1e6,
-            f"tx/s={n_ops/dt:.0f};items/s={n_items/dt:.0f};"
-            f"scan_retries={tree.stats()['scan_retries']}",
-        )
+        per_path = {}
+        for path in paths:
+            m = _run_e_path(mode, path, wl, rounds, cap)
+            per_path[path] = m
+            emit(
+                f"ycsb_e.{mode}.{path}",
+                m["us_per_op"],
+                f"tx/s={m['ops_per_s']:.0f};items/s={m['items_per_s']:.0f};"
+                f"rounds={m['rounds']};scan_retries={m['scan_retries']}",
+                ops_per_s=m["ops_per_s"],
+                rounds=m["rounds"],
+                conflict_retries=m["scan_retries"],
+            )
+        if scan_path == "both":
+            rf, rs = per_path["fused"]["rounds"], per_path["split"]["rounds"]
+            if rf >= rs:  # hard error, not assert: must survive python -O
+                raise RuntimeError(
+                    f"fused rounds {rf} not below split baseline {rs}"
+                )
+            emit(
+                f"ycsb_e.{mode}.fused_vs_split",
+                0.0,
+                f"rounds_fused={rf};rounds_split={rs};"
+                f"speedup={per_path['split']['us_per_op']/per_path['fused']['us_per_op']:.2f}x",
+                rounds_fused=rf,
+                rounds_split=rs,
+            )
 
 
-def main(quick=False, workload="A"):
+def main(quick=False, workload="A", scan_path="both"):
     if workload.upper() == "A":
         _run_a(quick=quick)
     elif workload.upper() == "E":
-        _run_e(quick=quick)
+        _run_e(quick=quick, scan_path=scan_path)
     else:
         raise ValueError(f"unknown YCSB workload {workload!r} (A or E)")
 
@@ -109,6 +164,15 @@ def main(quick=False, workload="A"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="A", choices=["A", "E", "a", "e"])
+    ap.add_argument(
+        "--scan-path",
+        default="both",
+        choices=["fused", "split", "both"],
+        help="workload E execution: 'fused' (mixed rounds, the engine's "
+        "default path), 'split' (legacy 2-rounds-per-batch baseline), or "
+        "'both' (default) — runs fused then split and reports the A/B "
+        "round-count comparison",
+    )
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    main(quick=args.quick, workload=args.workload)
+    main(quick=args.quick, workload=args.workload, scan_path=args.scan_path)

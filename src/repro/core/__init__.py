@@ -19,10 +19,12 @@ from repro.core.abtree import (  # noqa: E402
     OP_RANGE,
     EMPTY,
     NOTFOUND,
+    RoundOutput,
     ScanConflictError,
     ScanOutput,
     range_query,
 )
+from repro.core.rounds import RoundPlan, build_plan  # noqa: E402
 from repro.core.elimination import eliminate_batch, EliminationResult  # noqa: E402
 from repro.core.oracle import DictOracle, check_invariants  # noqa: E402
 from repro.core.durable import DurableABTree, CrashPoint, recover  # noqa: E402
@@ -38,8 +40,11 @@ __all__ = [
     "OP_RANGE",
     "EMPTY",
     "NOTFOUND",
+    "RoundOutput",
     "ScanConflictError",
     "ScanOutput",
+    "RoundPlan",
+    "build_plan",
     "range_query",
     "eliminate_batch",
     "EliminationResult",

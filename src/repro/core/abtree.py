@@ -36,18 +36,23 @@ condition there is inverted relative to Larsen–Fagerberg (distributing two
 nodes whose total is ≤ 2·MIN would leave one still underfull).  We implement
 the standard relaxed-(a,b) rule: merge when total ≤ b, else distribute
 evenly (each side ≥ a since total > b ≥ 2a).  See DESIGN.md §7.
+
+This module holds the tree *state* and the device-level phase primitives
+(descent, probe, net-op apply, structural waves, frontier expansion).
+Round execution — lane classification, the ordered phase pipeline, and the
+host orchestration of structural waves — lives in ``core/rounds.py``; the
+``ABTree`` entry points below are thin wrappers over that engine.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import elimination as elim
-from repro.kernels.range_scan.ref import range_scan_ref
 
 # ----------------------------------------------------------------------------
 # Constants & state
@@ -63,7 +68,9 @@ OP_NOP = int(elim.OP_NOP)
 OP_FIND = int(elim.OP_FIND)
 OP_INSERT = int(elim.OP_INSERT)
 OP_DELETE = int(elim.OP_DELETE)
-OP_RANGE = 4  # range scan [lo, hi) — routed through scan_round, never the combine
+# range scan [lo, lo+span) — served by the round engine's scan phase, which
+# linearizes it before the round's net writes; never reaches the combine.
+OP_RANGE = int(elim.OP_RANGE)
 
 INT_MAX = np.int32(2**31 - 1)
 KEY_MIN = jnp.iinfo(jnp.int64).min  # -inf bound for leftmost child ranges
@@ -657,13 +664,8 @@ def shrink_root(state: TreeState, cfg: TreeConfig) -> TreeState:
 
 
 # ----------------------------------------------------------------------------
-# jitted phase wrappers
+# Round outputs (produced by the core/rounds.py engine)
 # ----------------------------------------------------------------------------
-
-
-class RoundOutput(NamedTuple):
-    results: jax.Array  # (B,) per-op return value (NOTFOUND = ⊥)
-    found: jax.Array  # (B,) bool
 
 
 class ScanOutput(NamedTuple):
@@ -671,6 +673,15 @@ class ScanOutput(NamedTuple):
     vals: jax.Array  # (B, cap) values (0 where key slot is EMPTY)
     count: jax.Array  # (B,) int32 — entries emitted (≤ cap)
     truncated: jax.Array  # (B,) bool — more matches existed than cap
+
+
+class RoundOutput(NamedTuple):
+    results: jax.Array  # (B,) per-op return value (NOTFOUND = ⊥; range: #matches)
+    found: jax.Array  # (B,) bool (range lanes: any match)
+    # Per-lane scan rows for fused mixed-op rounds, aligned to the batch
+    # (non-range rows scan the empty interval).  None when the round had no
+    # OP_RANGE lane.
+    scan: Optional[ScanOutput] = None
 
 
 # ----------------------------------------------------------------------------
@@ -756,117 +767,16 @@ def frontier_expand(
     )
 
 
-@functools.partial(jax.jit, static_argnums=(1, 4, 5))
-def _phase_scan(state: TreeState, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int):
-    """jit: frontier expansion + in-range gather (jnp twin of
-    kernels/range_scan; the Pallas kernel serves int32 device keys)."""
-    leaves, ck, cv, touched, overflow = frontier_expand(state, cfg, lo, hi, frontier_cap)
-    keys, vals, count, truncated = range_scan_ref(ck, cv, lo, hi, cap)
-    return ScanOutput(keys=keys, vals=vals, count=count, truncated=truncated), touched, overflow
-
-
-@functools.partial(jax.jit, static_argnums=(2,))
-def _phase_search_combine(state: TreeState, batch, cfg: TreeConfig):
-    """jit: sort → descend → probe → eliminate.  Returns everything apply
-    needs plus per-op results in original arrival order."""
-    ops, keys, vals = batch
-    bsz = ops.shape[0]
-    sort_keys = jnp.where(ops == elim.OP_NOP, EMPTY, keys)
-    perm = jnp.argsort(sort_keys, stable=True)
-    inv = jnp.argsort(perm, stable=True)
-    ks = sort_keys[perm]
-    os_ = ops[perm]
-    vs = vals[perm]
-    arrival = perm.astype(jnp.int32)
-
-    seg_head = _segment_starts(ks)
-    leaf_ids = descend(state, ks, cfg)
-    found, slot, val0 = probe(state, leaf_ids, ks)
-
-    res = elim.eliminate_batch(os_, vs, seg_head, found, jnp.where(found, val0, 0))
-    rets_sorted = elim.op_return_values(os_, res, NOTFOUND)
-    results = rets_sorted[inv]
-    found_out = (rets_sorted != NOTFOUND)[inv]
-
-    stats = state.stats._replace(
-        searches=state.stats.searches + jnp.int64(bsz),
-        eliminated=state.stats.eliminated + res.n_eliminated.astype(jnp.int64),
-    )
-    state = state._replace(stats=stats)
-    return state, (ks, arrival, leaf_ids, slot, res, results, found_out)
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def _phase_apply(state: TreeState, cfg: TreeConfig, ks, arrival, leaf_ids, slot, res):
-    out = apply_net_ops(
-        state, cfg, leaf_ids, ks, slot,
-        res.net_insert, res.net_delete, res.net_overwrite, res.final_val,
-        arrival,
-    )
-    return out.state, out.deferred
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def _phase_retry_insert(state: TreeState, cfg: TreeConfig, ks, vals, arrival, deferred):
-    """Re-descend deferred keys and retry the insert (post-split)."""
-    leaf_ids = descend(state, ks, cfg)
-    found, slot, _ = probe(state, leaf_ids, ks)
-    net_insert = deferred & ~found
-    out = apply_net_ops(
-        state, cfg, leaf_ids, ks, slot,
-        net_insert,
-        jnp.zeros_like(deferred),
-        jnp.zeros_like(deferred),
-        vals,
-        arrival,
-    )
-    return out.state, out.deferred & deferred
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def _phase_overfull_leaves(state: TreeState, cfg: TreeConfig, ks, deferred):
-    """Unique (sentinel-padded, sorted) ids of full leaves holding deferred
-    inserts."""
-    leaf_ids = descend(state, ks, cfg)
-    full = deferred & (state.size[leaf_ids] >= cfg.b)
-    ids = jnp.where(full, leaf_ids, INT_MAX)
-    srt = jnp.sort(ids)
-    first = _segment_starts(srt)
-    return jnp.where(first, srt, INT_MAX)
-
-
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def _phase_split(state: TreeState, cfg: TreeConfig, w: int, node_ids, active):
-    return split_wave(state, cfg, node_ids, active)
-
-
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def _phase_underfull(state: TreeState, cfg: TreeConfig, w: int, node_ids, active):
-    return underfull_wave(state, cfg, node_ids, active)
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def _phase_shrink(state: TreeState, cfg: TreeConfig):
-    return shrink_root(state, cfg)
-
-
-def _pad_ids(ids: np.ndarray, w: int) -> Tuple[jax.Array, jax.Array]:
-    out = np.zeros((w,), np.int32)
-    act = np.zeros((w,), bool)
-    out[: ids.size] = ids
-    act[: ids.size] = True
-    return jnp.asarray(out), jnp.asarray(act)
-
-
 # ----------------------------------------------------------------------------
-# Host-orchestrated tree
+# Host-orchestrated tree (thin wrappers over the core/rounds.py engine)
 # ----------------------------------------------------------------------------
 
 
 class ABTree:
-    """Host-orchestrated batched (a,b)-tree.  Heavy phases are jitted; the
-    host loop only sequences structural waves (rare — the paper notes splits
-    are infrequent) and reads tiny control scalars."""
+    """Host-orchestrated batched (a,b)-tree.  Every entry point builds a
+    round plan and runs the ``core/rounds.py`` phase pipeline; heavy phases
+    are jitted and the host loop only sequences structural waves (rare —
+    the paper notes splits are infrequent) and reads tiny control scalars."""
 
     def __init__(self, cfg: TreeConfig = TreeConfig(), mode: str = "elim"):
         assert mode in ("elim", "occ")
@@ -889,28 +799,21 @@ class ABTree:
 
     # -- public API -----------------------------------------------------------
 
-    def apply_round(self, ops, keys, vals=None) -> RoundOutput:
+    def apply_round(self, ops, keys, vals=None, *, scan_cap: int = 128) -> RoundOutput:
         """Apply one round of concurrent ops (1-D arrays, equal length).
-        Returns per-op results in arrival order."""
-        if np.any(np.asarray(ops) == OP_RANGE):
-            # a hard error (not assert: -O must not let op code 4 reach the
-            # combine, where it would silently act as a find)
-            raise ValueError(
-                "OP_RANGE ops must be routed through scan_round "
-                "(see data/workloads.split_scan_round)"
-            )
-        ops = jnp.asarray(ops, jnp.int32)
-        keys = jnp.asarray(keys, KEY_DTYPE)
-        vals = jnp.zeros_like(keys) if vals is None else jnp.asarray(vals, VAL_DTYPE)
-        assert ops.shape == keys.shape == vals.shape and ops.ndim == 1
-        self._ensure_capacity(int(ops.shape[0]))
-        if self.mode == "elim":
-            out = self._elim_round(ops, keys, vals)
-        else:
-            out = self._occ_round(ops, keys, vals)
-        st = self.state.stats
-        self.state = self.state._replace(stats=st._replace(rounds=st.rounds + 1))
-        return out
+        Returns per-op results in arrival order.
+
+        Batches may freely mix point ops with OP_RANGE lanes (key = lo,
+        val = span → scan ``[lo, lo + span)``): the round engine runs the
+        scan phase before the round's net writes, so every range lane
+        observes the pre-round dictionary.  Range-lane results land in
+        ``RoundOutput.scan`` (≤ ``scan_cap`` smallest matches per lane);
+        their ``results`` entry is the match count.  Malformed range lanes
+        (negative span, i.e. hi < lo) raise ``ValueError``."""
+        from repro.core import rounds
+
+        plan = rounds.build_plan(ops, keys, vals, scan_cap=scan_cap)
+        return rounds.execute_plan(self, plan)
 
     def scan_round(self, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
         """Apply one round of concurrent range scans: for each query i,
@@ -924,6 +827,8 @@ class ABTree:
         (``ScanConflictError`` after ``max_retries``).  Scan rounds
         interleave legally with elim/occ update rounds at round granularity
         — each scan linearizes at its validation point."""
+        from repro.core import rounds
+
         lo = jnp.atleast_1d(jnp.asarray(lo, KEY_DTYPE))
         hi = jnp.atleast_1d(jnp.asarray(hi, KEY_DTYPE))
         assert lo.shape == hi.shape and lo.ndim == 1
@@ -937,7 +842,7 @@ class ABTree:
             )
         # pad the batch to a power-of-two bucket: workload rounds produce a
         # different scan count every round, and an exact-size jit would
-        # recompile _phase_scan for each.  Pad lanes scan [EMPTY, EMPTY):
+        # recompile the scan phase for each.  Pad lanes scan [EMPTY, EMPTY):
         # no child range satisfies chi > EMPTY, so they expand past the
         # root into nothing and add no nodes to the validated read set
         # (padding with [0, 0) would walk the leftmost spine and conflict
@@ -947,35 +852,48 @@ class ABTree:
             pad = jnp.full((padded - bsz,), EMPTY, KEY_DTYPE)
             lo = jnp.concatenate([lo, pad])
             hi = jnp.concatenate([hi, pad])
-        for attempt in range(max_retries):
-            snap = self.state
-            guard = 0
-            while True:
-                out, touched, overflow = _phase_scan(
-                    snap, self.cfg, lo, hi, self._scan_frontier, cap
-                )
-                if not bool(jnp.any(overflow)):
-                    break
-                guard += 1
-                assert guard < 32, "scan frontier growth diverged"
-                self._scan_frontier *= 2  # recompile-bounded (powers of two)
-            if self.scan_hook is not None:
-                self.scan_hook()
-            ids = np.unique(np.asarray(touched))
-            if np.array_equal(np.asarray(snap.ver)[ids], np.asarray(self.state.ver)[ids]):
-                st = self.state.stats
-                self.state = self.state._replace(
-                    stats=st._replace(
-                        scans=st.scans + jnp.int64(bsz),
-                        scan_retries=st.scan_retries + jnp.int64(attempt),
-                    )
-                )
-                if padded != bsz:
-                    out = ScanOutput(*(x[:bsz] for x in out))
-                return out
-        raise ScanConflictError(
-            f"scan_round: version validation failed {max_retries} times"
+        out = rounds.run_scan_phase(
+            self, lo, hi, cap, n_scan_ops=bsz, max_retries=max_retries
         )
+        if padded != bsz:
+            out = ScanOutput(*(x[:bsz] for x in out))
+        return out
+
+    def scan_delete_round(self, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
+        """ONE fused round that gathers every key in ``[lo_i, hi_i)``
+        (≤ ``cap`` smallest per query) and deletes the gathered keys —
+        the scan linearizes before the round's deletes, which target
+        exactly the snapshot it observed.  Returns the pre-delete scan
+        (the evicted keys/values); ``truncated`` marks queries with more
+        matches left to sweep."""
+        from repro.core import rounds
+
+        return rounds.execute_scan_delete(self, lo, hi, cap=cap, max_retries=max_retries)
+
+    def scan_stream(self, lo, hi, cap: int = 128):
+        """Stream all (key, value) pairs in ``[lo, hi)`` in ascending key
+        order as a generator, issuing successive ``cap``-bounded scan
+        rounds that resume from the last emitted key (the cursor /
+        continuation API over ``scan_round``'s fixed-capacity pages).
+
+        Each underlying round is individually validated; entries observed
+        by different rounds may straddle interleaved update rounds, as any
+        cursor over a concurrent map does."""
+        if cap <= 0:
+            raise ValueError(f"scan_stream: cap must be positive, got {cap}")
+        return self._scan_stream(int(lo), int(hi), cap)
+
+    def _scan_stream(self, cur: int, hi: int, cap: int):
+        while cur < hi:
+            out = self.scan_round([cur], [hi], cap=cap)
+            n = int(np.asarray(out.count)[0])
+            ks = np.asarray(out.keys)[0, :n]
+            vs = np.asarray(out.vals)[0, :n]
+            for k, v in zip(ks.tolist(), vs.tolist()):
+                yield int(k), int(v)
+            if not bool(np.asarray(out.truncated)[0]):
+                return
+            cur = int(ks[-1]) + 1
 
     def find(self, key) -> Optional[int]:
         out = self.apply_round([OP_FIND], [key])
@@ -1011,142 +929,6 @@ class ABTree:
 
     def stats(self) -> dict:
         return {k: int(v) for k, v in self.state.stats._asdict().items()}
-
-    # -- round internals ------------------------------------------------------
-
-    def _elim_round(self, ops, keys, vals) -> RoundOutput:
-        self.state, pack = _phase_search_combine(self.state, (ops, keys, vals), self.cfg)
-        ks, arrival, leaf_ids, slot, res, results, found = pack
-        self.state, deferred = _phase_apply(
-            self.state, self.cfg, ks, arrival, leaf_ids, slot, res
-        )
-        self._drain_deferred(ks, res.final_val, arrival, deferred)
-        self._fix_underfull_all()
-        return RoundOutput(results=results, found=found)
-
-    def _occ_round(self, ops, keys, vals) -> RoundOutput:
-        """OCC baseline: duplicate-rank sub-rounds, each fully physical."""
-        bsz = int(ops.shape[0])
-        kn = np.asarray(keys)
-        on = np.asarray(ops)
-        rank = np.zeros(bsz, np.int32)
-        seen: dict = {}
-        for i in range(bsz):
-            if on[i] == OP_NOP:
-                continue
-            k = int(kn[i])
-            rank[i] = seen.get(k, 0)
-            seen[k] = rank[i] + 1
-        n_sub = int(rank.max()) + 1 if bsz else 1
-        results = jnp.full((bsz,), NOTFOUND, VAL_DTYPE)
-        found = jnp.zeros((bsz,), bool)
-        for r in range(n_sub):
-            m = jnp.asarray(rank == r) & (ops != OP_NOP)
-            sub_ops = jnp.where(m, ops, OP_NOP)
-            self.state, pack = _phase_search_combine(
-                self.state, (sub_ops, keys, vals), self.cfg
-            )
-            ks, arrival, leaf_ids, slot, res, sub_results, sub_found = pack
-            self.state, deferred = _phase_apply(
-                self.state, self.cfg, ks, arrival, leaf_ids, slot, res
-            )
-            self._drain_deferred(ks, res.final_val, arrival, deferred)
-            self._fix_underfull_all()
-            results = jnp.where(m, sub_results, results)
-            found = jnp.where(m, sub_found, found)
-            st = self.state.stats
-            self.state = self.state._replace(
-                stats=st._replace(subrounds=st.subrounds + 1)
-            )
-            if self.subround_hook is not None:
-                self.subround_hook()
-        return RoundOutput(results=results, found=found)
-
-    # -- structural orchestration ----------------------------------------------
-
-    def _drain_deferred(self, ks, final_vals, arrival, deferred):
-        """Split overflowing leaves and retry deferred inserts until done."""
-        guard = 0
-        while bool(jnp.any(deferred)):
-            guard += 1
-            assert guard < 512 * self.cfg.max_height, "split loop diverged"
-            uniq = _phase_overfull_leaves(self.state, self.cfg, ks, deferred)
-            ids_np = np.asarray(uniq)
-            ids_np = ids_np[ids_np != INT_MAX].astype(np.int32)
-            if ids_np.size:
-                self._split_cascade(ids_np)
-            self.state, deferred = _phase_retry_insert(
-                self.state, self.cfg, ks, final_vals, arrival, deferred
-            )
-
-    def _split_cascade(self, ids_np: np.ndarray):
-        """Split the given full nodes.  A node whose parent is itself full is
-        postponed until the parent has split (pre-splitting ancestors) —
-        keeps every wave's parent-insert within capacity."""
-        work = {int(i) for i in ids_np}
-        guard = 0
-        while work:
-            guard += 1
-            assert guard < 512 * self.cfg.max_height, "split cascade diverged"
-            size = np.asarray(self.state.size)
-            parent = np.asarray(self.state.parent)
-            alloc = np.asarray(self.state.alloc)
-            # prune: stale entries that are no longer full / no longer allocated
-            work = {n for n in work if alloc[n] and size[n] >= self.cfg.b}
-            if not work:
-                break
-            ready, blocked_parents = [], []
-            for n in sorted(work):
-                p = int(parent[n])
-                if p >= 0 and size[p] >= self.cfg.b:
-                    blocked_parents.append(p)
-                else:
-                    ready.append(n)
-            if not ready:
-                # all blocked: split the blocking parents first
-                work |= set(blocked_parents)
-                size = None
-                continue
-            ready_np = _independent_by_parent(self.state, np.asarray(ready, np.int32))
-            ready_np = ready_np[: self._wave_w]  # fixed wave width (no recompiles)
-            self._ensure_capacity(2 * int(ready_np.size))
-            node_ids, active = _pad_ids(ready_np, self._wave_w)
-            self.state = _phase_split(self.state, self.cfg, self._wave_w, node_ids, active)
-            for n in ready_np.tolist():
-                work.discard(int(n))
-            work |= set(blocked_parents)
-
-    def _fix_underfull_all(self):
-        """Merge/distribute every underfull non-root node, bottom-up waves."""
-        guard = 0
-        while True:
-            guard += 1
-            assert guard < 512 * self.cfg.max_height, "underfull loop diverged"
-            s = self.state
-            alloc = np.asarray(s.alloc)
-            size = np.asarray(s.size)
-            parent = np.asarray(s.parent)
-            level = np.asarray(s.level)
-            root = int(s.root)
-            under = alloc & (size < self.cfg.a) & (parent >= 0)
-            under[root] = False
-            ids = np.nonzero(under)[0].astype(np.int32)
-            actionable = ids[size[parent[ids]] >= 2] if ids.size else ids
-            if actionable.size:
-                lv = level[actionable].min()
-                sel = actionable[level[actionable] == lv]
-                sel = _independent_by_parent(self.state, sel)
-                sel = sel[: self._wave_w]  # fixed wave width (no recompiles)
-                node_ids, active = _pad_ids(sel, self._wave_w)
-                self.state = _phase_underfull(
-                    self.state, self.cfg, self._wave_w, node_ids, active
-                )
-                continue
-            # nothing actionable: shrink a single-child root chain, else done.
-            if (not bool(np.asarray(s.is_leaf)[root])) and int(size[root]) == 1:
-                self.state = _phase_shrink(self.state, self.cfg)
-                continue
-            break
 
     # -- pool management --------------------------------------------------------
 
@@ -1189,19 +971,6 @@ class ABTree:
             stats=old.stats,
         )
         self.cfg = cfg._replace(capacity=new_cap)
-
-
-def _independent_by_parent(state: TreeState, ids_np: np.ndarray) -> np.ndarray:
-    """Host-side: keep one node per parent (lowest id first)."""
-    if ids_np.size == 0:
-        return ids_np
-    parent = np.asarray(state.parent)[ids_np]
-    keep, seen = [], set()
-    for nid, p in zip(ids_np.tolist(), parent.tolist()):
-        if int(p) not in seen:
-            seen.add(int(p))
-            keep.append(int(nid))
-    return np.asarray(keep, np.int32)
 
 
 # ----------------------------------------------------------------------------

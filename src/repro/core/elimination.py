@@ -49,10 +49,35 @@ OP_NOP = jnp.int32(0)
 OP_FIND = jnp.int32(1)
 OP_INSERT = jnp.int32(2)
 OP_DELETE = jnp.int32(3)
+# Range scan [lo, lo+span).  OP_RANGE lanes never enter the combine: they
+# are read-only and linearize before the round's net writes (core/rounds.py
+# runs the scan phase first), so `lane_masks`/`mask_range_lanes` below strip
+# them from the batch the elimination fold sees.
+OP_RANGE = jnp.int32(4)
 
 KIND_ABSENT = jnp.int32(0)
 KIND_CONST = jnp.int32(1)
 KIND_KEEP = jnp.int32(2)
+
+
+def lane_masks(ops: jax.Array):
+    """Classify a mixed batch's lanes: ``(is_point, is_range)`` boolean masks.
+
+    Point lanes (find/insert/delete) flow through search → combine → apply;
+    range lanes are served by the scan phase.  OP_NOP lanes are in neither
+    mask (they produce ⊥ without touching any phase).
+    """
+    ops = jnp.asarray(ops)
+    is_range = ops == OP_RANGE
+    is_point = (ops == OP_FIND) | (ops == OP_INSERT) | (ops == OP_DELETE)
+    return is_point, is_range
+
+
+def mask_range_lanes(ops: jax.Array) -> jax.Array:
+    """OP_RANGE → OP_NOP, preserving lane positions.  Guarantees op code 4
+    can never reach the combine (where it would silently act as a find)."""
+    ops = jnp.asarray(ops)
+    return jnp.where(ops == OP_RANGE, OP_NOP, ops).astype(jnp.int32)
 
 
 class Transition(NamedTuple):

@@ -19,7 +19,7 @@ paper's Theorem 3.5 invariants in their batched form:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -30,6 +30,7 @@ from repro.core.abtree import (
     OP_FIND,
     OP_INSERT,
     OP_NOP,
+    OP_RANGE,
     TreeState,
 )
 
@@ -43,35 +44,72 @@ class DictOracle:
     def __init__(self):
         self.d: Dict[int, int] = {}
 
+    def _apply_point(self, op: int, k: int, v: int) -> Tuple[int, bool]:
+        if op == OP_NOP:
+            return _NOTFOUND, False
+        if op == OP_FIND:
+            r = self.d.get(k)
+            return (_NOTFOUND if r is None else r), r is not None
+        if op == OP_INSERT:
+            r = self.d.get(k)
+            if r is None:
+                self.d[k] = v
+                return _NOTFOUND, False
+            return r, True  # paper: insert returns existing value
+        if op == OP_DELETE:
+            r = self.d.pop(k, None)
+            return (_NOTFOUND if r is None else r), r is not None
+        raise ValueError(f"bad op {op}")
+
     def apply_round(
         self, ops: Sequence[int], keys: Sequence[int], vals: Sequence[int]
     ) -> Tuple[List[int], List[bool]]:
         results, found = [], []
         for op, k, v in zip(ops, keys, vals):
-            op, k, v = int(op), int(k), int(v)
-            if op == OP_NOP:
-                results.append(_NOTFOUND)
-                found.append(False)
-            elif op == OP_FIND:
-                r = self.d.get(k)
-                results.append(_NOTFOUND if r is None else r)
-                found.append(r is not None)
-            elif op == OP_INSERT:
-                r = self.d.get(k)
-                if r is None:
-                    self.d[k] = v
-                    results.append(_NOTFOUND)
-                    found.append(False)
-                else:
-                    results.append(r)  # paper: insert returns existing value
-                    found.append(True)
-            elif op == OP_DELETE:
-                r = self.d.pop(k, None)
-                results.append(_NOTFOUND if r is None else r)
-                found.append(r is not None)
-            else:
-                raise ValueError(f"bad op {op}")
+            r, f = self._apply_point(int(op), int(k), int(v))
+            results.append(r)
+            found.append(f)
         return results, found
+
+    def apply_mixed_round(
+        self,
+        ops: Sequence[int],
+        keys: Sequence[int],
+        vals: Sequence[int],
+        cap: Optional[int] = None,
+    ) -> Tuple[List[int], List[bool], List[Optional[List[Tuple[int, int]]]]]:
+        """Reference semantics of one FUSED round (the round engine's
+        linearization): every OP_RANGE lane (key = lo, val = span) scans the
+        dictionary *as of round start* — scans linearize before the round's
+        net writes — then point lanes apply in arrival order.
+
+        Returns ``(results, found, scans)``: ``scans[i]`` is the ascending
+        (k, v) list for lane i (clipped to ``cap``, matching a truncated
+        device scan) or None on point lanes; a range lane's ``results``
+        entry is its match count and ``found`` ⇔ non-empty.
+        """
+        snapshot = sorted(self.d.items())
+        results: List[int] = []
+        found: List[bool] = []
+        scans: List[Optional[List[Tuple[int, int]]]] = []
+        for op, k, v in zip(ops, keys, vals):
+            op, k, v = int(op), int(k), int(v)
+            if op == OP_RANGE:
+                if v < 0:
+                    raise ValueError(f"malformed OP_RANGE lane: negative span {v}")
+                lo, hi = k, k + v
+                items = [(kk, vv) for kk, vv in snapshot if lo <= kk < hi]
+                if cap is not None:
+                    items = items[:cap]
+                scans.append(items)
+                results.append(len(items))
+                found.append(bool(items))
+            else:
+                r, f = self._apply_point(op, k, v)
+                results.append(r)
+                found.append(f)
+                scans.append(None)
+        return results, found, scans
 
     def items(self) -> dict:
         return dict(sorted(self.d.items()))

@@ -1,0 +1,537 @@
+"""Unified round engine: one composable phase pipeline behind every round.
+
+A *round* is a batch of mutually concurrent dictionary operations.  This
+module owns the execution of rounds: the public ``ABTree`` entry points
+(``apply_round``, ``scan_round``, ``scan_delete_round``) are thin wrappers
+that build a :class:`RoundPlan` (lane classification) and hand it to
+:func:`execute_plan`, which sequences the ordered phase pipeline
+
+    scan → search/combine → apply → retry → rebalance
+
+Phase ↔ paper terminology (Elimination (a,b)-trees, §3–§4):
+
+  ``scan``            the optimistic-reader discipline of ``searchLeaf``
+                      generalized to a leaf frontier: gather against a state
+                      snapshot, record every node read, re-validate versions
+                      (retry on conflict).  Runs FIRST, so every scan in a
+                      round linearizes *before* the round's net writes —
+                      range lanes observe the pre-round dictionary.
+  ``search/combine``  the paper's ``search`` (root-to-leaf descent + unsorted
+                      leaf probe) followed by the publishing-elimination
+                      combine (§4): all ops on one key fold to ≤ 1 net
+                      physical write; eliminated ops compute their return
+                      values from the published ElimRecord.
+  ``apply``           the collapsed net writes — the paper's leaf slot
+                      write + version bump (+2, odd intermediate stamped on
+                      the ElimRecord, §4.1).
+  ``retry``           deferred inserts (leaf full) re-descend after the
+                      splits their overflow triggered — the batched analog
+                      of a thread retrying after helping a split.
+  ``rebalance``       relaxed-rebalancing waves of the Larsen–Fagerberg
+                      sub-operations (split / merge / distribute), each wave
+                      touching ≤ 1 violating child per parent (§3's
+                      fixTagged / fixUnderfull chains, batched).
+
+Lane classes (``RoundPlan``):
+
+  * **elim-combine / occ** — point ops (find/insert/delete).  In ``elim``
+    mode the whole batch runs one combine; in ``occ`` mode duplicate keys
+    force sub-rounds (duplicate-rank r executes in sub-round r).
+  * **range** — OP_RANGE lanes ``[lo, lo+span)`` (key = lo, val = span),
+    served by the scan phase via ``kernels/range_scan``.  Mixed batches need
+    no host-side splitting: one ``apply_round`` call executes every lane and
+    returns per-lane results in one ``RoundOutput`` (scan rows aligned to
+    the batch; non-range rows scan the empty interval).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elimination as elim
+from repro.core.abtree import (
+    EMPTY,
+    INT_MAX,
+    KEY_DTYPE,
+    NOTFOUND,
+    OP_DELETE,
+    OP_INSERT,
+    OP_NOP,
+    OP_RANGE,
+    RoundOutput,
+    ScanConflictError,
+    ScanOutput,
+    TreeConfig,
+    TreeState,
+    VAL_DTYPE,
+    apply_net_ops,
+    descend,
+    frontier_expand,
+    probe,
+    shrink_root,
+    split_wave,
+    underfull_wave,
+    _segment_starts,
+)
+from repro.kernels.range_scan.ops import range_scan
+
+# ----------------------------------------------------------------------------
+# Round plans: lane classification
+# ----------------------------------------------------------------------------
+
+
+class RoundPlan(NamedTuple):
+    """A classified round: which lanes take which pipeline, plus the derived
+    per-lane scan intervals.  Built host-side once per round by
+    :func:`build_plan`; the phase selection flags are host booleans so the
+    engine only launches the phases the batch actually needs."""
+
+    ops: jax.Array  # (B,) int32 — original lane opcodes
+    point_ops: jax.Array  # (B,) int32 — OP_RANGE masked to OP_NOP
+    keys: jax.Array  # (B,) KEY_DTYPE
+    vals: jax.Array  # (B,) VAL_DTYPE (span on range lanes)
+    lo: jax.Array  # (B,) scan lower bounds; EMPTY on non-range lanes
+    hi: jax.Array  # (B,) scan upper bounds; EMPTY on non-range lanes
+    is_range: jax.Array  # (B,) bool
+    has_point: bool  # any find/insert/delete lane
+    has_range: bool  # any OP_RANGE lane
+    n_range: int
+    scan_cap: int
+
+
+def build_plan(ops, keys, vals=None, *, scan_cap: int = 128) -> RoundPlan:
+    """Classify one round's lanes and derive the range lanes' intervals.
+
+    OP_RANGE lane encoding: ``key = lo``, ``val = span`` → the lane scans
+    ``[lo, lo + span)`` (``span == 0`` is a legal empty scan).  Raises
+    ``ValueError`` for malformed range lanes (``span < 0``, i.e. hi < lo)
+    and for unknown op codes.
+    """
+    ops_np = np.asarray(ops, np.int32)
+    keys_np = np.asarray(keys, np.int64)
+    vals_np = (
+        np.zeros_like(keys_np) if vals is None else np.asarray(vals, np.int64)
+    )
+    if not (ops_np.shape == keys_np.shape == vals_np.shape and ops_np.ndim == 1):
+        raise ValueError("apply_round expects equal-length 1-D ops/keys/vals")
+    if ops_np.size and (ops_np.min() < int(OP_NOP) or ops_np.max() > int(OP_RANGE)):
+        bad = ops_np[(ops_np < int(OP_NOP)) | (ops_np > int(OP_RANGE))][0]
+        raise ValueError(f"unknown op code {int(bad)}")
+    is_range_np = ops_np == OP_RANGE
+    if np.any(is_range_np & (vals_np < 0)):
+        lane = int(np.nonzero(is_range_np & (vals_np < 0))[0][0])
+        raise ValueError(
+            f"malformed OP_RANGE lane {lane}: negative span {int(vals_np[lane])} "
+            f"(hi = lo + span < lo)"
+        )
+    n_range = int(is_range_np.sum())
+    has_point = bool(np.any((ops_np > int(OP_NOP)) & ~is_range_np))
+
+    ops_j = jnp.asarray(ops_np)
+    keys_j = jnp.asarray(keys_np, KEY_DTYPE)
+    vals_j = jnp.asarray(vals_np, VAL_DTYPE)
+    is_range = jnp.asarray(is_range_np)
+    # hi = lo + span, saturating at EMPTY: a span reaching past the top of
+    # the key space must scan "everything ≥ lo" (matching the unbounded
+    # oracle), not wrap to a negative int64 bound that scans nothing.
+    with np.errstate(over="ignore"):
+        hi_np = keys_np + vals_np
+    hi_np = np.where(is_range_np & (hi_np < keys_np), int(EMPTY), hi_np)
+    # Non-range lanes scan the empty interval [EMPTY, EMPTY): they expand
+    # past the root into nothing and add no nodes to the validated read set.
+    lo = jnp.where(is_range, keys_j, EMPTY)
+    hi = jnp.where(is_range, jnp.asarray(hi_np, KEY_DTYPE), EMPTY)
+    return RoundPlan(
+        ops=ops_j,
+        point_ops=elim.mask_range_lanes(ops_j),
+        keys=keys_j,
+        vals=vals_j,
+        lo=lo,
+        hi=hi,
+        is_range=is_range,
+        has_point=has_point,
+        has_range=n_range > 0,
+        n_range=n_range,
+        scan_cap=scan_cap,
+    )
+
+
+# ----------------------------------------------------------------------------
+# jitted phase kernels (device work; host code below only sequences them)
+# ----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1, 4, 5))
+def _phase_scan(state: TreeState, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int):
+    """jit: frontier expansion + in-range gather.  The gather goes through
+    ``kernels/range_scan``'s dispatching wrapper: int64 host-index keys take
+    the jnp reference, int32 device keys the Pallas kernel."""
+    leaves, ck, cv, touched, overflow = frontier_expand(state, cfg, lo, hi, frontier_cap)
+    keys, vals, count, truncated = range_scan(ck, cv, lo, hi, cap=cap)
+    return ScanOutput(keys=keys, vals=vals, count=count, truncated=truncated), touched, overflow
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _phase_search_combine(state: TreeState, batch, cfg: TreeConfig):
+    """jit: sort → descend → probe → eliminate.  Returns everything apply
+    needs plus per-op results in original arrival order."""
+    ops, keys, vals = batch
+    bsz = ops.shape[0]
+    sort_keys = jnp.where(ops == elim.OP_NOP, EMPTY, keys)
+    perm = jnp.argsort(sort_keys, stable=True)
+    inv = jnp.argsort(perm, stable=True)
+    ks = sort_keys[perm]
+    os_ = ops[perm]
+    vs = vals[perm]
+    arrival = perm.astype(jnp.int32)
+
+    seg_head = _segment_starts(ks)
+    leaf_ids = descend(state, ks, cfg)
+    found, slot, val0 = probe(state, leaf_ids, ks)
+
+    res = elim.eliminate_batch(os_, vs, seg_head, found, jnp.where(found, val0, 0))
+    rets_sorted = elim.op_return_values(os_, res, NOTFOUND)
+    results = rets_sorted[inv]
+    found_out = (rets_sorted != NOTFOUND)[inv]
+
+    stats = state.stats._replace(
+        searches=state.stats.searches + jnp.int64(bsz),
+        eliminated=state.stats.eliminated + res.n_eliminated.astype(jnp.int64),
+    )
+    state = state._replace(stats=stats)
+    return state, (ks, arrival, leaf_ids, slot, res, results, found_out)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_apply(state: TreeState, cfg: TreeConfig, ks, arrival, leaf_ids, slot, res):
+    out = apply_net_ops(
+        state, cfg, leaf_ids, ks, slot,
+        res.net_insert, res.net_delete, res.net_overwrite, res.final_val,
+        arrival,
+    )
+    return out.state, out.deferred
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_retry_insert(state: TreeState, cfg: TreeConfig, ks, vals, arrival, deferred):
+    """Re-descend deferred keys and retry the insert (post-split)."""
+    leaf_ids = descend(state, ks, cfg)
+    found, slot, _ = probe(state, leaf_ids, ks)
+    net_insert = deferred & ~found
+    out = apply_net_ops(
+        state, cfg, leaf_ids, ks, slot,
+        net_insert,
+        jnp.zeros_like(deferred),
+        jnp.zeros_like(deferred),
+        vals,
+        arrival,
+    )
+    return out.state, out.deferred & deferred
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_overfull_leaves(state: TreeState, cfg: TreeConfig, ks, deferred):
+    """Unique (sentinel-padded, sorted) ids of full leaves holding deferred
+    inserts."""
+    leaf_ids = descend(state, ks, cfg)
+    full = deferred & (state.size[leaf_ids] >= cfg.b)
+    ids = jnp.where(full, leaf_ids, INT_MAX)
+    srt = jnp.sort(ids)
+    first = _segment_starts(srt)
+    return jnp.where(first, srt, INT_MAX)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _phase_split(state: TreeState, cfg: TreeConfig, w: int, node_ids, active):
+    return split_wave(state, cfg, node_ids, active)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _phase_underfull(state: TreeState, cfg: TreeConfig, w: int, node_ids, active):
+    return underfull_wave(state, cfg, node_ids, active)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _phase_shrink(state: TreeState, cfg: TreeConfig):
+    return shrink_root(state, cfg)
+
+
+def _pad_ids(ids: np.ndarray, w: int) -> Tuple[jax.Array, jax.Array]:
+    out = np.zeros((w,), np.int32)
+    act = np.zeros((w,), bool)
+    out[: ids.size] = ids
+    act[: ids.size] = True
+    return jnp.asarray(out), jnp.asarray(act)
+
+
+def _independent_by_parent(state: TreeState, ids_np: np.ndarray) -> np.ndarray:
+    """Host-side: keep one node per parent (lowest id first)."""
+    if ids_np.size == 0:
+        return ids_np
+    parent = np.asarray(state.parent)[ids_np]
+    keep, seen = [], set()
+    for nid, p in zip(ids_np.tolist(), parent.tolist()):
+        if int(p) not in seen:
+            seen.add(int(p))
+            keep.append(int(nid))
+    return np.asarray(keep, np.int32)
+
+
+# ----------------------------------------------------------------------------
+# Phase: scan (optimistic reader; linearizes before the round's writes)
+# ----------------------------------------------------------------------------
+
+
+def run_scan_phase(
+    tree, lo: jax.Array, hi: jax.Array, cap: int, *, n_scan_ops: int,
+    max_retries: int = 8,
+) -> ScanOutput:
+    """Gather each query's matches from a state snapshot, then validate the
+    touched-node versions against the live state (retrying on conflict —
+    ``ScanConflictError`` after ``max_retries``).  Within a round the engine
+    runs this before any write, so validation only fails when another actor
+    (``tree.scan_hook``, modeling other engine replicas) mutates the tree
+    between gather and validation."""
+    for attempt in range(max_retries):
+        snap = tree.state
+        guard = 0
+        while True:
+            out, touched, overflow = _phase_scan(
+                snap, tree.cfg, lo, hi, tree._scan_frontier, cap
+            )
+            if not bool(jnp.any(overflow)):
+                break
+            guard += 1
+            assert guard < 32, "scan frontier growth diverged"
+            tree._scan_frontier *= 2  # recompile-bounded (powers of two)
+        if tree.scan_hook is not None:
+            tree.scan_hook()
+        ids = np.unique(np.asarray(touched))
+        if np.array_equal(np.asarray(snap.ver)[ids], np.asarray(tree.state.ver)[ids]):
+            st = tree.state.stats
+            tree.state = tree.state._replace(
+                stats=st._replace(
+                    scans=st.scans + jnp.int64(n_scan_ops),
+                    scan_retries=st.scan_retries + jnp.int64(attempt),
+                )
+            )
+            return out
+    raise ScanConflictError(
+        f"scan phase: version validation failed {max_retries} times"
+    )
+
+
+# ----------------------------------------------------------------------------
+# Phases: search/combine → apply → retry → rebalance (point lanes)
+# ----------------------------------------------------------------------------
+
+
+def run_point_phases(tree, ops, keys, vals) -> Tuple[jax.Array, jax.Array]:
+    """Execute the point-op pipeline in the tree's mode.  ``ops`` must be
+    free of OP_RANGE (the plan builder masks range lanes to OP_NOP)."""
+    if tree.mode == "elim":
+        return _elim_point_round(tree, ops, keys, vals)
+    return _occ_point_round(tree, ops, keys, vals)
+
+
+def _elim_point_round(tree, ops, keys, vals):
+    """Elim-ABtree: the whole batch runs one combine; ≤ 1 net write per key."""
+    tree.state, pack = _phase_search_combine(tree.state, (ops, keys, vals), tree.cfg)
+    ks, arrival, leaf_ids, slot, res, results, found = pack
+    tree.state, deferred = _phase_apply(
+        tree.state, tree.cfg, ks, arrival, leaf_ids, slot, res
+    )
+    _drain_deferred(tree, ks, res.final_val, arrival, deferred)
+    _fix_underfull_all(tree)
+    return results, found
+
+
+def _occ_point_round(tree, ops, keys, vals):
+    """OCC baseline: duplicate-rank sub-rounds, each fully physical."""
+    bsz = int(ops.shape[0])
+    kn = np.asarray(keys)
+    on = np.asarray(ops)
+    rank = np.zeros(bsz, np.int32)
+    seen: dict = {}
+    for i in range(bsz):
+        if on[i] == OP_NOP:
+            continue
+        k = int(kn[i])
+        rank[i] = seen.get(k, 0)
+        seen[k] = rank[i] + 1
+    n_sub = int(rank.max()) + 1 if bsz else 1
+    results = jnp.full((bsz,), NOTFOUND, VAL_DTYPE)
+    found = jnp.zeros((bsz,), bool)
+    for r in range(n_sub):
+        m = jnp.asarray(rank == r) & (ops != OP_NOP)
+        sub_ops = jnp.where(m, ops, OP_NOP)
+        tree.state, pack = _phase_search_combine(
+            tree.state, (sub_ops, keys, vals), tree.cfg
+        )
+        ks, arrival, leaf_ids, slot, res, sub_results, sub_found = pack
+        tree.state, deferred = _phase_apply(
+            tree.state, tree.cfg, ks, arrival, leaf_ids, slot, res
+        )
+        _drain_deferred(tree, ks, res.final_val, arrival, deferred)
+        _fix_underfull_all(tree)
+        results = jnp.where(m, sub_results, results)
+        found = jnp.where(m, sub_found, found)
+        st = tree.state.stats
+        tree.state = tree.state._replace(
+            stats=st._replace(subrounds=st.subrounds + 1)
+        )
+        if tree.subround_hook is not None:
+            tree.subround_hook()
+    return results, found
+
+
+def _drain_deferred(tree, ks, final_vals, arrival, deferred):
+    """Retry phase: split overflowing leaves and re-apply deferred inserts
+    until none remain."""
+    guard = 0
+    while bool(jnp.any(deferred)):
+        guard += 1
+        assert guard < 512 * tree.cfg.max_height, "split loop diverged"
+        uniq = _phase_overfull_leaves(tree.state, tree.cfg, ks, deferred)
+        ids_np = np.asarray(uniq)
+        ids_np = ids_np[ids_np != INT_MAX].astype(np.int32)
+        if ids_np.size:
+            _split_cascade(tree, ids_np)
+        tree.state, deferred = _phase_retry_insert(
+            tree.state, tree.cfg, ks, final_vals, arrival, deferred
+        )
+
+
+def _split_cascade(tree, ids_np: np.ndarray):
+    """Split the given full nodes.  A node whose parent is itself full is
+    postponed until the parent has split (pre-splitting ancestors) —
+    keeps every wave's parent-insert within capacity."""
+    work = {int(i) for i in ids_np}
+    guard = 0
+    while work:
+        guard += 1
+        assert guard < 512 * tree.cfg.max_height, "split cascade diverged"
+        size = np.asarray(tree.state.size)
+        parent = np.asarray(tree.state.parent)
+        alloc = np.asarray(tree.state.alloc)
+        # prune: stale entries that are no longer full / no longer allocated
+        work = {n for n in work if alloc[n] and size[n] >= tree.cfg.b}
+        if not work:
+            break
+        ready, blocked_parents = [], []
+        for n in sorted(work):
+            p = int(parent[n])
+            if p >= 0 and size[p] >= tree.cfg.b:
+                blocked_parents.append(p)
+            else:
+                ready.append(n)
+        if not ready:
+            # all blocked: split the blocking parents first
+            work |= set(blocked_parents)
+            size = None
+            continue
+        ready_np = _independent_by_parent(tree.state, np.asarray(ready, np.int32))
+        ready_np = ready_np[: tree._wave_w]  # fixed wave width (no recompiles)
+        tree._ensure_capacity(2 * int(ready_np.size))
+        node_ids, active = _pad_ids(ready_np, tree._wave_w)
+        tree.state = _phase_split(tree.state, tree.cfg, tree._wave_w, node_ids, active)
+        for n in ready_np.tolist():
+            work.discard(int(n))
+        work |= set(blocked_parents)
+
+
+def _fix_underfull_all(tree):
+    """Rebalance phase: merge/distribute every underfull non-root node,
+    bottom-up waves."""
+    guard = 0
+    while True:
+        guard += 1
+        assert guard < 512 * tree.cfg.max_height, "underfull loop diverged"
+        s = tree.state
+        alloc = np.asarray(s.alloc)
+        size = np.asarray(s.size)
+        parent = np.asarray(s.parent)
+        level = np.asarray(s.level)
+        root = int(s.root)
+        under = alloc & (size < tree.cfg.a) & (parent >= 0)
+        under[root] = False
+        ids = np.nonzero(under)[0].astype(np.int32)
+        actionable = ids[size[parent[ids]] >= 2] if ids.size else ids
+        if actionable.size:
+            lv = level[actionable].min()
+            sel = actionable[level[actionable] == lv]
+            sel = _independent_by_parent(tree.state, sel)
+            sel = sel[: tree._wave_w]  # fixed wave width (no recompiles)
+            node_ids, active = _pad_ids(sel, tree._wave_w)
+            tree.state = _phase_underfull(
+                tree.state, tree.cfg, tree._wave_w, node_ids, active
+            )
+            continue
+        # nothing actionable: shrink a single-child root chain, else done.
+        if (not bool(np.asarray(s.is_leaf)[root])) and int(size[root]) == 1:
+            tree.state = _phase_shrink(tree.state, tree.cfg)
+            continue
+        break
+
+
+# ----------------------------------------------------------------------------
+# Plan execution
+# ----------------------------------------------------------------------------
+
+
+def execute_plan(tree, plan: RoundPlan) -> RoundOutput:
+    """Run one round through the phase pipeline.
+
+    Phase order fixes the linearization: range lanes gather from the
+    pre-round state (scan phase first), point lanes then apply in arrival
+    order per key.  Returns per-lane results in one ``RoundOutput``:
+    point lanes get the §3 dictionary return values; range lanes get their
+    match count in ``results`` (``found`` ⇔ non-empty) and their rows in
+    ``RoundOutput.scan`` (batch-aligned; non-range rows are empty)."""
+    bsz = int(plan.ops.shape[0])
+    scan_out: Optional[ScanOutput] = None
+    if plan.has_range:
+        scan_out = run_scan_phase(
+            tree, plan.lo, plan.hi, plan.scan_cap, n_scan_ops=plan.n_range
+        )
+    if plan.has_point:
+        tree._ensure_capacity(bsz)
+        results, found = run_point_phases(tree, plan.point_ops, plan.keys, plan.vals)
+    else:
+        results = jnp.full((bsz,), NOTFOUND, VAL_DTYPE)
+        found = jnp.zeros((bsz,), bool)
+    if scan_out is not None:
+        results = jnp.where(plan.is_range, scan_out.count.astype(VAL_DTYPE), results)
+        found = jnp.where(plan.is_range, scan_out.count > 0, found)
+    st = tree.state.stats
+    tree.state = tree.state._replace(stats=st._replace(rounds=st.rounds + 1))
+    return RoundOutput(results=results, found=found, scan=scan_out)
+
+
+def execute_scan_delete(tree, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
+    """One fused scan+delete round: gather every key in ``[lo_i, hi_i)``
+    (≤ ``cap`` smallest per query) and delete the gathered keys, in ONE
+    round.  Legal because the scan linearizes before the round's writes:
+    the deletes target exactly the snapshot the scan observed.
+
+    Returns the pre-delete ``ScanOutput`` (the evicted keys/values)."""
+    lo = jnp.atleast_1d(jnp.asarray(lo, KEY_DTYPE))
+    hi = jnp.atleast_1d(jnp.asarray(hi, KEY_DTYPE))
+    assert lo.shape == hi.shape and lo.ndim == 1
+    out = run_scan_phase(
+        tree, lo, hi, cap, n_scan_ops=int(lo.shape[0]), max_retries=max_retries
+    )
+    flat_keys = out.keys.reshape(-1)
+    valid = flat_keys != EMPTY  # rows are EMPTY-padded beyond count
+    del_ops = jnp.where(valid, OP_DELETE, OP_NOP).astype(jnp.int32)
+    n_del = int(np.asarray(out.count).sum())
+    if n_del:
+        tree._ensure_capacity(n_del)
+        run_point_phases(tree, del_ops, flat_keys, jnp.zeros_like(flat_keys))
+    st = tree.state.stats
+    tree.state = tree.state._replace(stats=st._replace(rounds=st.rounds + 1))
+    return out

@@ -65,8 +65,11 @@ def ycsb_e_stream(
 ):
     """YCSB Workload-E analog: ``scan_frac`` short range scans (start key
     from the configured distribution, span uniform in [1, max_span]) and
-    the remainder inserts.  OP_RANGE rows encode lo = key, span = val —
-    split them out with ``split_scan_round`` before applying."""
+    the remainder inserts.  Rounds are genuinely mixed: OP_RANGE rows
+    encode lo = key, span = val — exactly the round engine's fused lane
+    encoding, so each round feeds straight into ``ABTree.apply_round``
+    (one fused round per batch).  ``split_scan_round`` remains only as the
+    split-path baseline for A/B comparisons."""
     rng = np.random.default_rng(cfg.seed)
     for _ in range(n_rounds):
         keys = _sample_keys(rng, cfg)
@@ -81,6 +84,12 @@ def ycsb_e_stream(
 
 def split_scan_round(ops: np.ndarray, keys: np.ndarray, vals: np.ndarray):
     """Split one mixed round into its scan half and its point-op half.
+
+    BASELINE ONLY: the round engine executes mixed batches fused (one
+    ``ABTree.apply_round`` call, scans linearized before the round's
+    writes), so the hot path never splits.  This helper survives as the
+    split-path baseline for A/B benchmarks (``benchmarks/ycsb.py
+    --scan-path split``), which runs every batch as TWO rounds.
 
     Returns ``((lo, hi), (ops', keys', vals'))``: OP_RANGE rows become
     ``[lo, lo + span)`` scan intervals (for ``ABTree.scan_round``); in the

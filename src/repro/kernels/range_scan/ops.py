@@ -5,9 +5,11 @@ The tree's host index uses int64 keys; the TPU kernel operates on int32
 lanes (no int64 vector support).  ``range_scan`` therefore routes int64
 candidates to the reference implementation unless the caller asserts the
 keys lie strictly inside the int32 range (``narrow=True`` casts and uses
-the kernel) — the round orchestration in ``core/abtree.py`` always uses
-the ref path, the serving/benchmark paths with bounded key ranges can use
-the kernel.
+the kernel).  The round engine's scan phase (``core/rounds.py``, serving
+both ``scan_round`` and fused mixed-op rounds) calls this wrapper from
+inside its jitted gather: the tree's int64 host index takes the ref path,
+while int32 device keys and bounded-key serving/benchmark paths take the
+kernel.
 
 Narrow-path key domain: user keys must satisfy ``-2**31 < k < 2**31 - 1``.
 ``INT32_MAX`` itself is the kernel's EMPTY sentinel (exactly as the tree

@@ -170,8 +170,9 @@ class ServeEngine:
         if chain and self.kv.used > self.kv.n_pages // 2:
             self.index.evict_batch([h for h, _ in chain])
         # session-range sweep: retired ids accumulate below the lowest live
-        # id, so one scan round + one delete round clears them in bulk
-        # (amortized — no per-rid delete round at retire time).
+        # id, so ONE fused scan+delete round clears them in bulk (the round
+        # engine linearizes the scan before the same round's deletes;
+        # amortized — no per-rid delete round at retire time).
         self._retired_since_sweep += 1
         if self._retired_since_sweep >= 8 or not self.running:
             # with nothing running, sweep past the highest id ever admitted

@@ -103,30 +103,28 @@ class SessionIndex(PrefixIndex):
     keys are session ids rather than prefix hashes).  Session ids are
     allocated monotonically, so retired sessions pile up in a contiguous
     low range of the key space — eviction is therefore a *range*
-    operation: ``evict_range`` collects every live session id in
-    ``[lo, hi)`` with ONE batched scan round and removes them with ONE
-    batched delete round, replacing the per-key delete loop an id-keyed
-    index would otherwise run on every sweep."""
+    operation: ``evict_range`` collects AND removes every live session id
+    in ``[lo, hi)`` with ONE fused scan+delete round per chunk (the round
+    engine linearizes the scan before the round's deletes), replacing the
+    per-key delete loop an id-keyed index would otherwise run on every
+    sweep — and halving the round count of the former scan-round-then-
+    delete-round sweep."""
 
     def __init__(self, mode: str = "elim", capacity: int = 1 << 12):
         super().__init__(mode=mode, capacity=capacity)
 
     def evict_range(self, lo: int, hi: int, cap: int = 256) -> List[int]:
-        """Evict all sessions with lo ≤ rid < hi: scan round + delete round
-        per ``cap``-sized chunk (loops only when > cap sessions match).
-        Returns the evicted (rid-sorted) page-table ids for the caller to
-        free."""
+        """Evict all sessions with lo ≤ rid < hi: one fused scan+delete
+        round per ``cap``-sized chunk (loops only when > cap sessions
+        match).  Returns the evicted (rid-sorted) page-table ids for the
+        caller to free."""
         freed: List[int] = []
         while True:
-            out = self.tree.scan_round([lo], [hi], cap=cap)
+            out = self.tree.scan_delete_round([lo], [hi], cap=cap)
             n = int(np.asarray(out.count)[0])
             if n == 0:
                 return freed
-            rids = np.asarray(out.keys)[0, :n]
             freed.extend(int(v) for v in np.asarray(out.vals)[0, :n])
-            self.tree.apply_round(
-                np.full(n, OP_DELETE, np.int32), rids, np.zeros(n, np.int64)
-            )
             if not bool(np.asarray(out.truncated)[0]):
                 return freed
 

@@ -163,10 +163,16 @@ def test_range_query_raises_scan_conflict_type():
     assert issubclass(ScanConflictError, RuntimeError)
 
 
-def test_op_range_rejected_by_apply_round():
+def test_op_range_accepted_by_apply_round():
+    """OP_RANGE lanes route through the fused pipeline (no more host-side
+    pre-splitting); only *malformed* lanes are rejected."""
     t = ABTree(SMALL)
-    with pytest.raises(ValueError, match="scan_round"):
-        t.apply_round([OP_RANGE], [0], [10])
+    t.apply_round([OP_INSERT] * 3, [1, 2, 3], [10, 20, 30])
+    out = t.apply_round([OP_RANGE], [0], [10])  # scan [0, 10)
+    assert int(np.asarray(out.results)[0]) == 3  # range lane result = count
+    assert _scan_items(out.scan, 0) == [(1, 10), (2, 20), (3, 30)]
+    with pytest.raises(ValueError, match="malformed"):
+        t.apply_round([OP_RANGE], [5], [-1])  # negative span: hi < lo
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +224,9 @@ def test_range_scan_ops_narrow_int64_roundtrip():
 # ---------------------------------------------------------------------------
 
 
-def test_ycsb_e_stream_split():
+def test_ycsb_e_stream_split_baseline():
+    """``split_scan_round`` survives as the A/B baseline: its two-round
+    execution must agree with the default fused one-round execution."""
     from repro.data.workloads import WorkloadConfig, split_scan_round, ycsb_e_stream
 
     wl = WorkloadConfig(key_range=1000, dist="zipf", batch=128, seed=2)
@@ -230,9 +238,20 @@ def test_ycsb_e_stream_split():
     assert np.all(hi > lo) and np.all(hi - lo <= 16)
     assert not np.any(pops == OP_RANGE)
     assert pops.shape == ops.shape  # result positions preserved
+    prefill = list(range(0, 1000, 3))
     t = ABTree(SMALL)
-    t.scan_round(lo, hi, cap=32)
+    tf = ABTree(SMALL)
+    for tree in (t, tf):
+        tree.apply_round([OP_INSERT] * len(prefill), prefill, prefill)
+    split_scan = t.scan_round(lo, hi, cap=32)
     t.apply_round(pops, pkeys, pvals)
+    assert t.stats()["rounds"] == 2  # scan_round is not a combining round
+    # fused path: the same mixed batch in ONE apply_round call
+    out = tf.apply_round(ops, keys, vals, scan_cap=32)
+    assert tf.stats()["rounds"] == 2
+    assert tf.items() == t.items()
+    scan_rows = np.asarray(out.scan.keys)[np.asarray(ops) == OP_RANGE]
+    np.testing.assert_array_equal(scan_rows, np.asarray(split_scan.keys))
 
 
 def test_session_index_range_eviction():
