@@ -1,0 +1,71 @@
+"""Sharded-forest scaling section: ops/s and conflict retries per shard
+count, for the perf trajectory (``results/BENCH_forest.json``).
+
+Sweeps ``ABForest`` shard counts over two index workloads:
+
+  forest.a.sK — YCSB-A with validated optimistic point-reads under a
+    concurrent writer replica (see ``benchmarks/ycsb.run_a_forest``):
+    per-shard validation confines each hot write's conflict window to its
+    own shard, so retried lanes per op must FALL as shards grow — the run
+    fails if 4 shards do not beat 1 shard strictly.
+  forest.e.sK — YCSB-E fused mixed rounds (cross-shard range lanes split
+    at shard boundaries, one vmapped round per batch).
+
+``python benchmarks/forest.py [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/forest.py` (not -m)
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_ROOT, os.path.join(_ROOT, "src")]
+
+from benchmarks.common import emit
+from benchmarks.ycsb import run_a_forest, run_e_forest
+
+
+def main(quick=False):
+    sweep = (1, 2, 4) if quick else (1, 2, 4, 8)
+    per_a = {}
+    for k in sweep:
+        m = run_a_forest(k, quick=quick)
+        per_a[k] = m
+        emit(
+            f"forest.a.s{k}",
+            m["us_per_op"],
+            f"tx/s={m['ops_per_s']:.0f};conflict_retries={m['conflict_retries']};"
+            f"retries/op={m['retries_per_op']:.3f}",
+            **m,
+        )
+    if 4 in per_a and per_a[4]["retries_per_op"] >= per_a[1]["retries_per_op"]:
+        raise RuntimeError(  # hard error, not assert: must survive python -O
+            f"forest(4) retries/op {per_a[4]['retries_per_op']:.3f} not "
+            f"strictly below 1-shard baseline {per_a[1]['retries_per_op']:.3f}"
+        )
+    emit(
+        "forest.a.scaling",
+        0.0,
+        ";".join(
+            f"s{k}={per_a[k]['retries_per_op']:.3f}" for k in sweep
+        ),
+        **{f"retries_per_op_s{k}": per_a[k]["retries_per_op"] for k in sweep},
+    )
+    for k in sweep:
+        m = run_e_forest(k, quick=quick)
+        emit(
+            f"forest.e.s{k}",
+            m["us_per_op"],
+            f"tx/s={m['ops_per_s']:.0f};items/s={m['items_per_s']:.0f};"
+            f"conflict_retries={m['conflict_retries']}",
+            **m,
+        )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -6,6 +6,9 @@ counts, conflict retries, …) so the perf trajectory accumulates.
   microbench    — Figs 12–15 (uniform/zipf × update-rate grid, Elim vs OCC)
   ycsb          — Fig 16 (YCSB-A analog)
   ycsb_e        — YCSB-E analog (95% range scans / 5% inserts)
+  forest        — ABForest shard-count sweep (ops/s + conflict retries
+                  per shard count, YCSB A/E; 4 shards must strictly beat
+                  1 shard on retries/op)
   range_scan    — scan_round throughput + kernels/range_scan hot loop
   persistence   — Table 1 (durable overhead + flush traffic)
   elim_rate     — §4 mechanism (elimination fraction vs skew)
@@ -33,6 +36,7 @@ def main() -> None:
     from benchmarks import (
         elim_rate,
         embed_elim,
+        forest,
         kernels_bench,
         microbench,
         persistence,
@@ -44,6 +48,7 @@ def main() -> None:
         "microbench": microbench.main,
         "ycsb": ycsb.main,
         "ycsb_e": functools.partial(ycsb.main, workload="E"),
+        "forest": forest.main,
         "range_scan": range_scan.main,
         "persistence": persistence.main,
         "elim_rate": elim_rate.main,

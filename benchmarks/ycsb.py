@@ -11,8 +11,23 @@
     the round count); ``--scan-path both`` (the default) A/Bs the two and
     reports the round counts side by side.
 
+``--shards K`` (K ≥ 1) switches the index to the key-partitioned
+``ABForest`` and A/Bs it against the 1-shard forest baseline:
+
+  A: reads execute as *validated optimistic point-reads* (the paper's
+     ``searchLeaf`` version discipline, batched) while a concurrent writer
+     replica — modeled by the forest's ``scan_hook`` — churns Zipf-hot keys
+     between each round's gather and validation.  The single tree
+     validates the whole batch's touched set, so one hot write retries
+     every lane; the forest validates per shard, so only the conflicted
+     shards' lanes retry.  ``conflict_retries`` counts retried lanes; with
+     K > 1 the run fails unless retries/op is strictly below the 1-shard
+     baseline on the skewed workload.
+  E: the same fused mixed rounds, with cross-shard OP_RANGE lanes split at
+     shard boundaries and executed as one vmapped round.
+
 ``python benchmarks/ycsb.py [--workload A|E] [--scan-path fused|split|both]
-[--quick]``
+[--shards K] [--quick]``
 """
 from __future__ import annotations
 
@@ -28,7 +43,7 @@ if __package__ in (None, ""):  # `python benchmarks/ycsb.py` (not -m)
     sys.path[:0] = [_ROOT, os.path.join(_ROOT, "src")]
 
 from repro.configs.abtree import TPU8
-from repro.core import ABTree, OP_FIND
+from repro.core import ABForest, ABTree, OP_DELETE, OP_FIND, OP_INSERT
 from repro.data.workloads import (
     WorkloadConfig,
     prefill_tree,
@@ -69,6 +84,155 @@ def _run_a(quick=False):
             f"tx/s={n_ops/dt:.0f}",
             ops_per_s=n_ops / dt,
             rounds=rounds,
+        )
+
+
+def run_a_forest(shards, quick=False, key_range=4096, batch=256):
+    """YCSB-A on an ``ABForest``: reads as validated optimistic point-reads
+    under a concurrent writer replica (the ``scan_hook``).  Returns metrics
+    incl. ``conflict_retries`` = retried lanes (per-shard validation only
+    retries the shards the writer actually touched)."""
+    rounds_n = 10 if quick else 30
+    wl = WorkloadConfig(key_range=key_range, seed=1)
+    forest = ABForest(
+        n_shards=shards,
+        cfg=TPU8._replace(capacity=4 * key_range),
+        mode="elim",
+        key_space=(0, key_range),
+    )
+    prefill_tree(forest, wl)
+    rng = np.random.default_rng(3)
+    n_w = 8  # hot-key writes per round (the contended fraction)
+    reads = zipf_keys(rng, batch * (rounds_n + 1), key_range, 0.5)
+    writes = zipf_keys(rng, n_w * (rounds_n + 1), key_range, 1.2)
+    wvals = rng.integers(0, 1 << 30, n_w * (rounds_n + 1)).astype(np.int64)
+    # writer round: delete+insert per hot key collapses to ONE net leaf
+    # write (overwrite / insert) that always bumps the leaf version.
+    w_ops = np.concatenate(
+        [np.full(n_w, OP_DELETE, np.int32), np.full(n_w, OP_INSERT, np.int32)]
+    )
+    pending = {}
+
+    def writer_replica():
+        w = pending.pop("w", None)
+        if w is not None:
+            wk, wv = w
+            forest.apply_round(
+                w_ops,
+                np.concatenate([wk, wk]),
+                np.concatenate([np.zeros(n_w, np.int64), wv]),
+            )
+
+    forest.scan_hook = writer_replica
+
+    def one_round(r):
+        k = reads[r * batch : (r + 1) * batch]
+        pending["w"] = (
+            writes[r * n_w : (r + 1) * n_w],
+            wvals[r * n_w : (r + 1) * n_w],
+        )
+        forest.scan_round(k, k + 1, cap=1)
+
+    one_round(rounds_n)  # warm (jit compiles land outside the timed region)
+    base_retries = forest.stats()["scan_retries"]
+    t0 = time.perf_counter()
+    for r in range(rounds_n):
+        one_round(r)
+    dt = time.perf_counter() - t0
+    forest.scan_hook = None
+    retries = forest.stats()["scan_retries"] - base_retries
+    n_ops = batch * rounds_n
+    return {
+        "shards": shards,
+        "ops_per_s": n_ops / dt,
+        "us_per_op": dt / n_ops * 1e6,
+        "conflict_retries": retries,
+        "retries_per_op": retries / n_ops,
+        "rounds": rounds_n,
+    }
+
+
+def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128):
+    """YCSB-E fused mixed rounds on an ``ABForest`` (cross-shard OP_RANGE
+    lanes split at shard boundaries, one vmapped round per batch)."""
+    rounds_n = 6 if quick else 20
+    wl = WorkloadConfig(
+        key_range=key_range, dist="zipf", zipf_s=1.0, batch=batch, seed=5
+    )
+    forest = ABForest(
+        n_shards=shards,
+        cfg=TPU8._replace(capacity=4 * key_range),
+        mode="elim",
+        key_space=(0, key_range),
+    )
+    prefill_tree(forest, wl)
+    for ops, keys, vals in ycsb_e_stream(wl, 3):  # warm
+        forest.apply_round(ops, keys, vals, scan_cap=cap)
+    n_ops = n_items = 0
+    t0 = time.perf_counter()
+    for ops, keys, vals in ycsb_e_stream(wl, rounds_n):
+        out = forest.apply_round(ops, keys, vals, scan_cap=cap)
+        n_items += int(np.sum(np.asarray(out.scan.count)))
+        n_ops += len(ops)
+    dt = time.perf_counter() - t0
+    st = forest.stats()
+    return {
+        "shards": shards,
+        "ops_per_s": n_ops / dt,
+        "items_per_s": n_items / dt,
+        "us_per_op": dt / n_ops * 1e6,
+        "rounds": rounds_n,
+        "conflict_retries": st["scan_retries"],
+    }
+
+
+def _run_a_sharded(shards, quick=False):
+    per = {}
+    for k in sorted({1, shards}):
+        m = run_a_forest(k, quick=quick)
+        per[k] = m
+        emit(
+            f"ycsb_a.forest.s{k}",
+            m["us_per_op"],
+            f"tx/s={m['ops_per_s']:.0f};conflict_retries={m['conflict_retries']};"
+            f"retries/op={m['retries_per_op']:.3f}",
+            **m,
+        )
+    if shards > 1:
+        r1, rk = per[1]["retries_per_op"], per[shards]["retries_per_op"]
+        if rk >= r1:  # hard error, not assert: must survive python -O
+            raise RuntimeError(
+                f"forest({shards}) retries/op {rk:.3f} not strictly below "
+                f"1-shard baseline {r1:.3f}"
+            )
+        emit(
+            f"ycsb_a.forest.s{shards}_vs_s1",
+            0.0,
+            f"retries/op={rk:.3f} vs {r1:.3f} ({r1 / max(rk, 1e-9):.2f}x fewer)",
+            retries_per_op_sharded=rk,
+            retries_per_op_single=r1,
+        )
+
+
+def _run_e_sharded(shards, quick=False):
+    per = {}
+    for k in sorted({1, shards}):
+        m = run_e_forest(k, quick=quick)
+        per[k] = m
+        emit(
+            f"ycsb_e.forest.s{k}",
+            m["us_per_op"],
+            f"tx/s={m['ops_per_s']:.0f};items/s={m['items_per_s']:.0f};"
+            f"conflict_retries={m['conflict_retries']}",
+            **m,
+        )
+    if shards > 1:
+        emit(
+            f"ycsb_e.forest.s{shards}_vs_s1",
+            0.0,
+            f"speedup={per[1]['us_per_op'] / per[shards]['us_per_op']:.2f}x",
+            us_per_op_sharded=per[shards]["us_per_op"],
+            us_per_op_single=per[1]["us_per_op"],
         )
 
 
@@ -152,11 +316,17 @@ def _run_e(quick=False, scan_path="both"):
             )
 
 
-def main(quick=False, workload="A", scan_path="both"):
+def main(quick=False, workload="A", scan_path="both", shards=0):
     if workload.upper() == "A":
-        _run_a(quick=quick)
+        if shards:
+            _run_a_sharded(shards, quick=quick)
+        else:
+            _run_a(quick=quick)
     elif workload.upper() == "E":
-        _run_e(quick=quick, scan_path=scan_path)
+        if shards:
+            _run_e_sharded(shards, quick=quick)
+        else:
+            _run_e(quick=quick, scan_path=scan_path)
     else:
         raise ValueError(f"unknown YCSB workload {workload!r} (A or E)")
 
@@ -173,6 +343,21 @@ if __name__ == "__main__":
         "'both' (default) — runs fused then split and reports the A/B "
         "round-count comparison",
     )
+    ap.add_argument(
+        "--shards",
+        type=int,
+        default=0,
+        choices=[0, 1, 2, 4, 8],
+        help="run the workload on a key-partitioned ABForest with this many "
+        "shards, A/B'd against the 1-shard forest baseline (0 = legacy "
+        "single-tree path).  Workload A fails unless the sharded run has "
+        "strictly fewer conflict retries per op than the baseline",
+    )
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    main(quick=args.quick, workload=args.workload, scan_path=args.scan_path)
+    main(
+        quick=args.quick,
+        workload=args.workload,
+        scan_path=args.scan_path,
+        shards=args.shards,
+    )

@@ -25,12 +25,15 @@ from repro.core.abtree import (  # noqa: E402
     range_query,
 )
 from repro.core.rounds import RoundPlan, build_plan  # noqa: E402
+from repro.core.forest import ABForest, check_forest_invariants  # noqa: E402
 from repro.core.elimination import eliminate_batch, EliminationResult  # noqa: E402
 from repro.core.oracle import DictOracle, check_invariants  # noqa: E402
 from repro.core.durable import DurableABTree, CrashPoint, recover  # noqa: E402
 
 __all__ = [
     "ABTree",
+    "ABForest",
+    "check_forest_invariants",
     "TreeConfig",
     "TreeState",
     "OP_NOP",

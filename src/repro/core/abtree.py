@@ -123,6 +123,33 @@ class TreeState(NamedTuple):
     stats: TreeStats
 
 
+# Pool-row fill values per TreeState field (scalars root/height/stats are
+# absent: they pass through pool growth untouched).  Shared by ABTree._grow
+# (node axis 0) and ABForest._grow (node axis 1 of the stacked state).
+_GROW_FILL = dict(
+    keys=EMPTY, vals=0, children=NULL, parent=NULL, pidx=0, is_leaf=True,
+    size=0, level=0, ver=0, alloc=False, rec_key=EMPTY, rec_val=0,
+    rec_ver=0, rec_op=0, dirty=False,
+)
+
+
+def grow_pool(state: TreeState, pad_n: int, axis: int = 0) -> TreeState:
+    """Append ``pad_n`` freshly-initialized node rows along ``axis`` of
+    every per-node array (scalars untouched).  The old scratch row becomes
+    an ordinary free node (it is kept all-initial by the masked-scatter
+    discipline) and the new last row takes over as scratch."""
+    out = {}
+    for name, val in state._asdict().items():
+        if name in _GROW_FILL:
+            pad_shape = val.shape[:axis] + (pad_n,) + val.shape[axis + 1 :]
+            out[name] = jnp.concatenate(
+                [val, jnp.full(pad_shape, _GROW_FILL[name], val.dtype)], axis=axis
+            )
+        else:
+            out[name] = val
+    return TreeState(**out)
+
+
 def make_tree(cfg: TreeConfig) -> TreeState:
     # Pool has capacity+1 rows: the last row is a write-off SCRATCH row that
     # absorbs all masked-out scatter lanes.  Routing inactive lanes to a
@@ -778,12 +805,22 @@ class ABTree:
     are jitted and the host loop only sequences structural waves (rare —
     the paper notes splits are infrequent) and reads tiny control scalars."""
 
-    def __init__(self, cfg: TreeConfig = TreeConfig(), mode: str = "elim"):
+    def __init__(
+        self, cfg: TreeConfig = TreeConfig(), mode: str = "elim",
+        *, narrow_scan: bool = False,
+    ):
         assert mode in ("elim", "occ")
         assert 2 <= cfg.a <= cfg.b // 2, "(a,b) requires 2 ≤ a ≤ b/2"
         self.cfg = cfg
         self.mode = mode
         self.state = make_tree(cfg)
+        # narrow_scan=True is the caller's assertion that every key AND value
+        # fits strictly inside int32 (|x| < 2**31 - 1): the round engine's
+        # scan phase then routes fused-round gathers through the
+        # kernels/range_scan Pallas kernel instead of the int64 jnp ref.
+        # Keys at/above 2**31 - 1 would be conflated with the kernel's EMPTY
+        # sentinel — leave False for unbounded key spaces (e.g. hash keys).
+        self.narrow_scan = narrow_scan
         self._wave_w = 64  # pad width for structural waves (recompile-bounded)
         # durable layer hook: OCC durability commits after EVERY sub-round
         # (each sub-round's returns causally follow the previous one — the
@@ -933,8 +970,11 @@ class ABTree:
     # -- pool management --------------------------------------------------------
 
     def _ensure_capacity(self, need_nodes: int):
-        """Grow the pool if fewer than `need + slack` nodes are free."""
-        need = 2 * need_nodes + 4 * self.cfg.max_height + 8
+        """Grow the pool if fewer than `need + slack` nodes are free.  The
+        2·wave_w term keeps the pool large enough for a full-width split
+        wave's allocation (``_alloc_ids(state, 2w)`` slices 2w rows
+        unconditionally), which tiny ``capacity`` configs would violate."""
+        need = 2 * need_nodes + 4 * self.cfg.max_height + 2 * self._wave_w + 8
         n_alloc = int(jnp.sum(self.state.alloc))
         cap = self.cfg.capacity
         if cap - n_alloc >= need:
@@ -942,35 +982,8 @@ class ABTree:
         self._grow(max(cap * 2, cap + need))
 
     def _grow(self, new_cap: int):
-        cfg = self.cfg
-        old = self.state
-        pad_n = new_cap - cfg.capacity
-
-        def grow_arr(x, fill):
-            pad_shape = (pad_n,) + x.shape[1:]
-            return jnp.concatenate([x, jnp.full(pad_shape, fill, x.dtype)], axis=0)
-
-        self.state = TreeState(
-            keys=grow_arr(old.keys, EMPTY),
-            vals=grow_arr(old.vals, 0),
-            children=grow_arr(old.children, NULL),
-            parent=grow_arr(old.parent, NULL),
-            pidx=grow_arr(old.pidx, 0),
-            is_leaf=grow_arr(old.is_leaf, True),
-            size=grow_arr(old.size, 0),
-            level=grow_arr(old.level, 0),
-            ver=grow_arr(old.ver, 0),
-            alloc=grow_arr(old.alloc, False),
-            rec_key=grow_arr(old.rec_key, EMPTY),
-            rec_val=grow_arr(old.rec_val, 0),
-            rec_ver=grow_arr(old.rec_ver, 0),
-            rec_op=grow_arr(old.rec_op, 0),
-            root=old.root,
-            height=old.height,
-            dirty=grow_arr(old.dirty, False),
-            stats=old.stats,
-        )
-        self.cfg = cfg._replace(capacity=new_cap)
+        self.state = grow_pool(self.state, new_cap - self.cfg.capacity, axis=0)
+        self.cfg = self.cfg._replace(capacity=new_cap)
 
 
 # ----------------------------------------------------------------------------

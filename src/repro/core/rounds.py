@@ -165,13 +165,19 @@ def build_plan(ops, keys, vals=None, *, scan_cap: int = 128) -> RoundPlan:
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1, 4, 5))
-def _phase_scan(state: TreeState, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int):
+@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6))
+def _phase_scan(
+    state: TreeState, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int,
+    narrow: bool = False,
+):
     """jit: frontier expansion + in-range gather.  The gather goes through
     ``kernels/range_scan``'s dispatching wrapper: int64 host-index keys take
-    the jnp reference, int32 device keys the Pallas kernel."""
+    the jnp reference, int32 device keys the Pallas kernel.  ``narrow``
+    (static, from ``tree.narrow_scan``) asserts the caller's keys/values fit
+    in int32, routing the fused-round gather through the Pallas kernel even
+    on the int64 host index (the ROADMAP "fused-round scan kernel" path)."""
     leaves, ck, cv, touched, overflow = frontier_expand(state, cfg, lo, hi, frontier_cap)
-    keys, vals, count, truncated = range_scan(ck, cv, lo, hi, cap=cap)
+    keys, vals, count, truncated = range_scan(ck, cv, lo, hi, cap=cap, narrow=narrow)
     return ScanOutput(keys=keys, vals=vals, count=count, truncated=truncated), touched, overflow
 
 
@@ -268,17 +274,37 @@ def _pad_ids(ids: np.ndarray, w: int) -> Tuple[jax.Array, jax.Array]:
     return jnp.asarray(out), jnp.asarray(act)
 
 
-def _independent_by_parent(state: TreeState, ids_np: np.ndarray) -> np.ndarray:
-    """Host-side: keep one node per parent (lowest id first)."""
-    if ids_np.size == 0:
-        return ids_np
-    parent = np.asarray(state.parent)[ids_np]
+def _independent_by_parent_np(parent_row: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Host-side: keep one node per parent (lowest id first).  ``parent_row``
+    is one tree's parent array — the forest passes one shard's row."""
     keep, seen = [], set()
-    for nid, p in zip(ids_np.tolist(), parent.tolist()):
-        if int(p) not in seen:
-            seen.add(int(p))
+    for nid in ids.tolist():
+        p = int(parent_row[nid])
+        if p not in seen:
+            seen.add(p)
             keep.append(int(nid))
     return np.asarray(keep, np.int32)
+
+
+def _independent_by_parent(state: TreeState, ids_np: np.ndarray) -> np.ndarray:
+    if ids_np.size == 0:
+        return ids_np
+    return _independent_by_parent_np(np.asarray(state.parent), ids_np)
+
+
+def _duplicate_ranks(ops_np: np.ndarray, keys_np: np.ndarray) -> np.ndarray:
+    """Per-lane duplicate rank of each key (OP_NOP lanes rank 0): rank r
+    executes in OCC sub-round r.  Shared by the tree's OCC round and the
+    forest's per-shard rank computation."""
+    rank = np.zeros(ops_np.shape[0], np.int32)
+    seen: dict = {}
+    for i in range(ops_np.shape[0]):
+        if ops_np[i] == OP_NOP:
+            continue
+        k = int(keys_np[i])
+        rank[i] = seen.get(k, 0)
+        seen[k] = rank[i] + 1
+    return rank
 
 
 # ----------------------------------------------------------------------------
@@ -301,7 +327,8 @@ def run_scan_phase(
         guard = 0
         while True:
             out, touched, overflow = _phase_scan(
-                snap, tree.cfg, lo, hi, tree._scan_frontier, cap
+                snap, tree.cfg, lo, hi, tree._scan_frontier, cap,
+                getattr(tree, "narrow_scan", False),
             )
             if not bool(jnp.any(overflow)):
                 break
@@ -353,16 +380,7 @@ def _elim_point_round(tree, ops, keys, vals):
 def _occ_point_round(tree, ops, keys, vals):
     """OCC baseline: duplicate-rank sub-rounds, each fully physical."""
     bsz = int(ops.shape[0])
-    kn = np.asarray(keys)
-    on = np.asarray(ops)
-    rank = np.zeros(bsz, np.int32)
-    seen: dict = {}
-    for i in range(bsz):
-        if on[i] == OP_NOP:
-            continue
-        k = int(kn[i])
-        rank[i] = seen.get(k, 0)
-        seen[k] = rank[i] + 1
+    rank = _duplicate_ranks(np.asarray(ops), np.asarray(keys))
     n_sub = int(rank.max()) + 1 if bsz else 1
     results = jnp.full((bsz,), NOTFOUND, VAL_DTYPE)
     found = jnp.zeros((bsz,), bool)

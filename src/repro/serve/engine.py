@@ -55,6 +55,7 @@ class ServeEngine:
         s_max: int = 512,
         n_pages: int = 1024,
         index_mode: str = "elim",
+        index_shards: int = 1,
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -62,8 +63,22 @@ class ServeEngine:
         self.s_max = s_max
         self.params = init_params(backbone.model_spec(cfg))
         self.kv = PagedKVCache(n_pages)
-        self.index = PrefixIndex(mode=index_mode)
-        self.sessions = SessionIndex(mode=index_mode)
+        # index_shards > 1 partitions both indexes' key spaces into an
+        # ABForest (one vmapped round per scheduler tick, per index).
+        # Prefix hashes are uniform over the 63-bit domain, so static even
+        # splits suffice; session ids are MONOTONE, so the static splits
+        # alone would route every live id to one shard — max_keys_per_shard
+        # makes the forest re-partition the live id range adaptively (live
+        # sessions are bounded by the page pool, so n_pages is the scale).
+        self.index = PrefixIndex(mode=index_mode, shards=index_shards)
+        self.sessions = SessionIndex(
+            mode=index_mode,
+            shards=index_shards,
+            key_space=(0, 1 << 31),
+            max_keys_per_shard=(
+                None if index_shards == 1 else max(64, n_pages // index_shards)
+            ),
+        )
         self._evict_floor = 0  # session ids below this are already swept
         self._retired_since_sweep = 0
         self._max_rid = -1  # highest session id ever admitted

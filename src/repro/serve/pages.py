@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.abtree import ABTree, OP_DELETE, OP_FIND, OP_INSERT, TreeConfig
+from repro.core.forest import ABForest
 
 PAGE = 256  # tokens per KV page
 
@@ -69,10 +70,33 @@ class PagedKVCache:
 
 
 class PrefixIndex:
-    """Prefix-block hash → page id, on the Elim-ABtree."""
+    """Prefix-block hash → page id, on the Elim-ABtree.
 
-    def __init__(self, mode: str = "elim", capacity: int = 1 << 14):
-        self.tree = ABTree(TreeConfig(capacity=capacity, b=8, a=2), mode=mode)
+    ``shards > 1`` backs the index with a key-partitioned ``ABForest``
+    instead of a single tree: every batched round routes through the
+    forest's vmapped per-shard pipeline, so hot-prefix churn on one key
+    range stops contending with the rest of the index.  ``key_space``
+    seeds the shard split points (defaults to the full 63-bit hash
+    domain; session-id indexes pass their id range instead)."""
+
+    def __init__(
+        self,
+        mode: str = "elim",
+        capacity: int = 1 << 14,
+        *,
+        shards: int = 1,
+        key_space: Optional[Tuple[int, int]] = None,
+        max_keys_per_shard: Optional[int] = None,
+    ):
+        cfg = TreeConfig(capacity=capacity, b=8, a=2)
+        if shards > 1:
+            self.tree = ABForest(
+                n_shards=shards, cfg=cfg, mode=mode,
+                key_space=key_space if key_space is not None else (0, 1 << 63),
+                max_keys_per_shard=max_keys_per_shard,
+            )
+        else:
+            self.tree = ABTree(cfg, mode=mode)
 
     def lookup_batch(self, hashes: List[int]) -> List[Optional[int]]:
         if not hashes:
@@ -108,10 +132,32 @@ class SessionIndex(PrefixIndex):
     engine linearizes the scan before the round's deletes), replacing the
     per-key delete loop an id-keyed index would otherwise run on every
     sweep — and halving the round count of the former scan-round-then-
-    delete-round sweep."""
+    delete-round sweep.
 
-    def __init__(self, mode: str = "elim", capacity: int = 1 << 12):
-        super().__init__(mode=mode, capacity=capacity)
+    With ``shards > 1`` the index is forest-backed; ``evict_range`` keeps
+    its contract unchanged: the forest's ``scan_delete_round`` is ONE
+    fused round per chunk even when ``[lo, hi)`` straddles shard
+    boundaries (sub-lane scans are stitched in key order and only the
+    emitted keys are deleted, so a truncated chunk leaves the remainder
+    for the next sweep exactly as the single tree does).  ``key_space``
+    should span the expected session-id range so monotone ids spread
+    across shards; since ids are monotone, pair it with
+    ``max_keys_per_shard`` so the forest re-partitions the live id range
+    adaptively instead of relying on the static split points alone."""
+
+    def __init__(
+        self,
+        mode: str = "elim",
+        capacity: int = 1 << 12,
+        *,
+        shards: int = 1,
+        key_space: Optional[Tuple[int, int]] = None,
+        max_keys_per_shard: Optional[int] = None,
+    ):
+        super().__init__(
+            mode=mode, capacity=capacity, shards=shards, key_space=key_space,
+            max_keys_per_shard=max_keys_per_shard,
+        )
 
     def evict_range(self, lo: int, hi: int, cap: int = 256) -> List[int]:
         """Evict all sessions with lo ≤ rid < hi: one fused scan+delete

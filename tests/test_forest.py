@@ -1,0 +1,457 @@
+"""ABForest tests: oracle equivalence at every shard count, cross-shard
+range scans (straddling / empty / full-keyspace / boundary-exact),
+scan_stream cursor chaining, the one-fused-round scan+delete contract,
+shard-overflow splitting, and the forest-backed serving indexes."""
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; deterministic tests run without it
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    ABForest,
+    ABTree,
+    DictOracle,
+    EMPTY,
+    OP_DELETE,
+    OP_FIND,
+    OP_INSERT,
+    OP_NOP,
+    OP_RANGE,
+    TreeConfig,
+    check_forest_invariants,
+)
+
+SMALL = TreeConfig(capacity=512, b=8, a=2, max_height=12)
+
+
+def _check_mixed_round(forest, oracle, ops, keys, vals, cap=32):
+    """One fused forest apply_round vs the oracle's mixed-round semantics."""
+    out = forest.apply_round(ops, keys, vals, scan_cap=cap)
+    exp_res, exp_found, exp_scans = oracle.apply_mixed_round(ops, keys, vals, cap=cap)
+    got_res = np.asarray(out.results).tolist()
+    got_found = np.asarray(out.found).tolist()
+    for i, op in enumerate(ops):
+        assert got_found[i] == exp_found[i], (i, op, got_found[i], exp_found[i])
+        if op == OP_RANGE or exp_found[i]:
+            assert got_res[i] == exp_res[i], (i, op, got_res[i], exp_res[i])
+        if exp_scans[i] is not None:
+            n = int(np.asarray(out.scan.count)[i])
+            row = [
+                (int(k), int(v))
+                for k, v in zip(
+                    np.asarray(out.scan.keys)[i, :n], np.asarray(out.scan.vals)[i, :n]
+                )
+            ]
+            assert row == exp_scans[i], (i, row[:4], exp_scans[i][:4])
+            assert all(
+                int(k) == int(EMPTY) for k in np.asarray(out.scan.keys)[i, n:]
+            )
+    assert forest.items() == oracle.items()
+    return out
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_forest_randomized_mixed_rounds_match_oracle(n_shards, mode):
+    """Random mixed rounds (point + range lanes on overlapping keys) are
+    oracle-exact for every shard count — the forest's headline contract."""
+    rng = np.random.default_rng(7 + n_shards)
+    f = ABForest(n_shards=n_shards, cfg=SMALL, mode=mode, key_space=(0, 300))
+    o = DictOracle()
+    for r in range(8):
+        bsz = 48
+        ops = rng.choice(
+            [OP_NOP, OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE],
+            bsz,
+            p=[0.05, 0.2, 0.3, 0.25, 0.2],
+        ).astype(np.int32)
+        keys = rng.integers(0, 300, bsz).astype(np.int64)
+        vals = rng.integers(0, 1000, bsz).astype(np.int64)
+        vals = np.where(ops == OP_RANGE, rng.integers(0, 120, bsz), vals)
+        _check_mixed_round(f, o, ops.tolist(), keys.tolist(), vals.tolist())
+        if r % 3 == 0:
+            check_forest_invariants(f)
+    check_forest_invariants(f)
+
+
+def test_forest_single_shard_matches_tree():
+    """ABForest(1) runs the identical phase pipeline: results, scan rows and
+    contents must match ABTree exactly, round for round."""
+    rng = np.random.default_rng(11)
+    f = ABForest(n_shards=1, cfg=SMALL, key_space=(0, 200))
+    t = ABTree(SMALL)
+    for _ in range(5):
+        bsz = 32
+        ops = rng.choice(
+            [OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE], bsz, p=[0.3, 0.3, 0.2, 0.2]
+        ).astype(np.int32)
+        keys = rng.integers(0, 200, bsz).astype(np.int64)
+        vals = rng.integers(0, 500, bsz).astype(np.int64)
+        vals = np.where(ops == OP_RANGE, rng.integers(0, 60, bsz), vals)
+        fo = f.apply_round(ops, keys, vals, scan_cap=16)
+        to = t.apply_round(ops, keys, vals, scan_cap=16)
+        np.testing.assert_array_equal(np.asarray(fo.results), np.asarray(to.results))
+        np.testing.assert_array_equal(np.asarray(fo.found), np.asarray(to.found))
+        np.testing.assert_array_equal(
+            np.asarray(fo.scan.keys), np.asarray(to.scan.keys)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fo.scan.vals), np.asarray(to.scan.vals)
+        )
+    assert f.items() == t.items()
+
+
+def test_cross_shard_ranges_straddle_and_boundaries():
+    """Scans straddling 1..3 shard boundaries, empty scans, full-keyspace
+    scans, and lo/hi exactly ON split points are oracle-exact."""
+    f = ABForest(n_shards=4, cfg=SMALL, key_space=(0, 400))  # splits 100/200/300
+    o = DictOracle()
+    keys = list(range(0, 400, 3))
+    vals = [k * 7 for k in keys]
+    f.apply_round([OP_INSERT] * len(keys), keys, vals)
+    o.apply_round([OP_INSERT] * len(keys), keys, vals)
+    cases = [
+        (95, 110),  # straddles one boundary
+        (95, 305),  # straddles all three
+        (0, 400),  # full keyspace
+        (0, 10**9),  # past the top
+        (100, 200),  # boundary-exact lo AND hi (one whole shard)
+        (100, 101),  # boundary-exact lo, 1-wide
+        (199, 200),  # hi exactly at a split point
+        (200, 200),  # empty at a boundary
+        (150, 120),  # reversed → empty
+        (399, 400),  # last key
+    ]
+    lo = np.array([c[0] for c in cases], np.int64)
+    hi = np.array([c[1] for c in cases], np.int64)
+    out = f.scan_round(lo, hi, cap=256)
+    for i, (l, h) in enumerate(cases):
+        exp = o.range(l, h)
+        n = int(np.asarray(out.count)[i])
+        got = list(
+            zip(
+                np.asarray(out.keys)[i, :n].tolist(),
+                np.asarray(out.vals)[i, :n].tolist(),
+            )
+        )
+        assert got == exp, (i, (l, h), got[:5], exp[:5])
+        assert not bool(np.asarray(out.truncated)[i])
+    # the same intervals as fused OP_RANGE lanes (span encoding)
+    spans = [max(h - l, 0) for l, h in cases]
+    _check_mixed_round(
+        f, o, [OP_RANGE] * len(cases), [c[0] for c in cases], spans, cap=256
+    )
+
+
+def test_cross_shard_truncation_takes_global_smallest():
+    """A truncated cross-shard scan must emit the cap smallest keys overall
+    (lower shards win), and mark truncation."""
+    f = ABForest(n_shards=2, cfg=SMALL, key_space=(0, 100))  # split at 50
+    o = DictOracle()
+    keys = list(range(100))
+    f.apply_round([OP_INSERT] * 100, keys, keys)
+    o.apply_round([OP_INSERT] * 100, keys, keys)
+    out = f.scan_round([30], [90], cap=10)
+    n = int(np.asarray(out.count)[0])
+    assert n == 10
+    assert np.asarray(out.keys)[0, :n].tolist() == list(range(30, 40))
+    assert bool(np.asarray(out.truncated)[0])
+
+
+def test_forest_scan_stream_chains_shard_cursors():
+    """scan_stream pages stay ≤ cap, cross shard boundaries in order, and
+    every page's gather touches only the shard holding the cursor."""
+    f = ABForest(n_shards=4, cfg=SMALL, key_space=(0, 2000))
+    o = DictOracle()
+    rng = np.random.default_rng(13)
+    keys = rng.choice(2000, size=150, replace=False).tolist()
+    vals = [k * 5 for k in keys]
+    f.apply_round([OP_INSERT] * 150, keys, vals)
+    o.apply_round([OP_INSERT] * 150, keys, vals)
+    assert list(f.scan_stream(0, 2000, cap=7)) == o.range(0, 2000)
+    lo, hi = sorted(keys)[10] + 1, sorted(keys)[120]
+    assert list(f.scan_stream(lo, hi, cap=7)) == o.range(lo, hi)
+    assert list(f.scan_stream(3000, 4000, cap=7)) == []
+    assert list(f.scan_stream(50, 50, cap=7)) == []
+    with pytest.raises(ValueError, match="cap"):
+        f.scan_stream(0, 100, cap=0)
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_forest_scan_delete_round_is_one_round(mode):
+    """A cross-shard scan+delete is ONE forest round; only emitted keys are
+    deleted, so truncated chunks leave the remainder for the next sweep."""
+    f = ABForest(n_shards=4, cfg=SMALL, mode=mode, key_space=(0, 400))
+    o = DictOracle()
+    keys = list(range(0, 400, 2))
+    f.apply_round([OP_INSERT] * len(keys), keys, [k * 3 for k in keys])
+    o.apply_round([OP_INSERT] * len(keys), keys, [k * 3 for k in keys])
+    r0 = f.stats()["rounds"]
+    out = f.scan_delete_round([90], [310], cap=64)  # spans all 3 boundaries
+    assert f.stats()["rounds"] == r0 + 1
+    n = int(np.asarray(out.count)[0])
+    exp = o.range(90, 310)
+    assert n == 64 and bool(np.asarray(out.truncated)[0])
+    got = list(
+        zip(np.asarray(out.keys)[0, :n].tolist(), np.asarray(out.vals)[0, :n].tolist())
+    )
+    assert got == exp[:64]
+    for k, _ in exp[:64]:
+        o.d.pop(k)
+    assert f.items() == o.items()
+    # second chunk finishes the sweep
+    out = f.scan_delete_round([90], [310], cap=64)
+    assert not bool(np.asarray(out.truncated)[0])
+    for k in np.asarray(out.keys)[0, : int(np.asarray(out.count)[0])].tolist():
+        o.d.pop(k)
+    assert f.items() == o.items()
+    check_forest_invariants(f)
+
+
+def test_forest_shard_overflow_splits():
+    """Crossing max_keys_per_shard re-partitions the hottest shard: a new
+    split point appears, contents stay oracle-exact, scans stay sorted."""
+    f = ABForest(
+        n_shards=2, cfg=SMALL, key_space=(0, 10000), max_keys_per_shard=40
+    )
+    o = DictOracle()
+    rng = np.random.default_rng(17)
+    ks = rng.choice(10000, size=240, replace=False).astype(np.int64)
+    for i in range(0, ks.size, 48):
+        c = ks[i : i + 48]
+        f.apply_round(np.full(c.size, OP_INSERT, np.int32), c, c * 3)
+        o.apply_round([OP_INSERT] * c.size, c.tolist(), (c * 3).tolist())
+    assert f.n_shards > 2
+    assert np.all(np.diff(f.splits) > 0)
+    assert (f._live_key_counts() <= 40).all()
+    assert f.items() == o.items()
+    assert list(f.scan_stream(0, 10000, cap=17)) == o.range(0, 10000)
+    check_forest_invariants(f)
+
+
+def test_cross_shard_lane_validates_against_one_snapshot():
+    """A cross-shard lane's sub-lanes must accept against ONE snapshot.
+    Regression: with independent per-shard acceptance, a writer hitting
+    shard 1 (attempt 0) then shard 0 AND shard 1 (attempt 1) produced a
+    stitched row mixing states that never coexisted."""
+    f = ABForest(n_shards=2, cfg=SMALL, key_space=(0, 400))  # split at 200
+    f.apply_round([OP_INSERT] * 2, [10, 210], [1, 1])
+    calls = {"n": 0}
+
+    def hook():
+        calls["n"] += 1
+        if calls["n"] == 1:  # invalidates shard 1 only
+            f.apply_round([OP_INSERT], [220], [1])
+        elif calls["n"] == 2:  # invalidates BOTH shards
+            f.apply_round([OP_INSERT, OP_DELETE], [20, 210], [1, 0])
+
+    f.scan_hook = hook
+    out = f.scan_round([0], [400], cap=16)  # one lane spanning both shards
+    f.scan_hook = None
+    n = int(np.asarray(out.count)[0])
+    got = np.asarray(out.keys)[0, :n].tolist()
+    # must equal ONE of the states the dictionary actually passed through
+    states = [[10, 210], [10, 210, 220], [10, 20, 220]]
+    assert got in states, got
+    # and lanes on both shards were retried together at least once
+    assert f.stats()["scan_retries"] >= 2
+
+
+def test_scan_hook_overflow_defers_shard_split():
+    """A scan_hook writer pushing a shard past max_keys_per_shard must NOT
+    restack the forest under the in-flight scan's lane routing — the split
+    defers to the next update round (regression: vmap axis mismatch)."""
+    f = ABForest(n_shards=2, cfg=SMALL, key_space=(0, 400), max_keys_per_shard=40)
+    seed = list(range(200, 400, 8))  # shard 1 only, under threshold
+    f.apply_round([OP_INSERT] * len(seed), seed, seed)
+    fired = {}
+
+    def hook():
+        if not fired:
+            fired["x"] = True
+            w = np.arange(0, 100, 2, dtype=np.int64)  # 50 keys > threshold
+            f.apply_round(np.full(w.size, OP_INSERT, np.int32), w, w * 3)
+
+    f.scan_hook = hook
+    out = f.scan_round([0], [400], cap=256)  # spans both shards
+    f.scan_hook = None
+    assert f.n_shards == 2  # split deferred, scan survived
+    # shard 0's lanes retried post-write: the scan sees the hook's keys
+    n = int(np.asarray(out.count)[0])
+    assert np.asarray(out.keys)[0, :n].tolist() == sorted(
+        seed + np.arange(0, 100, 2).tolist()
+    )
+    # the next update round performs the deferred split
+    f.apply_round([OP_INSERT], [399], [1])
+    assert f.n_shards > 2
+    assert (f._live_key_counts() <= 40).all()
+    check_forest_invariants(f)
+
+
+def test_tiny_capacity_pool_grows_before_split_waves():
+    """Regression: pools smaller than a structural wave's allocation slice
+    (2·wave_w) must grow before the first split cascade, tree and forest."""
+    tiny = TreeConfig(capacity=24, b=8, a=2, max_height=12)
+    keys = np.arange(200, dtype=np.int64)
+    f = ABForest(n_shards=2, cfg=tiny, key_space=(0, 1000))
+    f.apply_round(np.full(keys.size, OP_INSERT, np.int32), keys, keys * 2)
+    assert list(f.scan_stream(0, 1000, cap=64)) == [(int(k), int(k) * 2) for k in keys]
+    check_forest_invariants(f)
+    t = ABTree(tiny)
+    t.apply_round(np.full(keys.size, OP_INSERT, np.int32), keys, keys * 2)
+    assert t.items() == {int(k): int(k) * 2 for k in keys}
+
+
+def test_forest_per_shard_conflict_validation():
+    """A concurrent writer (scan_hook) touching one shard retries ONLY that
+    shard's lanes — the conflict-window shrink sharding buys."""
+
+    def run(k):
+        f = ABForest(n_shards=k, cfg=SMALL, key_space=(0, 400))
+        keys = np.arange(0, 400, 2, dtype=np.int64)
+        f.apply_round(np.full(keys.size, OP_INSERT, np.int32), keys, keys)
+        reads = np.arange(0, 400, 8, dtype=np.int64)  # spans all shards
+        fired = {}
+
+        def hook():
+            if not fired:
+                fired["x"] = True
+                w = np.arange(0, 16, 2, dtype=np.int64)  # shard-0 keys only
+                ops = np.concatenate(
+                    [np.full(8, OP_DELETE, np.int32), np.full(8, OP_INSERT, np.int32)]
+                )
+                f.apply_round(ops, np.concatenate([w, w]), np.concatenate([w, w * 9]))
+
+        f.scan_hook = hook
+        out = f.scan_round(reads, reads + 1, cap=1)
+        f.scan_hook = None
+        assert int(np.asarray(out.count).sum()) == reads.size  # all still found
+        return f.stats()["scan_retries"]
+
+    r1, r4 = run(1), run(4)
+    assert r1 == 50  # whole batch retried once
+    assert 0 < r4 < r1  # only the written shard's lanes retried
+
+
+def test_forest_backed_session_index_evict_range():
+    """Regression (satellite): SessionIndex(shards=...) keeps the
+    one-fused-round-per-chunk evict_range contract across shard
+    boundaries, and frees exactly the evicted page-table ids."""
+    from repro.serve.pages import SessionIndex
+
+    si = SessionIndex(mode="elim", shards=2, key_space=(0, 256))
+    si.publish_batch(list(range(100, 140)), list(range(40)))
+    r0 = si.tree.stats()["rounds"]
+    # [100, 136) straddles the shard boundary at 128; 36 matches, cap 8 → 5 chunks
+    freed = si.evict_range(100, 136, cap=8)
+    assert sorted(freed) == list(range(36))
+    assert si.tree.stats()["rounds"] - r0 == 5  # one fused round per chunk
+    assert si.lookup_batch([135, 136, 139]) == [None, 36, 39]
+    # single-tree behavior is unchanged
+    si1 = SessionIndex(mode="elim")
+    si1.publish_batch(list(range(100, 140)), list(range(40)))
+    r0 = si1.tree.stats()["rounds"]
+    assert sorted(si1.evict_range(100, 136, cap=8)) == list(range(36))
+    assert si1.tree.stats()["rounds"] - r0 == 5
+
+
+def test_forest_backed_prefix_index_roundtrip():
+    from repro.serve.pages import PrefixIndex
+
+    idx = PrefixIndex(shards=4)
+    hs = [123456789012345, 7, 2**62 + 5, 999]
+    idx.publish_batch(hs, [1, 2, 3, 4])
+    assert idx.lookup_batch(hs) == [1, 2, 3, 4]
+    assert idx.lookup_batch([42]) == [None]
+    idx.evict_batch([7])
+    assert idx.lookup_batch(hs) == [1, None, 3, 4]
+
+
+def test_forest_narrow_scan_matches_ref_path():
+    """narrow_scan=True (Pallas int32 kernel inside the vmapped fused scan)
+    must be bit-identical to the int64 jnp ref path."""
+    rng = np.random.default_rng(19)
+    keys = rng.choice(2000, size=150, replace=False).tolist()
+    vals = [k * 5 for k in keys]
+    outs = []
+    for narrow in (False, True):
+        f = ABForest(n_shards=4, cfg=SMALL, key_space=(0, 2000), narrow_scan=narrow)
+        f.apply_round([OP_INSERT] * 150, keys, vals)
+        outs.append(
+            f.apply_round(
+                [OP_RANGE] * 3, [0, 777, 1500], [800, 600, 10**6], scan_cap=64
+            )
+        )
+    for field in ("keys", "vals", "count", "truncated"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs[0].scan, field)),
+            np.asarray(getattr(outs[1].scan, field)),
+        )
+
+
+def test_forest_malformed_lanes_raise():
+    f = ABForest(n_shards=2, cfg=SMALL, key_space=(0, 100))
+    with pytest.raises(ValueError, match="malformed"):
+        f.apply_round([OP_RANGE, OP_INSERT], [10, 1], [-2, 5])
+    with pytest.raises(ValueError, match="unknown op"):
+        f.apply_round([7], [0], [0])
+    with pytest.raises(ValueError, match="equal-length"):
+        f.apply_round([OP_INSERT], [1, 2], [0, 0])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (skipped when hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    lane_strategy = st.one_of(
+        st.tuples(  # point lane
+            st.sampled_from([OP_FIND, OP_INSERT, OP_DELETE]),
+            st.integers(min_value=0, max_value=30),
+            st.integers(min_value=0, max_value=10**6),
+        ),
+        st.tuples(  # range lane: lo in the same hot key range, short span
+            st.just(OP_RANGE),
+            st.integers(min_value=0, max_value=30),
+            st.integers(min_value=0, max_value=12),
+        ),
+    )
+
+    @settings(
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    @given(
+        rounds=st.lists(
+            st.lists(lane_strategy, min_size=1, max_size=30), min_size=1, max_size=4
+        ),
+        n_shards=st.sampled_from([1, 2, 4]),
+        mode=st.sampled_from(["elim", "occ"]),
+    )
+    def test_property_forest_oracle_equivalence(rounds, n_shards, mode):
+        """ABForest(n_shards=k) is oracle-equivalent for random mixed rounds
+        and every k — shard routing, packing, sub-lane splitting and
+        stitching preserve the single-round linearization exactly.  Keys are
+        drawn around the shard boundaries (key_space (0, 32) with up to 4
+        shards ⇒ boundaries at 8/16/24 sit inside the hot range)."""
+        f = ABForest(n_shards=n_shards, cfg=SMALL, mode=mode, key_space=(0, 32))
+        o = DictOracle()
+        for r in rounds:
+            ops = [x[0] for x in r]
+            keys = [x[1] for x in r]
+            vals = [x[2] for x in r]
+            _check_mixed_round(f, o, ops, keys, vals, cap=16)
+        check_forest_invariants(f)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_forest_oracle_equivalence():
+        pass
