@@ -1,6 +1,14 @@
 """Kernel microbenchmarks: Pallas (interpret on CPU — structural check)
-vs the pure-jnp oracles (XLA-compiled, the actual CPU fast path)."""
+vs the pure-jnp oracles (XLA-compiled, the actual CPU fast path).
+
+The ``search_phase.hlo`` records report host-visible XLA sort/gather op
+counts lowered from the round engine's search and scan-descent phases —
+the structural metric the device-resident search path (kernels/
+tree_descend) is buying down: zero sorts in the scan descent on every
+path, and the narrow point-op search collapsing to one fused kernel."""
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 import jax
@@ -13,8 +21,106 @@ from repro.kernels.leaf_probe import leaf_probe_pallas, leaf_probe_ref
 from benchmarks.common import emit, timeit
 
 
+def _hlo_op_counts():
+    """Lower the search/scan phases both ways and count sort/gather ops."""
+    from repro.core import ABTree, OP_INSERT, TreeConfig
+    from repro.core import rounds as R
+    from repro.core.abtree import frontier_expand
+
+    t = ABTree(TreeConfig(capacity=2048, b=8, a=2, max_height=12))
+    rng = np.random.default_rng(0)
+    keys = rng.choice(10**6, size=600, replace=False).astype(np.int64)
+    t.apply_round(np.full(600, OP_INSERT, np.int32), keys, keys)
+    lo = jnp.asarray([0, 10**5], jnp.int64)
+    hi = jnp.asarray([10**4, 10**6], jnp.int64)
+    fe = jax.jit(
+        functools.partial(frontier_expand, frontier_cap=16), static_argnums=(1,)
+    )
+    batch = (
+        jnp.zeros((256,), jnp.int32) + np.int32(OP_INSERT),
+        jnp.asarray(rng.integers(0, 10**6, 256), jnp.int64),
+        jnp.zeros((256,), jnp.int64),
+    )
+    for name, txt in (
+        ("scan_descent", fe.lower(t.state, t.cfg, lo, hi).as_text()),
+        ("scan_phase.narrow", R._phase_scan.lower(
+            t.state, t.cfg, lo, hi, 16, 32, True, True).as_text()),
+        ("search.ref", R._phase_search_combine.lower(
+            t.state, batch, t.cfg, False).as_text()),
+        ("search.narrow", R._phase_search_combine.lower(
+            t.state, batch, t.cfg, True).as_text()),
+    ):
+        sorts = txt.count("stablehlo.sort")
+        gathers = txt.count("stablehlo.gather")
+        emit(
+            f"kernel.search_phase.hlo.{name}", 0.0,
+            f"sorts={sorts};gathers={gathers}",
+            hlo_sorts=sorts, hlo_gathers=gathers,
+        )
+
+
 def main(quick=False):
     rng = np.random.default_rng(0)
+
+    # fused descent + probe (tree_descend): jnp ref path vs Pallas interpret
+    from repro.core import ABTree, OP_INSERT, TreeConfig
+    from repro.core.rounds import _search_leaves
+
+    t = ABTree(TreeConfig(capacity=4096, b=8, a=2, max_height=16))
+    tkeys = rng.choice(1 << 30, size=1500, replace=False).astype(np.int64)
+    t.apply_round(np.full(1500, OP_INSERT, np.int32), tkeys, tkeys)
+    q = jnp.asarray(rng.choice(tkeys, 1024).astype(np.int64))
+    for narrow, tag in ((False, "ref_xla"), (True, "pallas_interp")):
+        fn = jax.jit(
+            functools.partial(_search_leaves, narrow=narrow), static_argnums=(1,)
+        )
+        jax.block_until_ready(fn(t.state, t.cfg, q))
+        dt = timeit(lambda: jax.block_until_ready(fn(t.state, t.cfg, q)))
+        emit(f"kernel.tree_descend.{tag}", dt * 1e6, "batch=1024;pool=4096")
+
+    # segmented frontier compaction: argsort oracle vs scatter jnp vs Pallas
+    from repro.kernels.tree_descend import (
+        frontier_compact,
+        frontier_compact_ref,
+    )
+
+    bsz, m, f = 64, 288, 32
+    cand = jnp.asarray(rng.integers(0, 4096, (bsz, m)), jnp.int32)
+    valid = jnp.asarray(rng.random((bsz, m)) < 0.15)
+    ref = jax.jit(lambda c, v: frontier_compact_ref(c, v, f, scratch=0))
+    jnp_path = jax.jit(lambda c, v: frontier_compact(c, v, f, scratch=0))
+    jax.block_until_ready(ref(cand, valid))
+    jax.block_until_ready(jnp_path(cand, valid))
+    dt = timeit(lambda: jax.block_until_ready(ref(cand, valid)))
+    emit("kernel.frontier_compact.argsort_ref", dt * 1e6, f"m={m};f={f}")
+    dt = timeit(lambda: jax.block_until_ready(jnp_path(cand, valid)))
+    emit("kernel.frontier_compact.cumsum_xla", dt * 1e6, f"m={m};f={f}")
+    pallas_path = lambda: jax.block_until_ready(
+        frontier_compact(cand, valid, f, scratch=0, use_pallas=True)
+    )
+    pallas_path()  # warm: trace/lower outside the timed region
+    dt = timeit(pallas_path)  # iters=3: single-shot interpret timings are noisy
+    emit("kernel.frontier_compact.pallas_interp", dt * 1e6, "interpret-mode")
+
+    # rank-select: pairwise vs tiled at a large frontier
+    from repro.kernels.range_scan.kernel import range_scan_pallas
+
+    n = 512 if quick else 1024
+    sk = np.stack([rng.choice(10**7, size=n, replace=False) for _ in range(8)])
+    sk = sk.astype(np.int32)
+    sv = rng.integers(0, 10**6, (8, n)).astype(np.int32)
+    slo = np.zeros(8, np.int32)
+    shi = np.full(8, 10**7, np.int32)
+    a = (jnp.asarray(sk), jnp.asarray(sv), jnp.asarray(slo), jnp.asarray(shi))
+    for tile, tag in ((-1, "pairwise"), (128, "tiled128")):
+        run = lambda: jax.block_until_ready(
+            range_scan_pallas(*a, cap=128, tile_n=tile)
+        )
+        run()  # warm: trace/lower outside the timed region
+        dt = timeit(run)  # iters=3: single-shot interpret timings are noisy
+        emit(f"kernel.rank_select.{tag}", dt * 1e6, f"n={n};cap=128")
+
+    _hlo_op_counts()
 
     # leaf probe
     bsz, b = 4096, 8
@@ -27,7 +133,6 @@ def main(quick=False):
     emit("kernel.leaf_probe.ref_xla", t * 1e6, f"batch={bsz}")
     t = timeit(
         lambda: jax.block_until_ready(leaf_probe_pallas(keys, vals, qs, interpret=True)),
-        iters=1,
     )
     emit("kernel.leaf_probe.pallas_interp", t * 1e6, "interpret-mode (structural)")
 

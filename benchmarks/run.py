@@ -16,22 +16,101 @@ counts, conflict retries, …) so the perf trajectory accumulates.
   kernels       — per-kernel timings
   roofline      — §Roofline terms from results/dryrun.json (if present)
 
-``python -m benchmarks.run [--quick] [--only SECTION]``
+``python -m benchmarks.run [--quick] [--only SECTION]
+[--check BASELINE.json ...] [--check-tol T]``
+
+``--check`` turns the run into a regression gate: each given committed
+baseline (a prior ``results/BENCH_<section>.json``) is loaded *before* the
+run overwrites it, the matching section's fresh records are compared
+record-by-record — ``ops_per_s``-style throughput metrics must reach
+``(1 - T)`` of the baseline and round counts must match exactly (rounds are
+deterministic for a given workload + flags) — and the process exits
+non-zero on any regression.  Compare runs with the same ``--quick`` setting
+as the baseline; the default tolerance is generous because the gate is a
+cliff detector, not a microbenchmark.
 """
 from __future__ import annotations
 
 import argparse
 import functools
+import json
 import os
 import sys
 import traceback
+
+# metrics compared under the relative tolerance (higher is better);
+# integral metrics compared exactly.
+_THROUGHPUT_KEYS = ("ops_per_s", "items_per_s")
+_EXACT_KEYS = ("rounds", "rounds_fused", "rounds_split")
+
+
+def check_against_baseline(records, baseline: dict, tol: float):
+    """Compare one section's fresh ``records`` against a loaded baseline
+    dict (``{"workload": ..., "results": [...]}``).  Returns a list of
+    failure strings (empty = pass)."""
+    fresh = {r["name"]: r for r in records}
+    failures = []
+    compared = 0
+    for base in baseline.get("results", []):
+        got = fresh.get(base["name"])
+        if got is None:
+            failures.append(f"{base['name']}: missing from fresh run")
+            continue
+        for k in _THROUGHPUT_KEYS:
+            if k in base and k in got:
+                compared += 1
+                floor = (1.0 - tol) * float(base[k])
+                if float(got[k]) < floor:
+                    failures.append(
+                        f"{base['name']}.{k}: {float(got[k]):.1f} < "
+                        f"{floor:.1f} (= (1-{tol})·baseline {float(base[k]):.1f})"
+                    )
+        for k in _EXACT_KEYS:
+            if k in base and k in got:
+                compared += 1
+                if int(got[k]) != int(base[k]):
+                    failures.append(
+                        f"{base['name']}.{k}: {int(got[k])} != baseline {int(base[k])}"
+                    )
+    if compared == 0:
+        failures.append(
+            f"baseline {baseline.get('workload')!r}: nothing comparable "
+            f"(section not run, or records renamed)"
+        )
+    return failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--check",
+        nargs="+",
+        default=None,
+        metavar="BASELINE.json",
+        help="committed BENCH_<section>.json files to gate the fresh run "
+        "against (loaded before the run overwrites them)",
+    )
+    ap.add_argument(
+        "--check-tol",
+        type=float,
+        default=0.6,
+        help="allowed fractional throughput drop vs baseline (default 0.6: "
+        "fresh ops/s must reach 40%% of baseline — a cliff detector that "
+        "tolerates machine variance; tighten locally for perf work)",
+    )
     args = ap.parse_args()
+
+    baselines = []
+    for path in args.check or []:
+        if not os.path.exists(path):
+            sys.exit(
+                f"--check baseline {path!r} not found — baselines must be "
+                f"committed (results/ is gitignored: use `git add -f`)"
+            )
+        with open(path) as f:  # load BEFORE the run overwrites results/
+            baselines.append((path, json.load(f)))
 
     from benchmarks import (
         elim_rate,
@@ -58,6 +137,7 @@ def main() -> None:
     from benchmarks.common import drain_records, write_bench_json
 
     print("name,us_per_call,derived")
+    section_records = {}
     for name, fn in sections.items():
         if args.only and name != args.only:
             continue
@@ -69,16 +149,36 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
         records = drain_records()
         if records:
+            section_records[name] = records
             path = write_bench_json(name, records)
             print(f"# wrote {path}")
+
+    failures = []
+    for path, baseline in baselines:
+        section = baseline.get("workload")
+        records = section_records.get(section, [])
+        for msg in check_against_baseline(records, baseline, args.check_tol):
+            failures.append(f"{path}: {msg}")
+    if args.check:
+        if failures:
+            # restore the committed baselines the run just overwrote, so a
+            # re-run still compares against the ORIGINAL numbers instead of
+            # silently ratcheting the floor down to the regressed run.
+            for path, baseline in baselines:
+                with open(path, "w") as f:
+                    json.dump(baseline, f, indent=2)
+                    f.write("\n")
+            print("# --- check: REGRESSION (baseline files restored) ---")
+            for msg in failures:
+                print(f"# CHECK FAIL {msg}")
+            sys.exit(1)
+        print(f"# --- check: OK ({len(baselines)} baseline(s), tol={args.check_tol}) ---")
 
     # roofline summary (from the dry-run artifact, if present)
     if args.only in (None, "roofline"):
         path = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
         if os.path.exists(path):
             print("# --- roofline ---")
-            import json
-
             from repro.analysis.report import summary
 
             with open(path) as f:

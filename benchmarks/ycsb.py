@@ -26,8 +26,14 @@
   E: the same fused mixed rounds, with cross-shard OP_RANGE lanes split at
      shard boundaries and executed as one vmapped round.
 
+``--narrow`` asserts the workload's keys/values fit int32 (true for every
+YCSB config here) and routes the whole search path through the
+``kernels/tree_descend`` + ``kernels/range_scan`` device kernels (fused
+descent+probe, Pallas frontier compaction, kernel rank-select) instead of
+the int64 jnp references — the A/B for the device-resident search path.
+
 ``python benchmarks/ycsb.py [--workload A|E] [--scan-path fused|split|both]
-[--shards K] [--quick]``
+[--shards K] [--narrow] [--quick]``
 """
 from __future__ import annotations
 
@@ -55,14 +61,14 @@ from repro.data.workloads import (
 from benchmarks.common import emit
 
 
-def _run_a(quick=False):
+def _run_a(quick=False, narrow=False):
     key_range = 4096
     batch = 512
     rounds = 10 if quick else 30
     rows = np.zeros(key_range, np.int64)
     rng = np.random.default_rng(3)
     for mode in ("elim", "occ"):
-        tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
+        tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode, narrow=narrow)
         prefill_tree(tree, WorkloadConfig(key_range=key_range, seed=1))
         keys = zipf_keys(rng, batch * rounds, key_range, 0.5)
         is_write = rng.random(batch * rounds) < 0.5
@@ -79,7 +85,7 @@ def _run_a(quick=False):
         dt = time.perf_counter() - t0
         n_ops = batch * rounds
         emit(
-            f"ycsb_a.{mode}",
+            f"ycsb_a.{mode}{'.narrow' if narrow else ''}",
             dt / n_ops * 1e6,
             f"tx/s={n_ops/dt:.0f}",
             ops_per_s=n_ops / dt,
@@ -87,7 +93,7 @@ def _run_a(quick=False):
         )
 
 
-def run_a_forest(shards, quick=False, key_range=4096, batch=256):
+def run_a_forest(shards, quick=False, key_range=4096, batch=256, narrow=False):
     """YCSB-A on an ``ABForest``: reads as validated optimistic point-reads
     under a concurrent writer replica (the ``scan_hook``).  Returns metrics
     incl. ``conflict_retries`` = retried lanes (per-shard validation only
@@ -99,6 +105,7 @@ def run_a_forest(shards, quick=False, key_range=4096, batch=256):
         cfg=TPU8._replace(capacity=4 * key_range),
         mode="elim",
         key_space=(0, key_range),
+        narrow=narrow,
     )
     prefill_tree(forest, wl)
     rng = np.random.default_rng(3)
@@ -152,7 +159,7 @@ def run_a_forest(shards, quick=False, key_range=4096, batch=256):
     }
 
 
-def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128):
+def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128, narrow=False):
     """YCSB-E fused mixed rounds on an ``ABForest`` (cross-shard OP_RANGE
     lanes split at shard boundaries, one vmapped round per batch)."""
     rounds_n = 6 if quick else 20
@@ -164,6 +171,7 @@ def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128):
         cfg=TPU8._replace(capacity=4 * key_range),
         mode="elim",
         key_space=(0, key_range),
+        narrow=narrow,
     )
     prefill_tree(forest, wl)
     for ops, keys, vals in ycsb_e_stream(wl, 3):  # warm
@@ -186,13 +194,14 @@ def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128):
     }
 
 
-def _run_a_sharded(shards, quick=False):
+def _run_a_sharded(shards, quick=False, narrow=False):
     per = {}
+    sfx = ".narrow" if narrow else ""
     for k in sorted({1, shards}):
-        m = run_a_forest(k, quick=quick)
+        m = run_a_forest(k, quick=quick, narrow=narrow)
         per[k] = m
         emit(
-            f"ycsb_a.forest.s{k}",
+            f"ycsb_a.forest.s{k}{sfx}",
             m["us_per_op"],
             f"tx/s={m['ops_per_s']:.0f};conflict_retries={m['conflict_retries']};"
             f"retries/op={m['retries_per_op']:.3f}",
@@ -206,7 +215,7 @@ def _run_a_sharded(shards, quick=False):
                 f"1-shard baseline {r1:.3f}"
             )
         emit(
-            f"ycsb_a.forest.s{shards}_vs_s1",
+            f"ycsb_a.forest.s{shards}_vs_s1{sfx}",
             0.0,
             f"retries/op={rk:.3f} vs {r1:.3f} ({r1 / max(rk, 1e-9):.2f}x fewer)",
             retries_per_op_sharded=rk,
@@ -214,13 +223,14 @@ def _run_a_sharded(shards, quick=False):
         )
 
 
-def _run_e_sharded(shards, quick=False):
+def _run_e_sharded(shards, quick=False, narrow=False):
     per = {}
+    sfx = ".narrow" if narrow else ""
     for k in sorted({1, shards}):
-        m = run_e_forest(k, quick=quick)
+        m = run_e_forest(k, quick=quick, narrow=narrow)
         per[k] = m
         emit(
-            f"ycsb_e.forest.s{k}",
+            f"ycsb_e.forest.s{k}{sfx}",
             m["us_per_op"],
             f"tx/s={m['ops_per_s']:.0f};items/s={m['items_per_s']:.0f};"
             f"conflict_retries={m['conflict_retries']}",
@@ -228,7 +238,7 @@ def _run_e_sharded(shards, quick=False):
         )
     if shards > 1:
         emit(
-            f"ycsb_e.forest.s{shards}_vs_s1",
+            f"ycsb_e.forest.s{shards}_vs_s1{sfx}",
             0.0,
             f"speedup={per[1]['us_per_op'] / per[shards]['us_per_op']:.2f}x",
             us_per_op_sharded=per[shards]["us_per_op"],
@@ -236,14 +246,14 @@ def _run_e_sharded(shards, quick=False):
         )
 
 
-def _run_e_path(mode, path, wl, rounds, cap):
+def _run_e_path(mode, path, wl, rounds, cap, narrow=False):
     """Run YCSB-E in one (tree mode, scan path) config; returns metrics.
 
     fused: one ``apply_round`` per mixed batch (the round engine's fused
     scan+update pipeline).  split: the legacy host-split baseline — one
     ``scan_round`` + one ``apply_round`` per batch (2 rounds/batch)."""
     key_range = wl.key_range
-    tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
+    tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode, narrow=narrow)
     prefill_tree(tree, wl)
     # warm: several rounds so the scan frontier reaches steady state and
     # every (frontier, cap) jit compile lands outside the timed region
@@ -279,7 +289,7 @@ def _run_e_path(mode, path, wl, rounds, cap):
     }
 
 
-def _run_e(quick=False, scan_path="both"):
+def _run_e(quick=False, scan_path="both", narrow=False):
     key_range = 4096
     batch = 256
     rounds = 6 if quick else 20
@@ -289,10 +299,10 @@ def _run_e(quick=False, scan_path="both"):
     for mode in ("elim", "occ"):
         per_path = {}
         for path in paths:
-            m = _run_e_path(mode, path, wl, rounds, cap)
+            m = _run_e_path(mode, path, wl, rounds, cap, narrow=narrow)
             per_path[path] = m
             emit(
-                f"ycsb_e.{mode}.{path}",
+                f"ycsb_e.{mode}.{path}{'.narrow' if narrow else ''}",
                 m["us_per_op"],
                 f"tx/s={m['ops_per_s']:.0f};items/s={m['items_per_s']:.0f};"
                 f"rounds={m['rounds']};scan_retries={m['scan_retries']}",
@@ -316,17 +326,17 @@ def _run_e(quick=False, scan_path="both"):
             )
 
 
-def main(quick=False, workload="A", scan_path="both", shards=0):
+def main(quick=False, workload="A", scan_path="both", shards=0, narrow=False):
     if workload.upper() == "A":
         if shards:
-            _run_a_sharded(shards, quick=quick)
+            _run_a_sharded(shards, quick=quick, narrow=narrow)
         else:
-            _run_a(quick=quick)
+            _run_a(quick=quick, narrow=narrow)
     elif workload.upper() == "E":
         if shards:
-            _run_e_sharded(shards, quick=quick)
+            _run_e_sharded(shards, quick=quick, narrow=narrow)
         else:
-            _run_e(quick=quick, scan_path=scan_path)
+            _run_e(quick=quick, scan_path=scan_path, narrow=narrow)
     else:
         raise ValueError(f"unknown YCSB workload {workload!r} (A or E)")
 
@@ -353,6 +363,13 @@ if __name__ == "__main__":
         "single-tree path).  Workload A fails unless the sharded run has "
         "strictly fewer conflict retries per op than the baseline",
     )
+    ap.add_argument(
+        "--narrow",
+        action="store_true",
+        help="route the search path through the int32 device kernels "
+        "(fused descent+probe, Pallas frontier compaction, kernel "
+        "rank-select) — the device-resident A/B against the jnp refs",
+    )
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     main(
@@ -360,4 +377,5 @@ if __name__ == "__main__":
         workload=args.workload,
         scan_path=args.scan_path,
         shards=args.shards,
+        narrow=args.narrow,
     )

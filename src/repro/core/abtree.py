@@ -53,6 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import elimination as elim
+from repro.kernels.tree_descend.ops import frontier_compact
+from repro.kernels.tree_descend.ref import descend_ref, probe_ref
 
 # ----------------------------------------------------------------------------
 # Constants & state
@@ -181,33 +183,25 @@ def make_tree(cfg: TreeConfig) -> TreeState:
 
 
 # ----------------------------------------------------------------------------
-# Phase 1: vectorized descent + probe (pure-jnp oracle of kernels/leaf_probe)
+# Phase 1: vectorized descent + probe.  The implementations live in
+# kernels/tree_descend/ref.py (the pure-jnp oracles of the fused Pallas
+# descent+probe kernel); these wrappers bind them to the TreeState layout so
+# the host path and the kernel oracle can never drift.
 # ----------------------------------------------------------------------------
 
 
 def descend(state: TreeState, keys: jax.Array, cfg: TreeConfig) -> jax.Array:
     """Root-to-leaf search for a batch of keys → leaf ids.  The per-level
     child choice mirrors the paper's ``search``: follow ptrs[#routers ≤ key]."""
-
-    def body(_, node_ids):
-        routers = state.keys[node_ids, : cfg.b - 1]  # (U, b-1); unused = EMPTY
-        # idx = number of routers ≤ key  (EMPTY > any user key ⇒ not counted)
-        idx = jnp.sum(routers <= keys[:, None], axis=1).astype(jnp.int32)
-        child = state.children[node_ids, idx]
-        return jnp.where(state.is_leaf[node_ids], node_ids, child)
-
-    start = jnp.zeros(keys.shape, jnp.int32) + state.root
-    return jax.lax.fori_loop(0, cfg.max_height, body, start)
+    return descend_ref(
+        state.keys, state.children, state.is_leaf, state.root, keys,
+        max_height=cfg.max_height,
+    )
 
 
 def probe(state: TreeState, leaf_ids: jax.Array, keys: jax.Array):
     """Unsorted-leaf probe: lane-parallel compare across the b slots."""
-    rows = state.keys[leaf_ids]  # (U, b)
-    eq = rows == keys[:, None]
-    found = jnp.any(eq, axis=1)
-    slot = jnp.argmax(eq, axis=1).astype(jnp.int32)
-    val = state.vals[leaf_ids, slot]
-    return found, slot, jnp.where(found, val, NOTFOUND)
+    return probe_ref(state.keys, state.vals, leaf_ids, keys, notfound=NOTFOUND)
 
 
 # ----------------------------------------------------------------------------
@@ -717,14 +711,18 @@ class RoundOutput(NamedTuple):
 
 
 def frontier_expand(
-    state: TreeState, cfg: TreeConfig, lo: jax.Array, hi: jax.Array, frontier_cap: int
+    state: TreeState, cfg: TreeConfig, lo: jax.Array, hi: jax.Array,
+    frontier_cap: int, *, narrow: bool = False,
 ):
     """Expand each query's root into its leaf frontier — the set of leaves
     whose key range intersects ``[lo, hi)`` — level by level, wholly on
     device.  Internal nodes expand to the children whose range intersects
     the interval (the batched form of ``range_query``'s host DFS); leaves
     self-propagate, so after ``max_height`` iterations every frontier slot
-    is a leaf.
+    is a leaf.  Per-level compaction of the surviving candidates goes
+    through ``kernels/tree_descend``'s segmented cumsum-rank compaction
+    (the Pallas kernel under the ``narrow`` gate, the scatter-based jnp
+    form otherwise) — no sort network on either path.
 
     Returns ``(leaves (B,F), cand_keys (B,F·b), cand_vals (B,F·b),
     touched (L,B,F), overflow (B,))``.  ``touched`` records every node id
@@ -773,11 +771,10 @@ def frontier_expand(
         cand_valid = jnp.concatenate(
             [expand, keep[:, :, None]], axis=2
         ).reshape(bsz, f * (b + 1))
-        overflow = overflow | (jnp.sum(cand_valid, axis=1) > f)
-        order = jnp.argsort(~cand_valid, axis=1, stable=True).astype(jnp.int32)
-        frontier = jnp.take_along_axis(cand, order, axis=1)[:, :f].astype(jnp.int32)
-        valid = jnp.take_along_axis(cand_valid, order, axis=1)[:, :f]
-        return frontier, valid, touched, overflow
+        frontier, valid, of = frontier_compact(
+            cand, cand_valid, f, scratch=scratch, use_pallas=narrow
+        )
+        return frontier, valid, touched, overflow | of
 
     frontier, valid, touched, overflow = jax.lax.fori_loop(
         0, cfg.max_height, body, (frontier0, valid0, touched0, overflow0)
@@ -807,7 +804,7 @@ class ABTree:
 
     def __init__(
         self, cfg: TreeConfig = TreeConfig(), mode: str = "elim",
-        *, narrow_scan: bool = False,
+        *, narrow_scan: bool = False, narrow: bool = False,
     ):
         assert mode in ("elim", "occ")
         assert 2 <= cfg.a <= cfg.b // 2, "(a,b) requires 2 ≤ a ≤ b/2"
@@ -820,7 +817,14 @@ class ABTree:
         # kernels/range_scan Pallas kernel instead of the int64 jnp ref.
         # Keys at/above 2**31 - 1 would be conflated with the kernel's EMPTY
         # sentinel — leave False for unbounded key spaces (e.g. hash keys).
-        self.narrow_scan = narrow_scan
+        #
+        # narrow=True extends the same int32 assertion to the whole search
+        # path: point-op descents (search / retry / overfull phases) run the
+        # fused kernels/tree_descend descent+probe kernel with the pool
+        # pinned in VMEM, and scan-phase frontier compaction uses its Pallas
+        # form.  Implies narrow_scan.
+        self.narrow = narrow
+        self.narrow_scan = narrow_scan or narrow
         self._wave_w = 64  # pad width for structural waves (recompile-bounded)
         # durable layer hook: OCC durability commits after EVERY sub-round
         # (each sub-round's returns causally follow the previous one — the

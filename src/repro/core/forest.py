@@ -85,6 +85,7 @@ from repro.core.rounds import (
     _phase_shrink,
     _phase_split,
     _phase_underfull,
+    gather_until_frontier_fits,
 )
 
 # ----------------------------------------------------------------------------
@@ -92,15 +93,22 @@ from repro.core.rounds import (
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6))
-def _v_scan(state, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int, narrow: bool):
-    f = lambda st, l, h: _phase_scan(st, cfg, l, h, frontier_cap, cap, narrow)
+@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6, 7))
+def _v_scan(
+    state, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int,
+    narrow: bool, narrow_descent: bool = False,
+):
+    f = lambda st, l, h: _phase_scan(
+        st, cfg, l, h, frontier_cap, cap, narrow, narrow_descent
+    )
     return jax.vmap(f)(state, lo, hi)
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _v_search_combine(state, batch, cfg: TreeConfig):
-    return jax.vmap(lambda st, b: _phase_search_combine(st, b, cfg))(state, batch)
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _v_search_combine(state, batch, cfg: TreeConfig, narrow: bool = False):
+    return jax.vmap(lambda st, b: _phase_search_combine(st, b, cfg, narrow))(
+        state, batch
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
@@ -109,15 +117,15 @@ def _v_apply(state, cfg: TreeConfig, ks, arrival, leaf_ids, slot, res):
     return jax.vmap(f)(state, ks, arrival, leaf_ids, slot, res)
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _v_retry_insert(state, cfg: TreeConfig, ks, vals, arrival, deferred):
-    f = lambda st, a, b, c, d: _phase_retry_insert(st, cfg, a, b, c, d)
+@functools.partial(jax.jit, static_argnums=(1, 6))
+def _v_retry_insert(state, cfg: TreeConfig, ks, vals, arrival, deferred, narrow=False):
+    f = lambda st, a, b, c, d: _phase_retry_insert(st, cfg, a, b, c, d, narrow)
     return jax.vmap(f)(state, ks, vals, arrival, deferred)
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _v_overfull(state, cfg: TreeConfig, ks, deferred):
-    return jax.vmap(lambda st, k, d: _phase_overfull_leaves(st, cfg, k, d))(
+@functools.partial(jax.jit, static_argnums=(1, 4))
+def _v_overfull(state, cfg: TreeConfig, ks, deferred, narrow=False):
+    return jax.vmap(lambda st, k, d: _phase_overfull_leaves(st, cfg, k, d, narrow))(
         state, ks, deferred
     )
 
@@ -186,6 +194,7 @@ class ABForest:
         splits=None,
         key_space: Optional[Tuple[int, int]] = None,
         narrow_scan: bool = False,
+        narrow: bool = False,
         max_keys_per_shard: Optional[int] = None,
     ):
         assert mode in ("elim", "occ")
@@ -194,7 +203,11 @@ class ABForest:
         self.cfg = cfg
         self.mode = mode
         self.n_shards = int(n_shards)
-        self.narrow_scan = narrow_scan
+        # same contracts as ABTree: narrow_scan = int32 keys/values on the
+        # scan gather; narrow = the whole search path (vmapped fused
+        # descent+probe kernel + Pallas frontier compaction per shard).
+        self.narrow = narrow
+        self.narrow_scan = narrow_scan or narrow
         if splits is not None:
             splits = np.asarray(splits, np.int64).reshape(-1)
             assert splits.size == self.n_shards - 1, (
@@ -562,17 +575,13 @@ class ABForest:
         try:
             for _attempt in range(max_retries):
                 snap = self.state
-                guard = 0
-                while True:
-                    out, touched, overflow = _v_scan(
-                        snap, self.cfg, lo_sw, hi_sw,
-                        self._scan_frontier, cap, self.narrow_scan,
-                    )
-                    if not bool(jnp.any(overflow)):
-                        break
-                    guard += 1
-                    assert guard < 32, "scan frontier growth diverged"
-                    self._scan_frontier *= 2  # recompile-bounded (powers of two)
+                out, touched = gather_until_frontier_fits(
+                    self,
+                    lambda fc: _v_scan(
+                        snap, self.cfg, lo_sw, hi_sw, fc, cap,
+                        self.narrow_scan, self.narrow,
+                    ),
+                )
                 if self.scan_hook is not None:
                     self.scan_hook()
                 snap_ver = np.asarray(snap.ver)
@@ -619,7 +628,7 @@ class ABForest:
 
     def _combine_apply(self, ops_sw, keys_sw, vals_sw):
         self.state, pack = _v_search_combine(
-            self.state, (ops_sw, keys_sw, vals_sw), self.cfg
+            self.state, (ops_sw, keys_sw, vals_sw), self.cfg, self.narrow
         )
         ks, arrival, leaf_ids, slot, res, results, found = pack
         self.state, deferred = _v_apply(
@@ -631,17 +640,28 @@ class ABForest:
 
     def _occ_round(self, ops_sw, keys_sw, vals_sw):
         """OCC baseline: per-shard duplicate-rank sub-rounds, executed as
-        max-over-shards vmapped sub-rounds (shards past their own rank run
-        all-NOP lanes)."""
+        max-over-shards vmapped sub-rounds.  A shard whose own duplicate
+        rank is exhausted runs all-NOP lanes in the tail sub-rounds — those
+        are *not* sub-rounds it executes: its lanes are masked out, its
+        ``subrounds`` counter stays put, and its durable/validation cost is
+        zero (the per-shard early-exit of the ROADMAP follow-up; the vmap
+        itself still spans all shards, as any SPMD program must)."""
         on = np.asarray(ops_sw)
         kn = np.asarray(keys_sw)
         n_s, w = on.shape
         rank = np.stack([_duplicate_ranks(on[s], kn[s]) for s in range(n_s)])
+        # per-shard sub-round budget: rank r of a real op executes in
+        # sub-round r, so shard s is live only while r ≤ max(rank[s]).
+        live = on != OP_NOP  # (S, w)
+        shard_max = np.where(
+            live.any(axis=1), np.where(live, rank, 0).max(axis=1), -1
+        )
         n_sub = int(rank.max()) + 1
         results = jnp.full((n_s, w), NOTFOUND, VAL_DTYPE)
         found = jnp.zeros((n_s, w), bool)
         rank_j = jnp.asarray(rank)
         for r in range(n_sub):
+            active = shard_max >= r  # (S,) host bools: shard executes r
             m = (rank_j == r) & (ops_sw != OP_NOP)
             sub_ops = jnp.where(m, ops_sw, OP_NOP).astype(jnp.int32)
             sub_res, sub_found = self._combine_apply(sub_ops, keys_sw, vals_sw)
@@ -649,7 +669,9 @@ class ABForest:
             found = jnp.where(m, sub_found, found)
             st = self.state.stats
             self.state = self.state._replace(
-                stats=st._replace(subrounds=st.subrounds + 1)
+                stats=st._replace(
+                    subrounds=st.subrounds + jnp.asarray(active, jnp.int64)
+                )
             )
         return results, found
 
@@ -658,12 +680,14 @@ class ABForest:
         while bool(jnp.any(deferred)):
             guard += 1
             assert guard < 512 * self.cfg.max_height, "split loop diverged"
-            uniq = np.asarray(_v_overfull(self.state, self.cfg, ks, deferred))
+            uniq = np.asarray(
+                _v_overfull(self.state, self.cfg, ks, deferred, self.narrow)
+            )
             per_shard = [row[row != INT_MAX].astype(np.int32) for row in uniq]
             if any(r.size for r in per_shard):
                 self._split_cascade(per_shard)
             self.state, deferred = _v_retry_insert(
-                self.state, self.cfg, ks, final_vals, arrival, deferred
+                self.state, self.cfg, ks, final_vals, arrival, deferred, self.narrow
             )
 
     def _split_cascade(self, ids_per_shard: List[np.ndarray]):

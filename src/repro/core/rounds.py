@@ -69,15 +69,14 @@ from repro.core.abtree import (
     TreeState,
     VAL_DTYPE,
     apply_net_ops,
-    descend,
     frontier_expand,
-    probe,
     shrink_root,
     split_wave,
     underfull_wave,
     _segment_starts,
 )
 from repro.kernels.range_scan.ops import range_scan
+from repro.kernels.tree_descend.ops import descend_probe
 
 # ----------------------------------------------------------------------------
 # Round plans: lane classification
@@ -165,24 +164,42 @@ def build_plan(ops, keys, vals=None, *, scan_cap: int = 128) -> RoundPlan:
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6))
+@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6, 7))
 def _phase_scan(
     state: TreeState, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int,
-    narrow: bool = False,
+    narrow: bool = False, narrow_descent: bool = False,
 ):
     """jit: frontier expansion + in-range gather.  The gather goes through
     ``kernels/range_scan``'s dispatching wrapper: int64 host-index keys take
     the jnp reference, int32 device keys the Pallas kernel.  ``narrow``
     (static, from ``tree.narrow_scan``) asserts the caller's keys/values fit
     in int32, routing the fused-round gather through the Pallas kernel even
-    on the int64 host index (the ROADMAP "fused-round scan kernel" path)."""
-    leaves, ck, cv, touched, overflow = frontier_expand(state, cfg, lo, hi, frontier_cap)
+    on the int64 host index (the ROADMAP "fused-round scan kernel" path).
+    ``narrow_descent`` (static, from ``tree.narrow`` — the full device-path
+    gate) additionally routes the per-level frontier compaction through its
+    Pallas kernel; either way the jnp compaction is sort-free (cumsum rank
+    + scatter), so plain ``narrow_scan`` users keep the PR-1 contract of
+    kernel-gathers-only."""
+    leaves, ck, cv, touched, overflow = frontier_expand(
+        state, cfg, lo, hi, frontier_cap, narrow=narrow_descent
+    )
     keys, vals, count, truncated = range_scan(ck, cv, lo, hi, cap=cap, narrow=narrow)
     return ScanOutput(keys=keys, vals=vals, count=count, truncated=truncated), touched, overflow
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _phase_search_combine(state: TreeState, batch, cfg: TreeConfig):
+def _search_leaves(state: TreeState, cfg: TreeConfig, ks, narrow: bool):
+    """The search phase proper: fused root-to-leaf descent + unsorted-leaf
+    probe via ``kernels/tree_descend`` — the Pallas kernel (pool pinned in
+    VMEM, one launch instead of ``max_height`` batched HBM gathers) under
+    the ``narrow`` gate, the jnp ref otherwise."""
+    return descend_probe(
+        state.keys, state.vals, state.children, state.is_leaf, state.root, ks,
+        max_height=cfg.max_height, notfound=NOTFOUND, narrow=narrow,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _phase_search_combine(state: TreeState, batch, cfg: TreeConfig, narrow: bool = False):
     """jit: sort → descend → probe → eliminate.  Returns everything apply
     needs plus per-op results in original arrival order."""
     ops, keys, vals = batch
@@ -196,8 +213,7 @@ def _phase_search_combine(state: TreeState, batch, cfg: TreeConfig):
     arrival = perm.astype(jnp.int32)
 
     seg_head = _segment_starts(ks)
-    leaf_ids = descend(state, ks, cfg)
-    found, slot, val0 = probe(state, leaf_ids, ks)
+    leaf_ids, found, slot, val0 = _search_leaves(state, cfg, ks, narrow)
 
     res = elim.eliminate_batch(os_, vs, seg_head, found, jnp.where(found, val0, 0))
     rets_sorted = elim.op_return_values(os_, res, NOTFOUND)
@@ -222,11 +238,13 @@ def _phase_apply(state: TreeState, cfg: TreeConfig, ks, arrival, leaf_ids, slot,
     return out.state, out.deferred
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _phase_retry_insert(state: TreeState, cfg: TreeConfig, ks, vals, arrival, deferred):
+@functools.partial(jax.jit, static_argnums=(1, 6))
+def _phase_retry_insert(
+    state: TreeState, cfg: TreeConfig, ks, vals, arrival, deferred,
+    narrow: bool = False,
+):
     """Re-descend deferred keys and retry the insert (post-split)."""
-    leaf_ids = descend(state, ks, cfg)
-    found, slot, _ = probe(state, leaf_ids, ks)
+    leaf_ids, found, slot, _ = _search_leaves(state, cfg, ks, narrow)
     net_insert = deferred & ~found
     out = apply_net_ops(
         state, cfg, leaf_ids, ks, slot,
@@ -239,11 +257,13 @@ def _phase_retry_insert(state: TreeState, cfg: TreeConfig, ks, vals, arrival, de
     return out.state, out.deferred & deferred
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _phase_overfull_leaves(state: TreeState, cfg: TreeConfig, ks, deferred):
+@functools.partial(jax.jit, static_argnums=(1, 4))
+def _phase_overfull_leaves(
+    state: TreeState, cfg: TreeConfig, ks, deferred, narrow: bool = False
+):
     """Unique (sentinel-padded, sorted) ids of full leaves holding deferred
     inserts."""
-    leaf_ids = descend(state, ks, cfg)
+    leaf_ids, _, _, _ = _search_leaves(state, cfg, ks, narrow)
     full = deferred & (state.size[leaf_ids] >= cfg.b)
     ids = jnp.where(full, leaf_ids, INT_MAX)
     srt = jnp.sort(ids)
@@ -312,6 +332,22 @@ def _duplicate_ranks(ops_np: np.ndarray, keys_np: np.ndarray) -> np.ndarray:
 # ----------------------------------------------------------------------------
 
 
+def gather_until_frontier_fits(holder, gather):
+    """Run ``gather(frontier_cap) → (out, touched, overflow)``, doubling
+    ``holder._scan_frontier`` until no query overflows its leaf frontier
+    (powers of two keep the jit recompiles bounded).  Shared by the tree's
+    and the forest's scan phases — the growth state lives on the holder, so
+    later rounds start at the steady-state width.  Returns (out, touched)."""
+    guard = 0
+    while True:
+        out, touched, overflow = gather(holder._scan_frontier)
+        if not bool(jnp.any(overflow)):
+            return out, touched
+        guard += 1
+        assert guard < 32, "scan frontier growth diverged"
+        holder._scan_frontier *= 2
+
+
 def run_scan_phase(
     tree, lo: jax.Array, hi: jax.Array, cap: int, *, n_scan_ops: int,
     max_retries: int = 8,
@@ -324,17 +360,14 @@ def run_scan_phase(
     between gather and validation."""
     for attempt in range(max_retries):
         snap = tree.state
-        guard = 0
-        while True:
-            out, touched, overflow = _phase_scan(
-                snap, tree.cfg, lo, hi, tree._scan_frontier, cap,
+        out, touched = gather_until_frontier_fits(
+            tree,
+            lambda fc: _phase_scan(
+                snap, tree.cfg, lo, hi, fc, cap,
                 getattr(tree, "narrow_scan", False),
-            )
-            if not bool(jnp.any(overflow)):
-                break
-            guard += 1
-            assert guard < 32, "scan frontier growth diverged"
-            tree._scan_frontier *= 2  # recompile-bounded (powers of two)
+                getattr(tree, "narrow", False),
+            ),
+        )
         if tree.scan_hook is not None:
             tree.scan_hook()
         ids = np.unique(np.asarray(touched))
@@ -367,7 +400,9 @@ def run_point_phases(tree, ops, keys, vals) -> Tuple[jax.Array, jax.Array]:
 
 def _elim_point_round(tree, ops, keys, vals):
     """Elim-ABtree: the whole batch runs one combine; ≤ 1 net write per key."""
-    tree.state, pack = _phase_search_combine(tree.state, (ops, keys, vals), tree.cfg)
+    tree.state, pack = _phase_search_combine(
+        tree.state, (ops, keys, vals), tree.cfg, getattr(tree, "narrow", False)
+    )
     ks, arrival, leaf_ids, slot, res, results, found = pack
     tree.state, deferred = _phase_apply(
         tree.state, tree.cfg, ks, arrival, leaf_ids, slot, res
@@ -388,7 +423,8 @@ def _occ_point_round(tree, ops, keys, vals):
         m = jnp.asarray(rank == r) & (ops != OP_NOP)
         sub_ops = jnp.where(m, ops, OP_NOP)
         tree.state, pack = _phase_search_combine(
-            tree.state, (sub_ops, keys, vals), tree.cfg
+            tree.state, (sub_ops, keys, vals), tree.cfg,
+            getattr(tree, "narrow", False),
         )
         ks, arrival, leaf_ids, slot, res, sub_results, sub_found = pack
         tree.state, deferred = _phase_apply(
@@ -411,16 +447,17 @@ def _drain_deferred(tree, ks, final_vals, arrival, deferred):
     """Retry phase: split overflowing leaves and re-apply deferred inserts
     until none remain."""
     guard = 0
+    narrow = getattr(tree, "narrow", False)
     while bool(jnp.any(deferred)):
         guard += 1
         assert guard < 512 * tree.cfg.max_height, "split loop diverged"
-        uniq = _phase_overfull_leaves(tree.state, tree.cfg, ks, deferred)
+        uniq = _phase_overfull_leaves(tree.state, tree.cfg, ks, deferred, narrow)
         ids_np = np.asarray(uniq)
         ids_np = ids_np[ids_np != INT_MAX].astype(np.int32)
         if ids_np.size:
             _split_cascade(tree, ids_np)
         tree.state, deferred = _phase_retry_insert(
-            tree.state, tree.cfg, ks, final_vals, arrival, deferred
+            tree.state, tree.cfg, ks, final_vals, arrival, deferred, narrow
         )
 
 

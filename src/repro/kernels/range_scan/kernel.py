@@ -13,11 +13,16 @@ slots per query; the kernel then
      lane ``c`` then selects the key with rank ``c`` by masked sum — no
      scatter, no sort network, all VPU-friendly ops.
 
-The pairwise rank is O(n²) per query; n = frontier_leaves × b is small
-(≤ a few hundred) and the compare runs at VREG width, so the kernel stays
-memory-bound on the leaf gather like the rest of the round.  Keys are int32
-on device (TPU has no int64 vector support — the tree's 64-bit keys take the
-pure-jnp ref path; see ops.py).
+The pairwise rank is O(n²) per query.  For small frontiers (n = a few
+hundred candidate slots) the full (n, n) compare runs at VREG width and the
+kernel stays memory-bound on the leaf gather; for large frontiers the
+quadratic plane blows past VMEM, so ``tile_n`` blocks the rank into
+(n/T)×(n/T) VREG tiles — per-tile partial ranks accumulate into the same
+integer rank vector (exact: sums of disjoint 0/1 tiles), and the rank-c
+selection walks candidate tiles the same way, so peak live memory drops
+from n² to n·T while staying bit-identical to the pairwise kernel.  Keys
+are int32 on device (TPU has no int64 vector support — the tree's 64-bit
+keys take the pure-jnp ref path; see ops.py).
 
 Dtype discipline: the host package enables jax_enable_x64, under which
 integer reductions of int32 promote to int64 — every reduction here pins
@@ -67,7 +72,69 @@ def _range_scan_kernel(
     trunc_ref[...] = (total > cap).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("cap", "block_b", "interpret"))
+def _range_scan_kernel_tiled(
+    cand_keys_ref, cand_vals_ref, lo_ref, hi_ref,
+    keys_ref, vals_ref, count_ref, trunc_ref,
+    *, cap: int, tile_n: int,
+):
+    """One (TB, n) tile with the rank blocked into (n/T)×(n/T) sub-tiles:
+    bit-identical outputs to ``_range_scan_kernel`` at n·T peak memory."""
+    rows = cand_keys_ref[...]  # (TB, n) int32
+    vals = cand_vals_ref[...]  # (TB, n) int32
+    lo = lo_ref[...]  # (TB, 1)
+    hi = hi_ref[...]  # (TB, 1)
+    tb, n = rows.shape
+    n_tiles = n // tile_n
+
+    match = (rows >= lo) & (rows < hi) & (rows != INT32_MAX)  # (TB, n)
+    key_m = jnp.where(match, rows, INT32_MAX)
+
+    # rank accumulation: tile t contributes #{j ∈ tile : key_m[j] < key_m[i]}
+    # — integer partial sums, so tiling is exact (same rank as pairwise).
+    def rank_tile(t, acc):
+        tile = jax.lax.dynamic_slice_in_dim(key_m, t * tile_n, tile_n, axis=1)
+        gt = key_m[:, :, None] > tile[:, None, :]  # (TB, n, T)
+        return acc + jnp.sum(gt.astype(jnp.int32), axis=2, dtype=jnp.int32)
+
+    rank = jax.lax.fori_loop(0, n_tiles, rank_tile, jnp.zeros((tb, n), jnp.int32))
+
+    # rank-c selection, also walked tile by tile: each output lane sums at
+    # most one candidate across all tiles (ranks of matches are unique).
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (tb, tile_n, cap), 2)
+
+    def sel_tile(t, carry):
+        hit, out_k, out_v = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, t * tile_n, tile_n, axis=1)
+        sel = sl(match)[:, :, None] & (sl(rank)[:, :, None] == c_iota)  # (TB,T,cap)
+        hit = hit + jnp.sum(sel.astype(jnp.int32), axis=1, dtype=jnp.int32)
+        out_k = out_k + jnp.sum(
+            jnp.where(sel, sl(rows)[:, :, None], 0), axis=1, dtype=jnp.int32
+        )
+        out_v = out_v + jnp.sum(
+            jnp.where(sel, sl(vals)[:, :, None], 0), axis=1, dtype=jnp.int32
+        )
+        return hit, out_k, out_v
+
+    z = jnp.zeros((tb, cap), jnp.int32)
+    hit, out_k, out_v = jax.lax.fori_loop(0, n_tiles, sel_tile, (z, z, z))
+    hit = hit > 0
+
+    total = jnp.sum(match.astype(jnp.int32), axis=1, keepdims=True, dtype=jnp.int32)
+    keys_ref[...] = jnp.where(hit, out_k, jnp.int32(INT32_MAX))
+    vals_ref[...] = jnp.where(hit, out_v, jnp.int32(0))
+    count_ref[...] = jnp.minimum(total, jnp.int32(cap))
+    trunc_ref[...] = (total > cap).astype(jnp.int32)
+
+
+# Candidate widths past this auto-route to the tiled kernel (the pairwise
+# (n, n) plane at 512² × 4 B ≈ 1 MB/row-block is where VMEM pressure starts).
+TILE_AUTO_THRESHOLD = 256
+_DEFAULT_TILE = 128
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "block_b", "tile_n", "interpret")
+)
 def range_scan_pallas(
     cand_keys: jax.Array,  # (B, n) int32 gathered leaf slots, INT32_MAX-padded
     cand_vals: jax.Array,  # (B, n) int32
@@ -76,11 +143,31 @@ def range_scan_pallas(
     *,
     cap: int = 128,
     block_b: int = 8,
+    tile_n: int = 0,
     interpret: bool = True,
 ):
     """Returns ``(keys (B,cap), vals (B,cap), count (B,), truncated (B,))``
-    with keys ascending and INT32_MAX-padded."""
+    with keys ascending and INT32_MAX-padded.
+
+    ``tile_n`` selects the rank-select variant: 0 (default) auto-routes —
+    pairwise for n ≤ ``TILE_AUTO_THRESHOLD``, tiled otherwise; a positive
+    value forces that tile width; -1 forces the pairwise kernel."""
     bsz, n = cand_keys.shape
+    if tile_n == 0:
+        tile_n = _DEFAULT_TILE if n > TILE_AUTO_THRESHOLD else -1
+    if tile_n > 0:
+        pad_n = (-n) % tile_n
+        if pad_n:  # INT32_MAX pad: never matches, never outranks a real key
+            cand_keys = jnp.pad(
+                cand_keys, ((0, 0), (0, pad_n)), constant_values=INT32_MAX
+            )
+            cand_vals = jnp.pad(cand_vals, ((0, 0), (0, pad_n)))
+        n = cand_keys.shape[1]
+        kernel = functools.partial(
+            _range_scan_kernel_tiled, cap=cap, tile_n=tile_n
+        )
+    else:
+        kernel = functools.partial(_range_scan_kernel, cap=cap)
     pad = (-bsz) % block_b
     if pad:
         cand_keys = jnp.pad(cand_keys, ((0, pad), (0, 0)), constant_values=INT32_MAX)
@@ -96,7 +183,7 @@ def range_scan_pallas(
         jax.ShapeDtypeStruct((m, 1), jnp.int32),  # truncated
     ]
     keys, vals, count, trunc = pl.pallas_call(
-        functools.partial(_range_scan_kernel, cap=cap),
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, n), lambda i: (i, 0)),

@@ -1,0 +1,22 @@
+from repro.kernels.tree_descend.kernel import (
+    descend_probe_pallas,
+    frontier_compact_pallas,
+)
+from repro.kernels.tree_descend.ops import descend_probe, frontier_compact
+from repro.kernels.tree_descend.ref import (
+    descend_probe_ref,
+    descend_ref,
+    frontier_compact_ref,
+    probe_ref,
+)
+
+__all__ = [
+    "descend_probe",
+    "descend_probe_pallas",
+    "descend_probe_ref",
+    "descend_ref",
+    "frontier_compact",
+    "frontier_compact_pallas",
+    "frontier_compact_ref",
+    "probe_ref",
+]

@@ -1,0 +1,226 @@
+"""Pallas TPU kernels: device-resident search phase.
+
+Two kernels make the whole root-to-leaf search path device-resident:
+
+``descend_probe_pallas`` — fused descent + probe.  The node pool's key /
+value / child / leaf planes are mapped whole into VMEM with a constant
+index map, so the hot upper levels of the tree stay pinned on-chip across
+every grid step instead of being re-gathered from HBM once per level per
+batch (the ``max_height`` separate batched gathers of the jnp path).  Each
+level is one lane-parallel router count (``#routers ≤ key``) plus a child
+gather out of the resident pool; the unsorted-leaf probe is fused into the
+final level, so one kernel launch returns ``(leaf, found, slot, val)``.
+
+``frontier_compact_pallas`` — segmented frontier compaction.  The scan
+descent expands each query's frontier level by level; compacting the valid
+candidates used a per-level stable XLA ``argsort`` (the "24× sort" — one
+per level per scan round).  The kernel replaces the sort network with a
+cumsum rank: each row's valid candidates get their exclusive prefix count,
+and output slot ``c`` selects the candidate with rank ``c`` by masked sum —
+stable, scatter-free, and VPU-friendly.  Output slots are processed in
+chunks so the one-hot select never materializes an (M × f) plane wider
+than ``chunk`` lanes.
+
+Keys are int32 on device (TPU has no int64 vector support) — the tree's
+64-bit host index takes the pure-jnp ref path; see ops.py for the narrow
+gate.  VMEM contract: the pool planes must fit on-chip (~16 MB/core); the
+dispatcher falls back to the ref path for pools past ``max_pool_rows``.
+
+Dtype discipline: the host package enables jax_enable_x64, under which
+integer reductions of int32 promote to int64 — every reduction here pins
+``dtype=jnp.int32`` (the weak-typing trap that bit leaf_probe/elim_combine
+in PR 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT32_MAX = jnp.iinfo(jnp.int32).max  # EMPTY sentinel for device keys
+
+
+# ----------------------------------------------------------------------------
+# fused descent + probe
+# ----------------------------------------------------------------------------
+
+
+def _descend_probe_kernel(
+    pool_keys_ref, pool_vals_ref, children_ref, is_leaf_ref, start_ref, q_ref,
+    leaf_ref, found_ref, slot_ref, val_ref,
+    *, b: int, max_height: int,
+):
+    """One (TB,) query tile against the VMEM-resident pool."""
+    pk = pool_keys_ref[...]  # (N, b) int32; EMPTY = INT32_MAX
+    pv = pool_vals_ref[...]  # (N, b) int32
+    ch = children_ref[...]  # (N, b) int32; NULL < 0 wraps to scratch
+    lf = is_leaf_ref[...]  # (N, 1) int32
+    q = q_ref[...]  # (TB, 1) int32
+    node0 = start_ref[...][:, 0]  # (TB,) int32 (root broadcast)
+
+    # mode="wrap" mirrors the jnp path's negative-index gather: NULL child
+    # ids (-1) park the lane on the scratch row (an empty pseudo-leaf).
+    def rows_at(arr, idx):
+        return jnp.take(arr, idx, axis=0, mode="wrap")
+
+    def body(_, node):
+        routers = rows_at(pk, node)[:, : b - 1]  # (TB, b-1)
+        idx = jnp.sum((routers <= q).astype(jnp.int32), axis=1, dtype=jnp.int32)
+        child = jnp.take_along_axis(rows_at(ch, node), idx[:, None], axis=1)[:, 0]
+        return jnp.where(rows_at(lf, node)[:, 0] > 0, node, child)
+
+    node = jax.lax.fori_loop(0, max_height, body, node0)
+
+    # fused unsorted-leaf probe on the final level's resident rows.
+    rows = rows_at(pk, node)  # (TB, b)
+    vals = rows_at(pv, node)
+    eq = rows == q
+    iota = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 1)
+    slot = jnp.min(jnp.where(eq, iota, jnp.int32(b)), axis=1)  # first match
+    found = slot < b
+    val = jnp.sum(
+        jnp.where(iota == slot[:, None], vals, 0), axis=1, dtype=jnp.int32
+    )
+    leaf_ref[...] = node[:, None]
+    found_ref[...] = found.astype(jnp.int32)[:, None]
+    slot_ref[...] = jnp.where(found, slot, 0).astype(jnp.int32)[:, None]
+    val_ref[...] = jnp.where(found, val, 0).astype(jnp.int32)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_height", "block_b", "interpret")
+)
+def descend_probe_pallas(
+    pool_keys: jax.Array,  # (N, b) int32, EMPTY = INT32_MAX
+    pool_vals: jax.Array,  # (N, b) int32
+    children: jax.Array,  # (N, b) int32
+    is_leaf: jax.Array,  # (N,) bool
+    root,  # int32 scalar
+    queries: jax.Array,  # (B,) int32
+    *,
+    max_height: int,
+    block_b: int = 256,
+    interpret: bool = True,
+):
+    """Returns ``(leaf_ids (B,), found (B,), slot (B,), val (B,))`` —
+    exactly the jnp ``descend_probe_ref`` semantics on int32 keys (``val``
+    raw int32; the dispatcher applies the NOTFOUND sentinel)."""
+    bsz = queries.shape[0]
+    n, b = pool_keys.shape
+    m = max(8, 1 << (max(bsz, 1) - 1).bit_length())  # pow2 pad (≥ one VREG row)
+    block = min(block_b, m)
+    m = m if m % block == 0 else m + (-m) % block
+    if m != bsz:
+        queries = jnp.pad(queries, (0, m - bsz), constant_values=INT32_MAX)
+    start = jnp.full((m, 1), root, jnp.int32)
+    grid = (m // block,)
+    pool_spec = lambda w: pl.BlockSpec((n, w), lambda i: (0, 0))  # pinned
+    out_shape = [jax.ShapeDtypeStruct((m, 1), jnp.int32) for _ in range(4)]
+    leaf, found, slot, val = pl.pallas_call(
+        functools.partial(_descend_probe_kernel, b=b, max_height=max_height),
+        grid=grid,
+        in_specs=[
+            pool_spec(b),  # keys: whole pool resident across grid steps
+            pool_spec(b),  # vals
+            pool_spec(b),  # children
+            pool_spec(1),  # is_leaf
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block, 1), lambda i: (i, 0)) for _ in range(4)],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        pool_keys,
+        pool_vals,
+        children,
+        is_leaf.astype(jnp.int32)[:, None],
+        start,
+        queries[:, None],
+    )
+    return (
+        leaf[:bsz, 0],
+        found[:bsz, 0].astype(bool),
+        slot[:bsz, 0],
+        val[:bsz, 0],
+    )
+
+
+# ----------------------------------------------------------------------------
+# segmented frontier compaction
+# ----------------------------------------------------------------------------
+
+
+def _frontier_compact_kernel(
+    cand_ref, valid_ref, frontier_ref, fvalid_ref, total_ref,
+    *, f: int, chunk: int,
+):
+    """One (TB, M) tile: exclusive cumsum rank + chunked one-hot select."""
+    cand = cand_ref[...]  # (TB, M) int32
+    valid = valid_ref[...] > 0  # (TB, M)
+    vi = valid.astype(jnp.int32)
+    rank = jnp.cumsum(vi, axis=1, dtype=jnp.int32) - vi  # exclusive rank
+    total = jnp.sum(vi, axis=1, keepdims=True, dtype=jnp.int32)
+
+    outs_k, outs_hit = [], []
+    tb, m = cand.shape
+    for c0 in range(0, f, chunk):  # static unroll: ≤ f/chunk select planes
+        cw = min(chunk, f - c0)
+        c_iota = jax.lax.broadcasted_iota(jnp.int32, (tb, m, cw), 2) + c0
+        sel = valid[:, :, None] & (rank[:, :, None] == c_iota)  # (TB, M, cw)
+        outs_hit.append(
+            jnp.sum(sel.astype(jnp.int32), axis=1, dtype=jnp.int32) > 0
+        )
+        outs_k.append(
+            jnp.sum(jnp.where(sel, cand[:, :, None], 0), axis=1, dtype=jnp.int32)
+        )
+    frontier_ref[...] = jnp.concatenate(outs_k, axis=1)
+    fvalid_ref[...] = jnp.concatenate(outs_hit, axis=1).astype(jnp.int32)
+    total_ref[...] = total
+
+
+@functools.partial(
+    jax.jit, static_argnames=("f", "block_b", "chunk", "interpret")
+)
+def frontier_compact_pallas(
+    cand: jax.Array,  # (B, M) int32 candidate ids
+    valid: jax.Array,  # (B, M) bool
+    *,
+    f: int,
+    block_b: int = 8,
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns ``(frontier (B, f) int32, valid (B, f) bool, total (B,))``:
+    row-stable compaction of the valid candidates (invalid output slots are
+    0 — callers mask them via the returned valid plane)."""
+    bsz, m = cand.shape
+    pad = (-bsz) % block_b
+    if pad:
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+    mb = cand.shape[0]
+    grid = (mb // block_b,)
+    out_shape = [
+        jax.ShapeDtypeStruct((mb, f), jnp.int32),  # frontier
+        jax.ShapeDtypeStruct((mb, f), jnp.int32),  # valid
+        jax.ShapeDtypeStruct((mb, 1), jnp.int32),  # total
+    ]
+    frontier, fvalid, total = pl.pallas_call(
+        functools.partial(_frontier_compact_kernel, f=f, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(cand, valid.astype(jnp.int32))
+    return frontier[:bsz], fvalid[:bsz].astype(bool), total[:bsz, 0]

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the tree_descend kernels.
+
+Array-based (no ``TreeState`` dependency) and dtype-generic: the tree's
+int64 host index and the kernel's int32 device keys both route through
+these.  ``core/abtree.py``'s ``descend``/``probe`` are thin wrappers over
+``descend_ref``/``probe_ref``, so the oracle and the host path can never
+drift.
+
+Sentinel conventions match the tree: the key dtype's max is the EMPTY
+free-slot / unused-router marker (it sorts last and is never a user key);
+NULL child ids are negative and wrap to the scratch row under gather, which
+is how masked-out lanes park on the write-off node.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def descend_ref(
+    pool_keys: jax.Array,  # (N, b) leaf keys | internal routers in [:, :b-1]
+    children: jax.Array,  # (N, b) int32 child ids
+    is_leaf: jax.Array,  # (N,) bool
+    root,  # int32 scalar
+    queries: jax.Array,  # (B,) key dtype
+    *,
+    max_height: int,
+) -> jax.Array:
+    """Root-to-leaf search: per level follow ``ptrs[#routers ≤ key]``
+    (unused routers are EMPTY = dtype max, never counted for user keys)."""
+    b = pool_keys.shape[-1]
+
+    def body(_, node_ids):
+        routers = pool_keys[node_ids][:, : b - 1]
+        idx = jnp.sum(routers <= queries[:, None], axis=1).astype(jnp.int32)
+        child = children[node_ids, idx]
+        return jnp.where(is_leaf[node_ids], node_ids, child)
+
+    start = jnp.zeros(queries.shape, jnp.int32) + root
+    return jax.lax.fori_loop(0, max_height, body, start)
+
+
+def probe_ref(
+    pool_keys: jax.Array,  # (N, b)
+    pool_vals: jax.Array,  # (N, b)
+    leaf_ids: jax.Array,  # (B,) int32
+    queries: jax.Array,  # (B,)
+    *,
+    notfound,
+):
+    """Unsorted-leaf probe: lane-parallel compare across the b slots;
+    ``slot`` is the first match (0 when absent, masked by ``found``)."""
+    rows = pool_keys[leaf_ids]
+    eq = rows == queries[:, None]
+    found = jnp.any(eq, axis=1)
+    slot = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    val = pool_vals[leaf_ids, slot]
+    return found, slot, jnp.where(found, val, notfound)
+
+
+def descend_probe_ref(
+    pool_keys: jax.Array,
+    pool_vals: jax.Array,
+    children: jax.Array,
+    is_leaf: jax.Array,
+    root,
+    queries: jax.Array,
+    *,
+    max_height: int,
+    notfound,
+):
+    """Fused oracle: descent followed by the leaf probe (the ``search``
+    phase of one round for a batch of point ops)."""
+    leaf_ids = descend_ref(
+        pool_keys, children, is_leaf, root, queries, max_height=max_height
+    )
+    found, slot, val = probe_ref(
+        pool_keys, pool_vals, leaf_ids, queries, notfound=notfound
+    )
+    return leaf_ids, found, slot, val
+
+
+def frontier_compact_ref(
+    cand: jax.Array,  # (B, M) int32 candidate node ids
+    valid: jax.Array,  # (B, M) bool
+    f: int,  # static output frontier width
+    *,
+    scratch: int,
+):
+    """Stable compaction oracle (the XLA-argsort formulation the kernel
+    replaces): valid candidates keep their order and land in slots
+    ``0..total-1``; invalid output slots hold ``scratch``.
+
+    Returns ``(frontier (B, f) int32, valid (B, f) bool, overflow (B,))``
+    with ``overflow`` marking rows whose valid count exceeded ``f``.
+    """
+    order = jnp.argsort(~valid, axis=1, stable=True).astype(jnp.int32)
+    frontier = jnp.take_along_axis(cand, order, axis=1)[:, :f].astype(jnp.int32)
+    valid_out = jnp.take_along_axis(valid, order, axis=1)[:, :f]
+    total = jnp.sum(valid, axis=1)
+    return (
+        jnp.where(valid_out, frontier, jnp.int32(scratch)),
+        valid_out,
+        total > f,
+    )

@@ -395,6 +395,33 @@ def test_forest_narrow_scan_matches_ref_path():
         )
 
 
+def test_occ_subround_early_exit_per_shard():
+    """occ-mode vmapped sub-rounds run max-over-shards duplicate ranks; a
+    shard whose own rank budget is exhausted must NOT account the all-NOP
+    tail sub-rounds (per-shard early-exit): its ``subrounds`` counter stops
+    at its own duplicate depth while results stay oracle-exact."""
+    f = ABForest(n_shards=2, cfg=SMALL, mode="occ", key_space=(0, 100))
+    o = DictOracle()
+    # shard 0 (keys < 50): one key hit 4× → 4 sub-rounds there;
+    # shard 1 (keys ≥ 50): all-distinct keys → exactly 1 sub-round.
+    ops = [OP_INSERT] * 8
+    keys = [7, 7, 7, 7, 60, 61, 62, 63]
+    vals = [1, 2, 3, 4, 5, 6, 7, 8]
+    got = f.apply_round(ops, keys, vals)
+    wres, wfound = o.apply_round(ops, keys, vals)
+    np.testing.assert_array_equal(np.asarray(got.results), wres)
+    np.testing.assert_array_equal(np.asarray(got.found), wfound)
+    assert f.items() == o.items()
+    per = f.stats_per_shard()
+    assert per[0]["subrounds"] == 4  # the skewed shard pays its depth
+    assert per[1]["subrounds"] == 1  # the unskewed shard skips the tail
+    # a shard with no lanes at all accounts zero sub-rounds.
+    f2 = ABForest(n_shards=2, cfg=SMALL, mode="occ", key_space=(0, 100))
+    f2.apply_round([OP_INSERT, OP_INSERT], [3, 3], [1, 2])
+    per2 = f2.stats_per_shard()
+    assert per2[0]["subrounds"] == 2 and per2[1]["subrounds"] == 0
+
+
 def test_forest_malformed_lanes_raise():
     f = ABForest(n_shards=2, cfg=SMALL, key_space=(0, 100))
     with pytest.raises(ValueError, match="malformed"):
