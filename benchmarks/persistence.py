@@ -1,6 +1,15 @@
-"""Persistence overhead (paper Table 1 analog): throughput change from
-enabling durable commits, and the flush-traffic gap between p-Elim and
-p-OCC (elimination ⇒ fewer dirty nodes ⇒ fewer flushed bytes)."""
+"""Persistence overhead (paper Table 1 analog), sharded: throughput change
+from enabling durable commits and the flush-traffic gap between p-Elim and
+p-OCC (elimination ⇒ fewer dirty nodes ⇒ fewer flushed bytes), measured on
+the per-shard-journaled ``DurableForest`` at shard counts {1, 4}.
+
+Emits structured metrics (``flush_bytes`` / ``fsyncs`` / ``commits`` /
+``flush_bytes_per_op``) into ``results/BENCH_persistence.json`` via the run
+aggregator; ``commits`` and ``fsyncs`` are deterministic for a given seeded
+workload, so ``benchmarks/run.py --check`` gates them exactly.  The section
+FAILS (raises) unless elim flushes strictly fewer bytes/op than occ at
+every shard count — the paper's durability headline, published per shard
+count."""
 from __future__ import annotations
 
 import shutil
@@ -8,13 +17,15 @@ import tempfile
 import time
 
 from repro.configs.abtree import TPU8
-from repro.core import ABTree, DurableABTree
+from repro.core import ABForest
+from repro.core.durable import DurableForest, DurableStats
 from repro.data.workloads import WorkloadConfig, op_stream, prefill_tree
 
 from benchmarks.common import emit
 
 
 WARM = 4
+SHARD_COUNTS = (1, 4)
 
 
 def _run(tree, stream):
@@ -29,39 +40,62 @@ def _run(tree, stream):
 def main(quick=False):
     key_range, batch = 2048, 256
     rounds = 8 if quick else 20
-    for dist in ("uniform", "zipf"):
-        cfg = WorkloadConfig(
-            key_range=key_range, update_frac=1.0, dist=dist, zipf_s=1.0,
-            batch=batch, seed=11,
-        )
-        stream = list(op_stream(cfg, rounds))
-        stats = {}
+    n_ops = batch * (rounds - WARM)
+    cfg = WorkloadConfig(
+        key_range=key_range, update_frac=1.0, dist="zipf", zipf_s=1.0,
+        batch=batch, seed=11,
+    )
+    stream = list(op_stream(cfg, rounds))
+    tree_cfg = TPU8._replace(capacity=4 * key_range)
+    for shards in SHARD_COUNTS:
+        bytes_per_op = {}
         for mode in ("elim", "occ"):
-            vol = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode)
+            vol = ABForest(
+                n_shards=shards, cfg=tree_cfg, mode=mode,
+                key_space=(0, key_range),
+            )
             prefill_tree(vol, cfg)
             t_vol = _run(vol, stream)
 
-            d = tempfile.mkdtemp(prefix=f"ptree_{mode}_")
-            dur = DurableABTree(
-                d, TPU8._replace(capacity=4 * key_range), mode=mode,
-                snapshot_every=10**9,
+            d = tempfile.mkdtemp(prefix=f"ptree_{mode}_s{shards}_")
+            dur = DurableForest(
+                d, n_shards=shards, cfg=tree_cfg, mode=mode,
+                key_space=(0, key_range), snapshot_every=10**9,
             )
-            prefill_tree(dur.tree, cfg)  # prefill outside timed commits
+            prefill_tree(dur.forest, cfg)  # prefill outside timed commits
+            dur._commit(force_snapshot=True)  # journal the prefilled state
+            dur.dstats = DurableStats()  # count the timed stream only
             t_dur = _run(dur, stream)
             overhead = (t_dur - t_vol) / t_vol * 100
-            stats[mode] = dur.stats()
-            n_ops = batch * (rounds - WARM)
+            s = dur.stats()
+            bytes_per_op[mode] = s["flush_bytes"] / n_ops
             emit(
-                f"persistence.{dist}.{mode}",
+                f"persistence.zipf.{mode}.s{shards}",
                 t_dur / n_ops * 1e6,
-                f"overhead_vs_volatile={overhead:.0f}%;flush_bytes={stats[mode]['flush_bytes']};nodes_flushed={stats[mode]['nodes_flushed']}",
+                f"overhead_vs_volatile={overhead:.0f}%;"
+                f"flush_bytes={s['flush_bytes']};fsyncs={s['fsyncs']};"
+                f"commits={s['commits']}",
+                ops_per_s=n_ops / t_dur,
+                flush_bytes=s["flush_bytes"],
+                flush_bytes_per_op=s["flush_bytes"] / n_ops,
+                fsyncs=s["fsyncs"],
+                commits=s["commits"],
+                nodes_flushed=s["nodes_flushed"],
+                gc_removed=s["gc_removed"],
             )
             shutil.rmtree(d, ignore_errors=True)
-        if stats["occ"]["nodes_flushed"]:
-            emit(
-                f"persistence.{dist}.flush_reduction",
-                0.0,
-                f"elim_vs_occ_nodes_flushed={stats['occ']['nodes_flushed']/max(stats['elim']['nodes_flushed'],1):.2f}x",
+        ratio = bytes_per_op["occ"] / max(bytes_per_op["elim"], 1e-9)
+        emit(
+            f"persistence.zipf.flush_reduction.s{shards}",
+            0.0,
+            f"elim_vs_occ_bytes_per_op={ratio:.2f}x",
+            flush_reduction=ratio,
+        )
+        if bytes_per_op["elim"] >= bytes_per_op["occ"]:
+            raise RuntimeError(
+                f"persistence: elim must flush fewer bytes/op than occ at "
+                f"shards={shards} (elim={bytes_per_op['elim']:.1f}, "
+                f"occ={bytes_per_op['occ']:.1f})"
             )
 
 

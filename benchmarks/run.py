@@ -39,9 +39,10 @@ import sys
 import traceback
 
 # metrics compared under the relative tolerance (higher is better);
-# integral metrics compared exactly.
+# integral metrics compared exactly (deterministic for a seeded workload:
+# round counts, and the durable layer's commit/fsync counts).
 _THROUGHPUT_KEYS = ("ops_per_s", "items_per_s")
-_EXACT_KEYS = ("rounds", "rounds_fused", "rounds_split")
+_EXACT_KEYS = ("rounds", "rounds_fused", "rounds_split", "commits", "fsyncs")
 
 
 def check_against_baseline(records, baseline: dict, tol: float):

@@ -28,7 +28,13 @@ from repro.core.rounds import RoundPlan, build_plan  # noqa: E402
 from repro.core.forest import ABForest, check_forest_invariants  # noqa: E402
 from repro.core.elimination import eliminate_batch, EliminationResult  # noqa: E402
 from repro.core.oracle import DictOracle, check_invariants  # noqa: E402
-from repro.core.durable import DurableABTree, CrashPoint, recover  # noqa: E402
+from repro.core.durable import (  # noqa: E402
+    CrashPoint,
+    DurableABTree,
+    DurableForest,
+    recover,
+    recover_forest,
+)
 
 __all__ = [
     "ABTree",
@@ -54,6 +60,8 @@ __all__ = [
     "DictOracle",
     "check_invariants",
     "DurableABTree",
+    "DurableForest",
     "CrashPoint",
     "recover",
+    "recover_forest",
 ]

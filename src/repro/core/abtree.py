@@ -797,8 +797,10 @@ def frontier_expand(
 
 
 class ABTree:
-    """Host-orchestrated batched (a,b)-tree.  Every entry point builds a
-    round plan and runs the ``core/rounds.py`` phase pipeline; heavy phases
+    """Host-orchestrated batched (a,b)-tree — the S = 1 case of the unified
+    sharded round engine.  Every entry point builds a round plan and runs
+    the ``core/rounds.py`` (S, wave_w) phase pipeline (the ``stacked``
+    property views this tree's state as a one-shard stack); heavy phases
     are jitted and the host loop only sequences structural waves (rare —
     the paper notes splits are infrequent) and reads tiny control scalars."""
 
@@ -811,6 +813,15 @@ class ABTree:
         self.cfg = cfg
         self.mode = mode
         self.state = make_tree(cfg)
+        # unified-engine holder protocol: the single tree is a one-shard
+        # forest with an unpartitioned key space (see core/rounds.py).
+        self.n_shards = 1
+        self._splits = np.empty((0,), np.int64)
+        self._bounds = [int(KEY_MIN), int(EMPTY)]
+        self._rounds = 0
+        self._scans = 0
+        self._scan_retries = 0
+        self._scan_active = 0
         # narrow_scan=True is the caller's assertion that every key AND value
         # fits strictly inside int32 (|x| < 2**31 - 1): the round engine's
         # scan phase then routes fused-round gathers through the
@@ -837,6 +848,21 @@ class ABTree:
         # retry/conflict paths); production single-replica use leaves None.
         self.scan_hook = None
         self._scan_frontier = 8  # leaf-frontier pad width (doubles on overflow)
+
+    # -- unified-engine holder protocol ---------------------------------------
+
+    @property
+    def stacked(self) -> TreeState:
+        """This tree's state as a one-shard stack (leading axis 1 on every
+        array) — the form every ``core/rounds.py`` phase executes on."""
+        return jax.tree_util.tree_map(lambda x: x[None], self.state)
+
+    @stacked.setter
+    def stacked(self, st: TreeState):
+        self.state = jax.tree_util.tree_map(lambda x: x[0], st)
+
+    def _maybe_split_shards(self):
+        """Shard-overflow policy: the single tree never splits shards."""
 
     # -- public API -----------------------------------------------------------
 
@@ -870,35 +896,7 @@ class ABTree:
         — each scan linearizes at its validation point."""
         from repro.core import rounds
 
-        lo = jnp.atleast_1d(jnp.asarray(lo, KEY_DTYPE))
-        hi = jnp.atleast_1d(jnp.asarray(hi, KEY_DTYPE))
-        assert lo.shape == hi.shape and lo.ndim == 1
-        bsz = int(lo.shape[0])
-        if bsz == 0:
-            return ScanOutput(
-                keys=jnp.full((0, cap), EMPTY, KEY_DTYPE),
-                vals=jnp.zeros((0, cap), VAL_DTYPE),
-                count=jnp.zeros((0,), jnp.int32),
-                truncated=jnp.zeros((0,), bool),
-            )
-        # pad the batch to a power-of-two bucket: workload rounds produce a
-        # different scan count every round, and an exact-size jit would
-        # recompile the scan phase for each.  Pad lanes scan [EMPTY, EMPTY):
-        # no child range satisfies chi > EMPTY, so they expand past the
-        # root into nothing and add no nodes to the validated read set
-        # (padding with [0, 0) would walk the leftmost spine and conflict
-        # with updates the real scans never read).
-        padded = max(8, 1 << (bsz - 1).bit_length())
-        if padded != bsz:
-            pad = jnp.full((padded - bsz,), EMPTY, KEY_DTYPE)
-            lo = jnp.concatenate([lo, pad])
-            hi = jnp.concatenate([hi, pad])
-        out = rounds.run_scan_phase(
-            self, lo, hi, cap, n_scan_ops=bsz, max_retries=max_retries
-        )
-        if padded != bsz:
-            out = ScanOutput(*(x[:bsz] for x in out))
-        return out
+        return rounds.execute_scan(self, lo, hi, cap=cap, max_retries=max_retries)
 
     def scan_delete_round(self, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
         """ONE fused round that gathers every key in ``[lo_i, hi_i)``
@@ -920,21 +918,9 @@ class ABTree:
         Each underlying round is individually validated; entries observed
         by different rounds may straddle interleaved update rounds, as any
         cursor over a concurrent map does."""
-        if cap <= 0:
-            raise ValueError(f"scan_stream: cap must be positive, got {cap}")
-        return self._scan_stream(int(lo), int(hi), cap)
+        from repro.core import rounds
 
-    def _scan_stream(self, cur: int, hi: int, cap: int):
-        while cur < hi:
-            out = self.scan_round([cur], [hi], cap=cap)
-            n = int(np.asarray(out.count)[0])
-            ks = np.asarray(out.keys)[0, :n]
-            vs = np.asarray(out.vals)[0, :n]
-            for k, v in zip(ks.tolist(), vs.tolist()):
-                yield int(k), int(v)
-            if not bool(np.asarray(out.truncated)[0]):
-                return
-            cur = int(ks[-1]) + 1
+        return rounds.execute_scan_stream(self, lo, hi, cap)
 
     def find(self, key) -> Optional[int]:
         out = self.apply_round([OP_FIND], [key])
@@ -969,7 +955,15 @@ class ABTree:
         return d
 
     def stats(self) -> dict:
-        return {k: int(v) for k, v in self.state.stats._asdict().items()}
+        """Device phase counters plus the engine's host-side round/scan
+        counters (``rounds`` / ``scans`` / ``scan_retries`` are sequenced on
+        the host by the unified engine; ``scan_retries`` counts retried
+        *lanes* — ops re-gathered after a version conflict)."""
+        s = {k: int(np.asarray(v).sum()) for k, v in self.state.stats._asdict().items()}
+        s["rounds"] = self._rounds
+        s["scans"] = self._scans
+        s["scan_retries"] = self._scan_retries
+        return s
 
     # -- pool management --------------------------------------------------------
 

@@ -1,5 +1,6 @@
-"""Durable (strictly linearizable) tree — the paper's §5, adapted to a
-framework durability substrate (DESIGN.md §2, row "clwb+sfence").
+"""Durable (strictly linearizable) trees — the paper's §5, adapted to a
+framework durability substrate (DESIGN.md §2, row "clwb+sfence"), for the
+single tree and the sharded forest alike.
 
 The paper's p-OCC-ABtree persists only keys/values/pointers, ordering writes
 with clwb+sfence so that (i) new nodes are persistent *before* the single
@@ -10,45 +11,62 @@ persistent memory.
 
 On a distributed training/serving system the persistence domain is a
 filesystem, not NVRAM, and the update unit is a *round*, not a single store.
-The protocol maps 1:1:
+The protocol maps 1:1 — per shard:
 
   paper                           this module
   ----------------------------    ------------------------------------------
   flush new nodes (clwb+sfence)   write round segment file + fsync
-  write marked pointer            write MANIFEST.tmp naming the segment
+                                  (per SHARD: one journal lane per shard,
+                                  fsyncs issued in parallel; an untouched
+                                  shard flushes nothing)
+  write marked pointer            write MANIFEST.tmp naming every shard's
+                                  snapshot + segment chain and its commit
+                                  index (ONE vector commit for all shards)
   flush pointer, unmark           fsync tmp, os.replace → MANIFEST, fsync dir
   recovery: walk from root,       recovery: load last committed manifest,
-    rebuild size/ver/locks          replay segments, rebuild size/ver/dirty
+    rebuild size/ver/locks          replay each shard's segments, rebuild
+                                    size/ver/dirty, restack the shards and
+                                    restore the split points
 
 The commit point (durable linearization point) is the atomic rename: a round
 is in the abstract *persistent* dictionary iff its manifest committed —
 exactly the paper's "a key is in the p-tree iff it reached persistent
-memory", lifted to round granularity.  Strict linearizability: ops of an
-uncommitted round took no externally visible effect (results are only
-released to callers after commit in `DurableABTree.apply_round`), so
+memory", lifted to round granularity.  The manifest carries a *vector* of
+per-shard commit indices, so one rename atomically commits every shard's
+journal advance; shard splits interact with the journal by forcing a
+snapshot of exactly the two affected shards (journals are keyed by a stable
+shard uid, so the restack leaves every other shard's segment chain valid).
+Strict linearizability: ops of an uncommitted round took no externally
+visible effect (results are only released to callers after commit), so
 removing them from the crashed execution is legal; ops of committed rounds
-are linearized before the crash.
+are linearized before the crash.  Mid-restack states never commit: occ
+sub-round commits are suppressed while a shard split is sweeping/re-
+inserting, so recovery always lands on a round (or sub-round) boundary.
 
 Publishing elimination reduces durability cost exactly as in the paper:
 eliminated ops dirty no nodes, so fewer node images are flushed per round
 (`flush_bytes`, `fsyncs` counters below reproduce the Table-1-style
-accounting).
+accounting).  Old journal files a committed manifest no longer references
+are garbage-collected after each commit (`gc_removed`).
 
 Crash injection: ``CrashPoint`` raises ``SimulatedCrash`` at a chosen step
-(after-segment / mid-manifest / after-manifest-before-dir-sync) so tests can
-assert recovery lands on the last committed round boundary.
+(after-segment / mid-manifest / after-manifest-before-dir-sync /
+mid-shard-split) so tests can assert recovery lands on the last committed
+round boundary.
 """
 from __future__ import annotations
 
 import json
 import os
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abtree import ABTree, RoundOutput, TreeConfig, TreeState, make_tree
+from repro.core.abtree import ABTree, RoundOutput, ScanOutput, TreeConfig, TreeState, make_tree
+from repro.core.forest import ABForest, _stack_states
 
 _PERSISTED_FIELDS = ("keys", "vals", "children", "is_leaf", "level")
 # NOT persisted (volatile; rebuilt by recovery, as in the paper §5 — only
@@ -57,6 +75,8 @@ _PERSISTED_FIELDS = ("keys", "vals", "children", "is_leaf", "level")
 #   recovery walk), ver (reset), rec_* (reset), alloc (recomputed), dirty,
 #   stats.
 
+_MANIFEST_VERSION = 2
+
 
 class SimulatedCrash(RuntimeError):
     pass
@@ -64,9 +84,15 @@ class SimulatedCrash(RuntimeError):
 
 @dataclass
 class CrashPoint:
-    """Injects a crash at the n-th occurrence of the named step."""
+    """Injects a crash at the named step of the given commit index.
 
-    step: str = ""  # "after_segment" | "mid_manifest" | "before_dirsync"
+    Steps: ``after_segment`` (shard files flushed, manifest not yet
+    written), ``mid_manifest`` (torn manifest tmp), ``before_dirsync``
+    (manifest renamed, directory not yet synced), ``mid_split`` (a shard
+    split restacked the forest; nothing of the surrounding round has
+    committed — ``at_commit`` is the NEXT commit index at that moment)."""
+
+    step: str = ""  # "after_segment" | "mid_manifest" | "before_dirsync" | "mid_split"
     at_commit: int = -1  # commit index at which to fire (-1 = never)
     _count: int = field(default=0, repr=False)
 
@@ -89,87 +115,144 @@ class DurableStats:
     flush_bytes: int = 0  # bytes of node images made durable
     fsyncs: int = 0
     nodes_flushed: int = 0
+    gc_removed: int = 0  # journal files unlinked after losing all references
 
 
-class DurableABTree:
-    """ABTree + round-granular link-and-persist durability."""
+class _DurableBase:
+    """The ONE commit-protocol implementation (link-and-persist at round
+    granularity, per-shard journal lanes, single vector manifest).  The
+    concrete classes below only bind it to their backing structure."""
 
-    def __init__(
-        self,
-        directory: str,
-        cfg: TreeConfig = TreeConfig(),
-        mode: str = "elim",
-        crash: Optional[CrashPoint] = None,
-        snapshot_every: int = 64,
-    ):
+    backend = ""  # "tree" | "forest"
+
+    # -- backend surface (provided by subclasses) ------------------------------
+
+    def _n_shards(self) -> int:
+        raise NotImplementedError
+
+    def _take_dirty_all(self) -> List[np.ndarray]:
+        raise NotImplementedError
+
+    def _persisted_host_arrays(self) -> List[Dict[str, np.ndarray]]:
+        """Per-shard persisted-field arrays.  Each device array crosses to
+        the host ONCE per commit; per-shard entries are views of it."""
+        raise NotImplementedError
+
+    def _shard_root_height(self, s: int):
+        raise NotImplementedError
+
+    def _capacity(self) -> int:
+        raise NotImplementedError
+
+    def _mode(self) -> str:
+        raise NotImplementedError
+
+    def _in_split_now(self) -> bool:
+        return False
+
+    def _manifest_extra(self) -> dict:
+        return {}
+
+    # -- journal lifecycle -----------------------------------------------------
+
+    def _init_journal(self, directory: str, crash: Optional[CrashPoint],
+                      snapshot_every: int):
         os.makedirs(directory, exist_ok=True)
         self.dir = directory
-        self.tree = ABTree(cfg, mode=mode)
-        if mode == "occ":
-            # p-OCC: per-update flush discipline → per-sub-round commits
-            self.tree.subround_hook = self._commit
         self.crash = crash or CrashPoint()
         self.snapshot_every = snapshot_every
         self.dstats = DurableStats()
         self._commit_idx = 0
-        self._segments: list = []  # segment filenames since last snapshot
-        self._snapshot_file: Optional[str] = None
-        # initial durable state: commit round 0 (empty tree snapshot)
+        uids = [f"s{i:04d}" for i in range(self._n_shards())]
+        self._uids: List[str] = uids
+        self._next_uid = len(uids)
+        self._snapshots: Dict[str, Optional[str]] = {u: None for u in uids}
+        self._segments: Dict[str, List[str]] = {u: [] for u in uids}
+        self._shard_commits: Dict[str, int] = {u: -1 for u in uids}
+        self._force_snapshot = set(uids)
+        self._snap_capacity: Optional[int] = None
+        # initial durable state: commit round 0 (empty snapshots, all shards)
         self._commit(force_snapshot=True)
 
-    # -- public API -----------------------------------------------------------
-
-    def apply_round(self, ops, keys, vals=None) -> RoundOutput:
-        """Apply a round and make it durable.  Results are only returned
-        after the commit — the durable linearization discipline.  (In occ
-        mode the sub-round hook has already committed each sub-round; the
-        final commit below then flushes nothing new.)"""
-        out = self.tree.apply_round(ops, keys, vals)
-        if self.tree.mode != "occ":
-            self._commit()
-        return out
-
-    def stats(self) -> Dict[str, int]:
-        s = self.tree.stats()
-        s.update(
-            commits=self.dstats.commits,
-            flush_bytes=self.dstats.flush_bytes,
-            fsyncs=self.dstats.fsyncs,
-            nodes_flushed=self.dstats.nodes_flushed,
-        )
-        return s
+    def _new_shard_uid(self) -> str:
+        uid = f"s{self._next_uid:04d}"
+        self._next_uid += 1
+        self._snapshots[uid] = None
+        self._segments[uid] = []
+        self._shard_commits[uid] = -1
+        return uid
 
     # -- commit protocol (link-and-persist) ------------------------------------
 
     def _commit(self, force_snapshot: bool = False):
+        if self._in_split_now():
+            # a shard split is mid-restack (sweep / re-insert rounds run
+            # through the same engine): those intermediate states are not
+            # round boundaries and must never become the durable prefix.
+            return
         idx = self._commit_idx
-        # a pool growth invalidates segment indexing → force a snapshot
-        grown = getattr(self, "_snap_capacity", None) != self.tree.cfg.capacity
-        snap = force_snapshot or grown or (idx % self.snapshot_every == 0)
-        if snap:
-            fname = f"snapshot_{idx:08d}.npz"
-            self._write_snapshot(fname)
-            self._snapshot_file = fname
-            self._segments = []
-            self._snap_capacity = self.tree.cfg.capacity
-        else:
-            dirty = self.tree.take_dirty()
-            fname = f"segment_{idx:08d}.npz"
-            self._write_segment(fname, dirty)
-            self._segments.append(fname)
+        # a pool growth invalidates segment node indexing → force snapshots
+        grown = self._snap_capacity != self._capacity()
+        dirty = self._take_dirty_all()
+        shard_arrays = self._persisted_host_arrays()
+        jobs = []  # (uid, fname, node_ids, arrays)
+        for s in range(self._n_shards()):
+            uid = self._uids[s]
+            snap = (
+                force_snapshot
+                or grown
+                or (idx % self.snapshot_every == 0)
+                or uid in self._force_snapshot
+                or self._snapshots[uid] is None
+            )
+            if snap:
+                jobs.append((uid, f"{uid}_snapshot_{idx:08d}.npz", None,
+                             shard_arrays[s]))
+            elif dirty[s].size:
+                arrs = {f: a[dirty[s]] for f, a in shard_arrays[s].items()}
+                jobs.append((uid, f"{uid}_segment_{idx:08d}.npz", dirty[s], arrs))
+            # untouched shard: its journal lane is quiet this commit
+        for (uid, fname, node_ids, _), (nbytes, nnodes) in zip(
+            jobs, self._write_shard_files(jobs)
+        ):
+            self.dstats.flush_bytes += nbytes
+            self.dstats.fsyncs += 1
+            self.dstats.nodes_flushed += nnodes
+            if node_ids is None:
+                self._snapshots[uid] = fname
+                self._segments[uid] = []
+            else:
+                self._segments[uid].append(fname)
+            self._shard_commits[uid] = idx
+        self._force_snapshot.clear()
+        self._snap_capacity = self._capacity()
         self.crash.maybe_fire("after_segment", idx)
 
+        shard_entries = []
+        for s, uid in enumerate(self._uids):
+            root, height = self._shard_root_height(s)
+            shard_entries.append(
+                {
+                    "uid": uid,
+                    "snapshot": self._snapshots[uid],
+                    "segments": self._segments[uid],
+                    "root": root,
+                    "height": height,
+                    "commit": self._shard_commits[uid],
+                }
+            )
         manifest = {
+            "version": _MANIFEST_VERSION,
+            "backend": self.backend,
             "commit": idx,
-            "snapshot": self._snapshot_file,
-            "segments": self._segments,
-            "root": int(self.tree.state.root),
-            "height": int(self.tree.state.height),
-            "capacity": self.tree.cfg.capacity,
-            "b": self.tree.cfg.b,
-            "a": self.tree.cfg.a,
-            "max_height": self.tree.cfg.max_height,
-            "mode": self.tree.mode,
+            "mode": self._mode(),
+            "snapshot_every": self.snapshot_every,
+            "capacity": self._capacity(),
+            "b": self._cfg().b,
+            "a": self._cfg().a,
+            "max_height": self._cfg().max_height,
+            "shards": shard_entries,
+            **self._manifest_extra(),
         }
         tmp = os.path.join(self.dir, "MANIFEST.tmp")
         payload = json.dumps(manifest)
@@ -187,19 +270,20 @@ class DurableABTree:
         self.dstats.fsyncs += 1
         self.dstats.commits += 1
         self._commit_idx += 1
+        self._gc(manifest)
 
-    def _write_snapshot(self, fname: str):
-        s = self.tree.state
-        arrs = {f: np.asarray(getattr(s, f)) for f in _PERSISTED_FIELDS}
-        self._write_npz(fname, node_ids=None, **arrs)
-        self.tree.take_dirty()  # snapshot covers everything
+    def _write_shard_files(self, jobs):
+        """Write + fsync every shard's journal file for this commit —
+        the parallel fsync lanes (one thread per shard file; a single
+        file is written inline)."""
+        if len(jobs) <= 1:
+            return [self._write_npz(f, ids, a) for _, f, ids, a in jobs]
+        with ThreadPoolExecutor(max_workers=min(len(jobs), 8)) as ex:
+            return list(
+                ex.map(lambda j: self._write_npz(j[1], j[2], j[3]), jobs)
+            )
 
-    def _write_segment(self, fname: str, dirty: np.ndarray):
-        s = self.tree.state
-        arrs = {f: np.asarray(getattr(s, f))[dirty] for f in _PERSISTED_FIELDS}
-        self._write_npz(fname, node_ids=dirty, **arrs)
-
-    def _write_npz(self, fname: str, node_ids, **arrs):
+    def _write_npz(self, fname: str, node_ids, arrs):
         path = os.path.join(self.dir, fname)
         tmp = path + ".tmp"
         save = dict(arrs)
@@ -211,44 +295,264 @@ class DurableABTree:
             os.fsync(f.fileno())  # the paper's clwb+sfence of new nodes
         os.replace(tmp, path)
         nbytes = sum(a.nbytes for a in save.values())
-        self.dstats.flush_bytes += nbytes
-        self.dstats.fsyncs += 1
-        self.dstats.nodes_flushed += (
+        nnodes = (
             int(node_ids.size) if node_ids is not None else int(arrs["keys"].shape[0])
+        )
+        return nbytes, nnodes
+
+    def _gc(self, manifest: dict):
+        """Unlink journal files the committed manifest no longer references
+        (a snapshot supersedes the shard's previous snapshot + segments;
+        a GC'd shard uid loses its whole chain).  Runs strictly after the
+        directory sync, so a crash can never resurrect a collected file
+        into the durable prefix."""
+        referenced = set()
+        for sh in manifest["shards"]:
+            if sh["snapshot"]:
+                referenced.add(sh["snapshot"])
+            referenced.update(sh["segments"])
+        removed = 0
+        for fname in os.listdir(self.dir):
+            if not fname.endswith(".npz"):
+                continue
+            if ("_segment_" in fname or "_snapshot_" in fname) and (
+                fname not in referenced
+            ):
+                try:
+                    os.unlink(os.path.join(self.dir, fname))
+                    removed += 1
+                except OSError:
+                    pass
+        self.dstats.gc_removed += removed
+
+    def _durable_stats_dict(self) -> Dict[str, int]:
+        return dict(
+            commits=self.dstats.commits,
+            flush_bytes=self.dstats.flush_bytes,
+            fsyncs=self.dstats.fsyncs,
+            nodes_flushed=self.dstats.nodes_flushed,
+            gc_removed=self.dstats.gc_removed,
         )
 
 
-def recover(directory: str, crash: Optional[CrashPoint] = None) -> DurableABTree:
-    """Recovery procedure (paper §5): load the last *committed* manifest,
-    replay node images, rebuild volatile fields (size recount, versions and
-    records reset, allocation recomputed by reachability)."""
-    mpath = os.path.join(directory, "MANIFEST")
-    with open(mpath) as f:
-        manifest = json.load(f)  # a torn manifest never commits (rename is atomic)
+class DurableABTree(_DurableBase):
+    """ABTree + round-granular link-and-persist durability — the S = 1 case
+    of the per-shard journal protocol (one journal lane)."""
 
-    cfg = TreeConfig(
-        capacity=manifest["capacity"],
-        b=manifest["b"],
-        a=manifest["a"],
-        max_height=manifest["max_height"],
-    )
-    arrs = {f: None for f in _PERSISTED_FIELDS}
+    backend = "tree"
+
+    def __init__(
+        self,
+        directory: str,
+        cfg: TreeConfig = TreeConfig(),
+        mode: str = "elim",
+        crash: Optional[CrashPoint] = None,
+        snapshot_every: int = 64,
+    ):
+        self.tree = ABTree(cfg, mode=mode)
+        if mode == "occ":
+            # p-OCC: per-update flush discipline → per-sub-round commits
+            self.tree.subround_hook = self._commit
+        self._init_journal(directory, crash, snapshot_every)
+
+    # -- backend surface -------------------------------------------------------
+
+    def _n_shards(self) -> int:
+        return 1
+
+    def _take_dirty_all(self):
+        return [self.tree.take_dirty()]
+
+    def _persisted_host_arrays(self):
+        st = self.tree.state
+        return [{f: np.asarray(getattr(st, f)) for f in _PERSISTED_FIELDS}]
+
+    def _shard_root_height(self, s: int):
+        return int(self.tree.state.root), int(self.tree.state.height)
+
+    def _capacity(self) -> int:
+        return self.tree.cfg.capacity
+
+    def _cfg(self) -> TreeConfig:
+        return self.tree.cfg
+
+    def _mode(self) -> str:
+        return self.tree.mode
+
+    # -- public API -----------------------------------------------------------
+
+    def apply_round(self, ops, keys, vals=None) -> RoundOutput:
+        """Apply a round and make it durable.  Results are only returned
+        after the commit — the durable linearization discipline.  (In occ
+        mode the sub-round hook has already committed each sub-round; no
+        further flush is needed.)"""
+        out = self.tree.apply_round(ops, keys, vals)
+        if self.tree.mode != "occ":
+            self._commit()
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        s = self.tree.stats()
+        s.update(self._durable_stats_dict())
+        return s
+
+
+class DurableForest(_DurableBase):
+    """ABForest + per-shard link-and-persist durability: one journal lane
+    per shard (independent dirty tracking, parallel fsyncs), one manifest
+    committing the vector of per-shard commit indices atomically.  A shard
+    split forces snapshots of exactly the two affected shards — journals
+    are keyed by stable shard uids, so every other shard's segment chain
+    survives the restack."""
+
+    backend = "forest"
+
+    def __init__(
+        self,
+        directory: str,
+        n_shards: int = 1,
+        cfg: TreeConfig = TreeConfig(),
+        mode: str = "elim",
+        crash: Optional[CrashPoint] = None,
+        snapshot_every: int = 64,
+        *,
+        splits=None,
+        key_space=None,
+        max_keys_per_shard: Optional[int] = None,
+        narrow_scan: bool = False,
+        narrow: bool = False,
+    ):
+        self.forest = ABForest(
+            n_shards=n_shards,
+            cfg=cfg,
+            mode=mode,
+            splits=splits,
+            key_space=key_space,
+            max_keys_per_shard=max_keys_per_shard,
+            narrow_scan=narrow_scan,
+            narrow=narrow,
+        )
+        self._wire_hooks()
+        self._init_journal(directory, crash, snapshot_every)
+
+    def _wire_hooks(self):
+        if self.forest.mode == "occ":
+            # p-OCC: per-update flush discipline → per-sub-round commits
+            self.forest.subround_hook = self._commit
+        self.forest.split_hook = self._on_shard_split
+
+    def _on_shard_split(self, s: int):
+        """Journal re-keying for a shard split: the fresh shard at ``s + 1``
+        gets a new uid, and both affected shards are marked for a forced
+        snapshot at the next commit (shard ``s`` halved its contents; the
+        new shard has no journal yet).  Every other uid's chain is
+        untouched."""
+        self._uids.insert(s + 1, self._new_shard_uid())
+        self._force_snapshot.add(self._uids[s])
+        self.crash.maybe_fire("mid_split", self._commit_idx)
+
+    # -- backend surface -------------------------------------------------------
+
+    def _n_shards(self) -> int:
+        return self.forest.n_shards
+
+    def _take_dirty_all(self):
+        return self.forest.take_dirty()
+
+    def _persisted_host_arrays(self):
+        st = self.forest.state
+        stacked = {f: np.asarray(getattr(st, f)) for f in _PERSISTED_FIELDS}
+        return [
+            {f: a[s] for f, a in stacked.items()}
+            for s in range(self.forest.n_shards)
+        ]
+
+    def _shard_root_height(self, s: int):
+        st = self.forest.state
+        return int(np.asarray(st.root)[s]), int(np.asarray(st.height)[s])
+
+    def _capacity(self) -> int:
+        return self.forest.cfg.capacity
+
+    def _cfg(self) -> TreeConfig:
+        return self.forest.cfg
+
+    def _mode(self) -> str:
+        return self.forest.mode
+
+    def _in_split_now(self) -> bool:
+        return self.forest._in_split
+
+    def _manifest_extra(self) -> dict:
+        return {
+            "splits": [int(x) for x in self.forest._splits],
+            "max_keys_per_shard": self.forest.max_keys_per_shard,
+            "narrow": self.forest.narrow,
+            "narrow_scan": self.forest.narrow_scan,
+        }
+
+    # -- public API -----------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return self.forest.n_shards
+
+    def apply_round(self, ops, keys, vals=None, *, scan_cap: int = 128) -> RoundOutput:
+        """Apply one forest round and make it durable (results released
+        only after the commit).  In occ mode each sub-round has already
+        committed via the hook; a shard split triggered by the round is
+        journaled as forced snapshots of the two affected shards."""
+        out = self.forest.apply_round(ops, keys, vals, scan_cap=scan_cap)
+        if self.forest.mode != "occ":
+            self._commit()
+        return out
+
+    def scan_round(self, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
+        """Read-only: scans flush nothing (they dirty no nodes)."""
+        return self.forest.scan_round(lo, hi, cap=cap, max_retries=max_retries)
+
+    def scan_delete_round(self, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
+        out = self.forest.scan_delete_round(lo, hi, cap=cap, max_retries=max_retries)
+        if self.forest.mode != "occ":
+            self._commit()
+        return out
+
+    def items(self) -> dict:
+        return self.forest.items()
+
+    def stats(self) -> Dict[str, int]:
+        s = self.forest.stats()
+        s.update(self._durable_stats_dict())
+        return s
+
+
+# ----------------------------------------------------------------------------
+# Recovery
+# ----------------------------------------------------------------------------
+
+
+def _load_shard_arrays(directory: str, shard_entry: dict) -> Dict[str, np.ndarray]:
+    """Replay one shard's journal: snapshot, then segments in commit order."""
 
     def load(fname):
         with np.load(os.path.join(directory, fname)) as z:
             return {k: z[k] for k in z.files}
 
-    snap = load(manifest["snapshot"])
-    for f in _PERSISTED_FIELDS:
-        arrs[f] = snap[f].copy()
-    for seg in manifest["segments"]:
+    snap = load(shard_entry["snapshot"])
+    arrs = {f: snap[f].copy() for f in _PERSISTED_FIELDS}
+    for seg in shard_entry["segments"]:
         z = load(seg)
         ids = z["node_ids"]
         for f in _PERSISTED_FIELDS:
             arrs[f][ids] = z[f]
+    return arrs
 
-    state = make_tree(cfg)
-    # rebuild volatile fields -------------------------------------------------
+
+def _rebuild_state(arrs: Dict[str, np.ndarray], root: int, height: int,
+                   cfg: TreeConfig) -> TreeState:
+    """Rebuild one shard's volatile fields from its persisted arrays
+    (paper §5): size recount, versions and records reset, allocation and
+    parent/pidx recomputed by the reachability walk from the root."""
     keys = arrs["keys"]
     children = arrs["children"]
     is_leaf = arrs["is_leaf"]
@@ -259,12 +563,10 @@ def recover(directory: str, crash: Optional[CrashPoint] = None) -> DurableABTree
     size = np.zeros((n,), np.int32)
     size[is_leaf] = (keys[is_leaf] != int(EMPTY)).sum(axis=1)
     size[~is_leaf] = (children[~is_leaf] != int(NULL)).sum(axis=1)
-    # allocation = reachability from root (paper: recovery walks the tree);
-    # parent/pidx are volatile and rebuilt during the same walk.
     alloc = np.zeros((n,), bool)
     parent_arr = np.full((n,), int(NULL), np.int32)
     pidx_arr = np.zeros((n,), np.int32)
-    stack = [manifest["root"]]
+    stack = [root]
     while stack:
         nid = stack.pop()
         if nid < 0 or alloc[nid]:
@@ -277,7 +579,8 @@ def recover(directory: str, crash: Optional[CrashPoint] = None) -> DurableABTree
                 pidx_arr[c] = j
                 stack.append(c)
 
-    state = state._replace(
+    state = make_tree(cfg)
+    return state._replace(
         keys=jnp.asarray(arrs["keys"]),
         vals=jnp.asarray(arrs["vals"]),
         children=jnp.asarray(arrs["children"]),
@@ -287,20 +590,88 @@ def recover(directory: str, crash: Optional[CrashPoint] = None) -> DurableABTree
         level=jnp.asarray(arrs["level"]),
         size=jnp.asarray(size),
         alloc=jnp.asarray(alloc),
-        root=jnp.int32(manifest["root"]),
-        height=jnp.int32(manifest["height"]),
+        root=jnp.int32(root),
+        height=jnp.int32(height),
         dirty=jnp.zeros((n,), bool),
     )
 
-    out = DurableABTree.__new__(DurableABTree)
+
+def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
+                     crash: Optional[CrashPoint]):
+    """Restore the journal bookkeeping of a recovered durable instance so
+    it resumes committing where the crashed one left off."""
     out.dir = directory
-    out.tree = ABTree(cfg, mode=manifest["mode"])
-    out.tree.state = state
     out.crash = crash or CrashPoint()
-    out.snapshot_every = 64
+    out.snapshot_every = manifest["snapshot_every"]
     out.dstats = DurableStats()
     out._commit_idx = manifest["commit"] + 1
-    out._segments = list(manifest["segments"])
-    out._snapshot_file = manifest["snapshot"]
-    out._snap_capacity = cfg.capacity
+    out._uids = [sh["uid"] for sh in manifest["shards"]]
+    out._next_uid = max(int(u[1:]) for u in out._uids) + 1
+    out._snapshots = {sh["uid"]: sh["snapshot"] for sh in manifest["shards"]}
+    out._segments = {sh["uid"]: list(sh["segments"]) for sh in manifest["shards"]}
+    out._shard_commits = {sh["uid"]: sh["commit"] for sh in manifest["shards"]}
+    out._force_snapshot = set()
+    out._snap_capacity = manifest["capacity"]
+
+
+def recover(directory: str, crash: Optional[CrashPoint] = None):
+    """Recovery procedure (paper §5): load the last *committed* manifest,
+    replay each shard's node images, rebuild volatile fields (size recount,
+    versions and records reset, allocation recomputed by reachability), and
+    restack the shards at the recorded split points.  Returns a
+    ``DurableABTree`` or ``DurableForest`` according to what was journaled;
+    the recovered instance is fully operational — occ mode re-installs the
+    per-sub-round commit hook and ``snapshot_every`` is restored from the
+    manifest."""
+    mpath = os.path.join(directory, "MANIFEST")
+    with open(mpath) as f:
+        manifest = json.load(f)  # a torn manifest never commits (rename is atomic)
+
+    cfg = TreeConfig(
+        capacity=manifest["capacity"],
+        b=manifest["b"],
+        a=manifest["a"],
+        max_height=manifest["max_height"],
+    )
+    mode = manifest["mode"]
+    states = [
+        _rebuild_state(
+            _load_shard_arrays(directory, sh), sh["root"], sh["height"], cfg
+        )
+        for sh in manifest["shards"]
+    ]
+
+    if manifest["backend"] == "forest":
+        out = DurableForest.__new__(DurableForest)
+        forest = ABForest(
+            n_shards=len(states),
+            cfg=cfg,
+            mode=mode,
+            splits=np.asarray(manifest["splits"], np.int64),
+            max_keys_per_shard=manifest["max_keys_per_shard"],
+            narrow=manifest["narrow"],
+            narrow_scan=manifest["narrow_scan"],
+        )
+        forest.state = _stack_states(states)
+        out.forest = forest
+        _restore_journal(out, directory, manifest, crash)
+        out._wire_hooks()
+        return out
+
+    out = DurableABTree.__new__(DurableABTree)
+    out.tree = ABTree(cfg, mode=mode)
+    out.tree.state = states[0]
+    _restore_journal(out, directory, manifest, crash)
+    if mode == "occ":
+        # a recovered p-OCC tree keeps per-sub-round durability
+        out.tree.subround_hook = out._commit
+    return out
+
+
+def recover_forest(directory: str, crash: Optional[CrashPoint] = None) -> DurableForest:
+    """Typed convenience wrapper: recover a ``DurableForest`` journal."""
+    out = recover(directory, crash)
+    assert isinstance(out, DurableForest), (
+        f"journal at {directory!r} is backend {out.backend!r}, not a forest"
+    )
     return out

@@ -1,19 +1,29 @@
-"""ABForest: a key-partitioned forest of (a,b)-trees with vmapped rounds.
+"""ABForest: a key-partitioned forest of (a,b)-trees on the unified engine.
 
 The round-based OCC/elimination design is embarrassingly shardable: lanes on
 disjoint key ranges never conflict, so partitioning the key space by split
 points turns one contended tree into ``n_shards`` independent ones — and the
 SPMD formulation makes the partition *free* on device: every shard's round
-is the same program, so all shards execute in ONE ``jax.vmap`` of the PR-2
-round-engine phase kernels (``core/rounds.py`` runs unchanged per shard).
+is the same program, so all shards execute as ONE ``jax.vmap`` of the
+round-engine phase kernels.
+
+Since PR 5 this module contains NO round execution of its own: every host
+loop (split cascade, rebalance waves, deferred-insert drain, occ
+sub-rounds, the optimistic scan retry) lives in ``core/rounds.py`` in its
+leading-shard ``(S, wave_w)`` form, shared verbatim with ``ABTree`` (the
+S = 1 case).  What remains here is what is genuinely *forest*: the key
+partition (split points → router bounds), the shard lifecycle (overflow
+splits / restacks), the stacked-state representation, and the per-shard
+durability surface (``shard_state`` / ``take_dirty``).
 
 Representation
     All shard trees live in one stacked ``TreeState`` whose every leaf array
     carries a leading shard axis (``keys``: (S, N, b), ``root``: (S,), …).
     This is the layout every later scaling step wants: multi-device
-    placement is ``shard_map`` over axis 0, per-shard durability is a slice.
+    placement is ``shard_map`` over axis 0, per-shard durability
+    (``core/durable.py``'s ``DurableForest``) journals slices of it.
 
-Routing (host, per round)
+Routing (host, per round — performed inside ``rounds.execute_plan``)
     ``elimination.lane_masks`` classifies the batch's lanes; point lanes go
     to ``shard = searchsorted(splits, key)``; OP_RANGE lanes are split at
     shard boundaries into per-shard sub-lanes.  Each shard's lane group is
@@ -23,17 +33,17 @@ Routing (host, per round)
     a shard are ascending, so concatenation is globally sorted).
 
 Semantics
-    Identical to ``ABTree``: a forest round is one round — scans linearize
-    before the round's net writes, point lanes apply in arrival order per
-    key (stable packing preserves arrival order within a shard, and all ops
-    on one key land in one shard).  ``DictOracle`` remains the single
-    reference: a forest with ANY shard count must be oracle-equivalent.
+    Identical to ``ABTree`` — they run the same engine: a forest round is
+    one round, scans linearize before the round's net writes, point lanes
+    apply in arrival order per key (stable packing preserves arrival order
+    within a shard, and all ops on one key land in one shard).
+    ``DictOracle`` remains the single reference: a forest with ANY shard
+    count must be oracle-equivalent.
 
 Conflict granularity
-    Scan validation is per shard *component*: shards linked by a
-    cross-shard lane validate jointly (all of a lane's sub-lanes accept
-    against ONE snapshot — the single-tree linearization guarantee), while
-    independent shards validate independently, so a concurrent writer
+    Scan validation is per shard *component* (see the scan phase in
+    ``core/rounds.py``): shards linked by a cross-shard lane validate
+    jointly, independent shards independently, so a concurrent writer
     (``scan_hook``, modeling other engine replicas) invalidates only the
     components whose versions it bumped.  ``scan_retries`` counts retried
     *lanes* (ops), the honest per-op cost the sharding is buying down.
@@ -43,11 +53,12 @@ Shard overflow
     split: the median key becomes a new split point, the upper half is swept
     off the hot shard with fused scan+delete rounds, a fresh shard is
     restacked in at the new position, and the swept keys re-insert through
-    the normal router (which now targets the new shard).
+    the normal router (which now targets the new shard).  ``split_hook``
+    fires after the restack — the durable layer uses it to re-key its
+    per-shard journals and force snapshots of the two affected shards.
 """
 from __future__ import annotations
 
-import functools
 from typing import List, Optional, Tuple
 
 import jax
@@ -58,126 +69,20 @@ from repro.core import elimination as elim
 from repro.core import rounds
 from repro.core.abtree import (
     EMPTY,
-    INT_MAX,
-    KEY_DTYPE,
     KEY_MIN,
-    NOTFOUND,
     OP_DELETE,
     OP_INSERT,
-    OP_NOP,
     RoundOutput,
-    ScanConflictError,
     ScanOutput,
     TreeConfig,
     TreeState,
-    VAL_DTYPE,
     grow_pool,
     make_tree,
 )
-from repro.core.rounds import (
-    _duplicate_ranks,
-    _independent_by_parent_np,
-    _phase_apply,
-    _phase_overfull_leaves,
-    _phase_retry_insert,
-    _phase_scan,
-    _phase_search_combine,
-    _phase_shrink,
-    _phase_split,
-    _phase_underfull,
-    gather_until_frontier_fits,
-)
-
-# ----------------------------------------------------------------------------
-# vmapped phase kernels: one program, all shards (leading axis 0 everywhere)
-# ----------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6, 7))
-def _v_scan(
-    state, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int,
-    narrow: bool, narrow_descent: bool = False,
-):
-    f = lambda st, l, h: _phase_scan(
-        st, cfg, l, h, frontier_cap, cap, narrow, narrow_descent
-    )
-    return jax.vmap(f)(state, lo, hi)
-
-
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _v_search_combine(state, batch, cfg: TreeConfig, narrow: bool = False):
-    return jax.vmap(lambda st, b: _phase_search_combine(st, b, cfg, narrow))(
-        state, batch
-    )
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def _v_apply(state, cfg: TreeConfig, ks, arrival, leaf_ids, slot, res):
-    f = lambda st, a, b, c, d, e: _phase_apply(st, cfg, a, b, c, d, e)
-    return jax.vmap(f)(state, ks, arrival, leaf_ids, slot, res)
-
-
-@functools.partial(jax.jit, static_argnums=(1, 6))
-def _v_retry_insert(state, cfg: TreeConfig, ks, vals, arrival, deferred, narrow=False):
-    f = lambda st, a, b, c, d: _phase_retry_insert(st, cfg, a, b, c, d, narrow)
-    return jax.vmap(f)(state, ks, vals, arrival, deferred)
-
-
-@functools.partial(jax.jit, static_argnums=(1, 4))
-def _v_overfull(state, cfg: TreeConfig, ks, deferred, narrow=False):
-    return jax.vmap(lambda st, k, d: _phase_overfull_leaves(st, cfg, k, d, narrow))(
-        state, ks, deferred
-    )
-
-
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def _v_split(state, cfg: TreeConfig, w: int, node_ids, active):
-    return jax.vmap(lambda st, n, a: _phase_split(st, cfg, w, n, a))(
-        state, node_ids, active
-    )
-
-
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def _v_underfull(state, cfg: TreeConfig, w: int, node_ids, active):
-    return jax.vmap(lambda st, n, a: _phase_underfull(st, cfg, w, n, a))(
-        state, node_ids, active
-    )
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def _v_shrink(state, cfg: TreeConfig):
-    return jax.vmap(lambda st: _phase_shrink(st, cfg))(state)
-
-
-# ----------------------------------------------------------------------------
-# host helpers
-# ----------------------------------------------------------------------------
-
-
-def _pow2(n: int) -> int:
-    """Shared pad width: power of two ≥ n, floor 8 (bounds jit recompiles)."""
-    return max(8, 1 << (int(n) - 1).bit_length())
-
-
-def _pack_slots(shard: np.ndarray, n_shards: int):
-    """Vectorized per-shard slot assignment for lane packing: returns
-    ``(shard_sorted, slot_sorted, order)`` where ``order`` stably sorts
-    lanes by shard (preserving arrival order within each shard) and
-    ``slot_sorted[j]`` is lane ``order[j]``'s slot in its shard's row."""
-    order = np.argsort(shard, kind="stable")
-    shard_sorted = shard[order]
-    starts = np.searchsorted(shard_sorted, np.arange(n_shards))
-    slot_sorted = np.arange(shard_sorted.size) - starts[shard_sorted]
-    return shard_sorted, slot_sorted, order
 
 
 def _stack_states(states: List[TreeState]) -> TreeState:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
-
-
-# ----------------------------------------------------------------------------
-# ABForest
-# ----------------------------------------------------------------------------
 
 
 class ABForest:
@@ -233,10 +138,29 @@ class ABForest:
         # gather and its per-shard version validation (models update rounds
         # from other engine replicas).
         self.scan_hook = None
+        # durability hook, as on ABTree: fires after every executed occ
+        # sub-round (DurableForest commits per sub-round in occ mode).
+        self.subround_hook = None
+        # shard-lifecycle hook: split_hook(s) fires after shard s has been
+        # split and the fresh shard restacked at s + 1 (before the swept
+        # keys re-insert) — the durable layer's journal re-keying point.
+        self.split_hook = None
         # forest-level counters (device stats stay per shard; see stats()).
         self._rounds = 0
         self._scans = 0
         self._scan_retries = 0
+
+    # -- unified-engine holder protocol ---------------------------------------
+
+    @property
+    def stacked(self) -> TreeState:
+        """The (S, …) stacked state the unified engine executes on — for the
+        forest this IS the canonical representation."""
+        return self.state
+
+    @stacked.setter
+    def stacked(self, st: TreeState):
+        self.state = st
 
     # -- routing --------------------------------------------------------------
 
@@ -258,98 +182,13 @@ class ABForest:
         range lanes are split into per-shard sub-lanes and their rows
         stitched back in key order."""
         plan = rounds.build_plan(ops, keys, vals, scan_cap=scan_cap)
-        bsz = int(plan.ops.shape[0])
-        if bsz == 0:
-            self._rounds += 1
-            return RoundOutput(
-                results=jnp.full((0,), NOTFOUND, VAL_DTYPE),
-                found=jnp.zeros((0,), bool),
-                scan=None,
-            )
-        ops_np = np.asarray(plan.ops)
-        keys_np = np.asarray(plan.keys)
-        vals_np = np.asarray(plan.vals)
-        is_point_j, is_range_j = elim.lane_masks(plan.ops)
-        is_point = np.asarray(is_point_j)
-        is_range = np.asarray(is_range_j)
-
-        results = np.full((bsz,), int(NOTFOUND), np.int64)
-        found = np.zeros((bsz,), bool)
-
-        # --- scan phase first: range lanes linearize before the round's writes.
-        scan_out = None
-        if plan.has_range:
-            rl = np.nonzero(is_range)[0]
-            lo_np = np.asarray(plan.lo)[rl]
-            hi_np = np.asarray(plan.hi)[rl]
-            k_, v_, c_, t_ = self._scan_lanes(
-                lo_np, hi_np, scan_cap, n_scan_ops=plan.n_range
-            )
-            keys_full = np.full((bsz, scan_cap), int(EMPTY), np.int64)
-            vals_full = np.zeros((bsz, scan_cap), np.int64)
-            count_full = np.zeros((bsz,), np.int32)
-            trunc_full = np.zeros((bsz,), bool)
-            keys_full[rl] = k_
-            vals_full[rl] = v_
-            count_full[rl] = c_
-            trunc_full[rl] = t_
-            scan_out = ScanOutput(
-                keys=jnp.asarray(keys_full),
-                vals=jnp.asarray(vals_full),
-                count=jnp.asarray(count_full),
-                truncated=jnp.asarray(trunc_full),
-            )
-            results[rl] = c_.astype(np.int64)
-            found[rl] = c_ > 0
-
-        # --- point lanes: pack per shard (stable ⇒ arrival order kept).
-        if plan.has_point:
-            pl = np.nonzero(is_point)[0]
-            shard = self._shard_of(keys_np[pl])
-            w = _pow2(int(np.bincount(shard, minlength=self.n_shards).max()))
-            ops_sw = np.full((self.n_shards, w), OP_NOP, np.int32)
-            keys_sw = np.zeros((self.n_shards, w), np.int64)
-            vals_sw = np.zeros((self.n_shards, w), np.int64)
-            shard_sorted, slot_sorted, order = _pack_slots(shard, self.n_shards)
-            ops_sw[shard_sorted, slot_sorted] = ops_np[pl][order]
-            keys_sw[shard_sorted, slot_sorted] = keys_np[pl][order]
-            vals_sw[shard_sorted, slot_sorted] = vals_np[pl][order]
-            slot = np.empty(pl.size, np.int64)
-            slot[order] = slot_sorted
-            self._ensure_capacity(w)
-            res_sw, fnd_sw = self._point_phases(
-                jnp.asarray(ops_sw),
-                jnp.asarray(keys_sw, KEY_DTYPE),
-                jnp.asarray(vals_sw, VAL_DTYPE),
-            )
-            results[pl] = np.asarray(res_sw)[shard, slot]
-            found[pl] = np.asarray(fnd_sw)[shard, slot]
-
-        self._rounds += 1
-        out = RoundOutput(
-            results=jnp.asarray(results, VAL_DTYPE),
-            found=jnp.asarray(found),
-            scan=scan_out,
-        )
-        self._maybe_split_shards()
-        return out
+        return rounds.execute_plan(self, plan)
 
     def scan_round(self, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
         """Batched range scans (semantics of ``ABTree.scan_round``): per
         query the ≤ ``cap`` smallest keys in ``[lo_i, hi_i)``, ascending,
         stitched across shards in key order."""
-        lo = np.atleast_1d(np.asarray(lo, np.int64))
-        hi = np.atleast_1d(np.asarray(hi, np.int64))
-        assert lo.shape == hi.shape and lo.ndim == 1
-        k_, v_, c_, t_ = self._scan_lanes(
-            lo, hi, cap, n_scan_ops=int(lo.size), max_retries=max_retries
-        )
-        return ScanOutput(
-            keys=jnp.asarray(k_),
-            vals=jnp.asarray(v_),
-            count=jnp.asarray(c_),
-            truncated=jnp.asarray(t_),
-        )
+        return rounds.execute_scan(self, lo, hi, cap=cap, max_retries=max_retries)
 
     def scan_delete_round(
         self, lo, hi, cap: int = 128, max_retries: int = 8
@@ -359,58 +198,14 @@ class ABForest:
         exactly the *emitted* keys — keys a truncated page did not emit
         survive for the caller's next chunk, preserving the
         one-fused-round-per-chunk sweep contract of ``SessionIndex``."""
-        lo = np.atleast_1d(np.asarray(lo, np.int64))
-        hi = np.atleast_1d(np.asarray(hi, np.int64))
-        assert lo.shape == hi.shape and lo.ndim == 1
-        k_, v_, c_, t_ = self._scan_lanes(
-            lo, hi, cap, n_scan_ops=int(lo.size), max_retries=max_retries
-        )
-        del_keys = k_[k_ != int(EMPTY)]
-        if del_keys.size:
-            shard = self._shard_of(del_keys)
-            w = _pow2(int(np.bincount(shard, minlength=self.n_shards).max()))
-            ops_sw = np.full((self.n_shards, w), OP_NOP, np.int32)
-            keys_sw = np.zeros((self.n_shards, w), np.int64)
-            shard_sorted, slot_sorted, order = _pack_slots(shard, self.n_shards)
-            ops_sw[shard_sorted, slot_sorted] = OP_DELETE
-            keys_sw[shard_sorted, slot_sorted] = del_keys[order]
-            self._ensure_capacity(w)
-            self._point_phases(
-                jnp.asarray(ops_sw),
-                jnp.asarray(keys_sw, KEY_DTYPE),
-                jnp.zeros((self.n_shards, w), VAL_DTYPE),
-            )
-        self._rounds += 1
-        return ScanOutput(
-            keys=jnp.asarray(k_),
-            vals=jnp.asarray(v_),
-            count=jnp.asarray(c_),
-            truncated=jnp.asarray(t_),
-        )
+        return rounds.execute_scan_delete(self, lo, hi, cap=cap, max_retries=max_retries)
 
     def scan_stream(self, lo, hi, cap: int = 128):
         """Stream all (key, value) pairs in ``[lo, hi)`` ascending by
         chaining per-shard cursors: each page queries only the shard holding
         the cursor, so arbitrarily long cross-shard scans stay bounded at
         ``cap`` entries (and one shard's gather) per round."""
-        if cap <= 0:
-            raise ValueError(f"scan_stream: cap must be positive, got {cap}")
-        return self._scan_stream(int(lo), int(hi), cap)
-
-    def _scan_stream(self, cur: int, hi: int, cap: int):
-        while cur < hi:
-            s = int(np.searchsorted(self._splits, cur, side="right"))
-            s_hi = min(hi, self._bounds[s + 1])
-            out = self.scan_round([cur], [s_hi], cap=cap)
-            n = int(np.asarray(out.count)[0])
-            ks = np.asarray(out.keys)[0, :n]
-            vs = np.asarray(out.vals)[0, :n]
-            for k, v in zip(ks.tolist(), vs.tolist()):
-                yield int(k), int(v)
-            if bool(np.asarray(out.truncated)[0]):
-                cur = int(ks[-1]) + 1
-            else:
-                cur = s_hi  # shard exhausted: jump to the next shard's range
+        return rounds.execute_scan_stream(self, lo, hi, cap)
 
     def find(self, key) -> Optional[int]:
         out = self.apply_round([elim.OP_FIND], [key])
@@ -441,8 +236,19 @@ class ABForest:
 
     def shard_state(self, s: int) -> TreeState:
         """One shard's (unstacked) TreeState — for invariant checks and the
-        coming per-shard durability layer."""
+        per-shard durability layer (``DurableForest`` journals these
+        slices)."""
         return jax.tree_util.tree_map(lambda x: x[s], self.state)
+
+    def take_dirty(self) -> List[np.ndarray]:
+        """Per-shard node ids dirtied since the last durable commit (then
+        reset) — each shard's journal segment is exactly one of these
+        lists, so an untouched shard flushes nothing."""
+        d = np.asarray(self.state.dirty)
+        self.state = self.state._replace(dirty=jnp.zeros_like(self.state.dirty))
+        return [
+            np.nonzero(d[s])[0].astype(np.int32) for s in range(self.n_shards)
+        ]
 
     def stats(self) -> dict:
         """Forest-level stats: device counters summed over shards;
@@ -467,334 +273,6 @@ class ABForest:
     @property
     def splits(self) -> np.ndarray:
         return self._splits.copy()
-
-    # -- scan phase (per-shard optimistic validation) --------------------------
-
-    def _scan_lanes(self, lo_np, hi_np, cap, *, n_scan_ops, max_retries: int = 8):
-        """Split lanes ``[lo_i, hi_i)`` at shard boundaries, run one vmapped
-        scan phase, stitch sub-lane rows back per lane in key order.
-        Returns numpy ``(keys (B,cap), vals, count, truncated)``."""
-        bsz = int(lo_np.size)
-        out_k = np.full((bsz, cap), int(EMPTY), np.int64)
-        out_v = np.zeros((bsz, cap), np.int64)
-        out_c = np.zeros((bsz,), np.int32)
-        out_t = np.zeros((bsz,), bool)
-        sub_lo: List[List[int]] = [[] for _ in range(self.n_shards)]
-        sub_hi: List[List[int]] = [[] for _ in range(self.n_shards)]
-        lane_subs: List[List[Tuple[int, int]]] = [[] for _ in range(bsz)]
-        for i in range(bsz):
-            lo, hi = int(lo_np[i]), int(hi_np[i])
-            if hi <= lo:
-                continue
-            s0 = int(np.searchsorted(self._splits, lo, side="right"))
-            s1 = int(np.searchsorted(self._splits, hi - 1, side="right"))
-            for s in range(s0, s1 + 1):
-                slo = max(lo, self._bounds[s])
-                shi = min(hi, self._bounds[s + 1])
-                if shi <= slo:
-                    continue
-                lane_subs[i].append((s, len(sub_lo[s])))
-                sub_lo[s].append(slo)
-                sub_hi[s].append(shi)
-        n_per = np.array([len(x) for x in sub_lo], np.int64)
-        self._scans += int(n_scan_ops)
-        if int(n_per.sum()) == 0:
-            return out_k, out_v, out_c, out_t
-        # Shards linked by a cross-shard lane form one validation component:
-        # all of a lane's sub-lanes must be accepted against ONE snapshot
-        # (else the stitched row could mix states that never coexisted).
-        comp = np.arange(self.n_shards)
-
-        def _find(x):
-            while comp[x] != x:
-                comp[x] = comp[comp[x]]
-                x = comp[x]
-            return x
-
-        for subs in lane_subs:
-            for s, _ in subs[1:]:
-                comp[_find(subs[0][0])] = _find(s)
-        groups = np.array([_find(s) for s in range(self.n_shards)])
-        w = _pow2(int(n_per.max()))
-        lo_sw = np.full((self.n_shards, w), int(EMPTY), np.int64)
-        hi_sw = np.full((self.n_shards, w), int(EMPTY), np.int64)
-        for s in range(self.n_shards):
-            lo_sw[s, : n_per[s]] = sub_lo[s]
-            hi_sw[s, : n_per[s]] = sub_hi[s]
-        g_k, g_v, g_c, g_t = self._run_scan_phase(
-            jnp.asarray(lo_sw, KEY_DTYPE),
-            jnp.asarray(hi_sw, KEY_DTYPE),
-            cap,
-            n_per,
-            max_retries,
-            groups,
-        )
-        for i in range(bsz):
-            if not lane_subs[i]:
-                continue
-            parts_k, parts_v, truncated = [], [], False
-            for s, j in lane_subs[i]:  # shards ascending ⇒ keys ascending
-                c = int(g_c[s, j])
-                truncated = truncated or bool(g_t[s, j])
-                parts_k.append(g_k[s, j, :c])
-                parts_v.append(g_v[s, j, :c])
-            cat_k = np.concatenate(parts_k)
-            cat_v = np.concatenate(parts_v)
-            n = min(cat_k.size, cap)
-            out_k[i, :n] = cat_k[:n]
-            out_v[i, :n] = cat_v[:n]
-            out_c[i] = n
-            out_t[i] = truncated or cat_k.size > cap
-        return out_k, out_v, out_c, out_t
-
-    def _run_scan_phase(
-        self, lo_sw, hi_sw, cap, n_per_shard, max_retries: int = 8, groups=None
-    ):
-        """One vmapped gather over all shards + per-*component* version
-        validation: shards linked by a cross-shard lane (``groups``) accept
-        or retry TOGETHER, so every lane's stitched row comes from one
-        snapshot (the single-tree linearization guarantee); independent
-        shards validate independently, which is the conflict-window shrink
-        sharding buys.  An accepted component's rows are frozen (its scans
-        linearized at that validation point); only failed components' lanes
-        retry — ``scan_retries`` accrues the retried lane count."""
-        n_s, w = int(lo_sw.shape[0]), int(lo_sw.shape[1])
-        if groups is None:
-            groups = np.arange(n_s)
-        buf_k = np.full((n_s, w, cap), int(EMPTY), np.int64)
-        buf_v = np.zeros((n_s, w, cap), np.int64)
-        buf_c = np.zeros((n_s, w), np.int32)
-        buf_t = np.zeros((n_s, w), bool)
-        n_per_shard = np.asarray(n_per_shard)
-        pending = n_per_shard > 0  # lane-less shards are trivially done
-        retried = 0
-        # a scan_hook writer may push a shard past max_keys_per_shard: the
-        # split (which restacks to S+1 shards) must not fire under this
-        # loop's (S, w) lane routing — defer it to the next update round.
-        self._scan_active += 1
-        try:
-            for _attempt in range(max_retries):
-                snap = self.state
-                out, touched = gather_until_frontier_fits(
-                    self,
-                    lambda fc: _v_scan(
-                        snap, self.cfg, lo_sw, hi_sw, fc, cap,
-                        self.narrow_scan, self.narrow,
-                    ),
-                )
-                if self.scan_hook is not None:
-                    self.scan_hook()
-                snap_ver = np.asarray(snap.ver)
-                live_ver = np.asarray(self.state.ver)
-                touched_np = np.asarray(touched)
-                shard_ok = np.zeros(n_s, bool)
-                for s in np.nonzero(pending)[0]:
-                    ids = np.unique(touched_np[s])
-                    shard_ok[s] = np.array_equal(snap_ver[s][ids], live_ver[s][ids])
-                accept = np.zeros(n_s, bool)
-                for g in np.unique(groups[pending]):
-                    members = pending & (groups == g)
-                    if shard_ok[members].all():
-                        accept |= members
-                    else:  # whole component re-gathers next attempt
-                        retried += int(n_per_shard[members].sum())
-                if accept.any():
-                    k_np = np.asarray(out.keys)
-                    v_np = np.asarray(out.vals)
-                    c_np = np.asarray(out.count)
-                    t_np = np.asarray(out.truncated)
-                    for s in np.nonzero(accept)[0]:
-                        buf_k[s] = k_np[s]
-                        buf_v[s] = v_np[s]
-                        buf_c[s] = c_np[s]
-                        buf_t[s] = t_np[s]
-                    pending &= ~accept
-                if not pending.any():
-                    self._scan_retries += retried
-                    return buf_k, buf_v, buf_c, buf_t
-            raise ScanConflictError(
-                f"forest scan phase: version validation failed {max_retries} "
-                f"times on shards {np.nonzero(pending)[0].tolist()}"
-            )
-        finally:
-            self._scan_active -= 1
-
-    # -- point phases (vmapped search/combine → apply → retry → rebalance) -----
-
-    def _point_phases(self, ops_sw, keys_sw, vals_sw):
-        if self.mode == "elim":
-            return self._combine_apply(ops_sw, keys_sw, vals_sw)
-        return self._occ_round(ops_sw, keys_sw, vals_sw)
-
-    def _combine_apply(self, ops_sw, keys_sw, vals_sw):
-        self.state, pack = _v_search_combine(
-            self.state, (ops_sw, keys_sw, vals_sw), self.cfg, self.narrow
-        )
-        ks, arrival, leaf_ids, slot, res, results, found = pack
-        self.state, deferred = _v_apply(
-            self.state, self.cfg, ks, arrival, leaf_ids, slot, res
-        )
-        self._drain_deferred(ks, res.final_val, arrival, deferred)
-        self._fix_underfull_all()
-        return results, found
-
-    def _occ_round(self, ops_sw, keys_sw, vals_sw):
-        """OCC baseline: per-shard duplicate-rank sub-rounds, executed as
-        max-over-shards vmapped sub-rounds.  A shard whose own duplicate
-        rank is exhausted runs all-NOP lanes in the tail sub-rounds — those
-        are *not* sub-rounds it executes: its lanes are masked out, its
-        ``subrounds`` counter stays put, and its durable/validation cost is
-        zero (the per-shard early-exit of the ROADMAP follow-up; the vmap
-        itself still spans all shards, as any SPMD program must)."""
-        on = np.asarray(ops_sw)
-        kn = np.asarray(keys_sw)
-        n_s, w = on.shape
-        rank = np.stack([_duplicate_ranks(on[s], kn[s]) for s in range(n_s)])
-        # per-shard sub-round budget: rank r of a real op executes in
-        # sub-round r, so shard s is live only while r ≤ max(rank[s]).
-        live = on != OP_NOP  # (S, w)
-        shard_max = np.where(
-            live.any(axis=1), np.where(live, rank, 0).max(axis=1), -1
-        )
-        n_sub = int(rank.max()) + 1
-        results = jnp.full((n_s, w), NOTFOUND, VAL_DTYPE)
-        found = jnp.zeros((n_s, w), bool)
-        rank_j = jnp.asarray(rank)
-        for r in range(n_sub):
-            active = shard_max >= r  # (S,) host bools: shard executes r
-            m = (rank_j == r) & (ops_sw != OP_NOP)
-            sub_ops = jnp.where(m, ops_sw, OP_NOP).astype(jnp.int32)
-            sub_res, sub_found = self._combine_apply(sub_ops, keys_sw, vals_sw)
-            results = jnp.where(m, sub_res, results)
-            found = jnp.where(m, sub_found, found)
-            st = self.state.stats
-            self.state = self.state._replace(
-                stats=st._replace(
-                    subrounds=st.subrounds + jnp.asarray(active, jnp.int64)
-                )
-            )
-        return results, found
-
-    def _drain_deferred(self, ks, final_vals, arrival, deferred):
-        guard = 0
-        while bool(jnp.any(deferred)):
-            guard += 1
-            assert guard < 512 * self.cfg.max_height, "split loop diverged"
-            uniq = np.asarray(
-                _v_overfull(self.state, self.cfg, ks, deferred, self.narrow)
-            )
-            per_shard = [row[row != INT_MAX].astype(np.int32) for row in uniq]
-            if any(r.size for r in per_shard):
-                self._split_cascade(per_shard)
-            self.state, deferred = _v_retry_insert(
-                self.state, self.cfg, ks, final_vals, arrival, deferred, self.narrow
-            )
-
-    def _split_cascade(self, ids_per_shard: List[np.ndarray]):
-        """Split the given full nodes, all shards per wave (the forest form
-        of ``rounds._split_cascade``: nodes blocked by a full parent wait
-        for the parent's split; ≤ 1 active node per parent per wave)."""
-        n_s = self.n_shards
-        work = [set(int(i) for i in ids) for ids in ids_per_shard]
-        guard = 0
-        while any(work):
-            guard += 1
-            assert guard < 512 * self.cfg.max_height * n_s, "split cascade diverged"
-            size = np.asarray(self.state.size)
-            parent = np.asarray(self.state.parent)
-            alloc = np.asarray(self.state.alloc)
-            ready_rows: List[np.ndarray] = []
-            blocked_rows: List[List[int]] = []
-            for s in range(n_s):
-                ws = {n for n in work[s] if alloc[s, n] and size[s, n] >= self.cfg.b}
-                work[s] = ws
-                ready, blocked = [], []
-                for n in sorted(ws):
-                    p = int(parent[s, n])
-                    if p >= 0 and size[s, p] >= self.cfg.b:
-                        blocked.append(p)
-                    else:
-                        ready.append(n)
-                if not ready:
-                    # all blocked: queue the blocking parents for splitting
-                    work[s] |= set(blocked)
-                    ready_rows.append(np.zeros((0,), np.int32))
-                    blocked_rows.append([])
-                    continue
-                rd = _independent_by_parent_np(
-                    parent[s], np.asarray(ready, np.int32)
-                )[: self._wave_w]
-                ready_rows.append(rd)
-                blocked_rows.append(blocked)
-            if not any(r.size for r in ready_rows):
-                continue
-            self._ensure_capacity(2 * max(int(r.size) for r in ready_rows))
-            node_ids = np.zeros((n_s, self._wave_w), np.int32)
-            active = np.zeros((n_s, self._wave_w), bool)
-            for s, rd in enumerate(ready_rows):
-                node_ids[s, : rd.size] = rd
-                active[s, : rd.size] = True
-            self.state = _v_split(
-                self.state, self.cfg, self._wave_w,
-                jnp.asarray(node_ids), jnp.asarray(active),
-            )
-            for s, rd in enumerate(ready_rows):
-                for n in rd.tolist():
-                    work[s].discard(int(n))
-                work[s] |= set(blocked_rows[s])
-
-    def _fix_underfull_all(self):
-        """Rebalance every shard's underfull non-root nodes, bottom-up
-        vmapped waves; root shrink once a shard has no actionable wave."""
-        guard = 0
-        while True:
-            guard += 1
-            assert guard < 512 * self.cfg.max_height * self.n_shards, (
-                "underfull loop diverged"
-            )
-            st = self.state
-            alloc = np.asarray(st.alloc)
-            size = np.asarray(st.size)
-            parent = np.asarray(st.parent)
-            level = np.asarray(st.level)
-            is_leaf = np.asarray(st.is_leaf)
-            root = np.asarray(st.root)
-            sel_rows: List[np.ndarray] = []
-            any_wave = False
-            want_shrink = False
-            for s in range(self.n_shards):
-                r = int(root[s])
-                under = alloc[s] & (size[s] < self.cfg.a) & (parent[s] >= 0)
-                under[r] = False
-                ids = np.nonzero(under)[0].astype(np.int32)
-                actionable = ids[size[s][parent[s][ids]] >= 2] if ids.size else ids
-                if actionable.size:
-                    lv = level[s][actionable].min()
-                    sel = actionable[level[s][actionable] == lv]
-                    sel = _independent_by_parent_np(parent[s], sel)[: self._wave_w]
-                    sel_rows.append(sel)
-                    any_wave = True
-                else:
-                    sel_rows.append(np.zeros((0,), np.int32))
-                    if (not is_leaf[s, r]) and int(size[s, r]) == 1:
-                        want_shrink = True
-            if any_wave:
-                node_ids = np.zeros((self.n_shards, self._wave_w), np.int32)
-                active = np.zeros((self.n_shards, self._wave_w), bool)
-                for s, sel in enumerate(sel_rows):
-                    node_ids[s, : sel.size] = sel
-                    active[s, : sel.size] = True
-                self.state = _v_underfull(
-                    self.state, self.cfg, self._wave_w,
-                    jnp.asarray(node_ids), jnp.asarray(active),
-                )
-                continue
-            if want_shrink:
-                # per-shard `can` guard inside shrink_root makes the vmapped
-                # call exact: only single-child internal roots collapse.
-                self.state = _v_shrink(self.state, self.cfg)
-                continue
-            break
 
     # -- shard-overflow splitting ---------------------------------------------
 
@@ -848,6 +326,8 @@ class ABForest:
             self.n_shards += 1
             self._splits = np.insert(self._splits, s, m)
             self._rebuild_bounds()
+            if self.split_hook is not None:
+                self.split_hook(s)
             bs = 1024
             for i in range(0, len(moved_k), bs):
                 ck = moved_k[i : i + bs]

@@ -1,9 +1,19 @@
-"""Unified round engine: one composable phase pipeline behind every round.
+"""Unified sharded round engine: ONE (S, wave_w) pipeline behind every round.
 
 A *round* is a batch of mutually concurrent dictionary operations.  This
-module owns the execution of rounds: the public ``ABTree`` entry points
-(``apply_round``, ``scan_round``, ``scan_delete_round``) are thin wrappers
-that build a :class:`RoundPlan` (lane classification) and hand it to
+module owns the execution of rounds for the single tree and the forest
+alike: there is exactly one host-sequencing implementation, written in the
+leading-shard form — every phase kernel is a ``jax.vmap`` of the per-shard
+kernel over a stacked ``TreeState`` (leading shard axis on every array),
+every host loop masks its work per shard into shared ``(S, wave_w)`` /
+``(S, W)`` blocks, and ``ABTree`` is simply the S = 1 case (its ``stacked``
+property views the unstacked state as a one-shard stack).  ``ABForest``
+contributes only routing (key-partition split points) and shard lifecycle
+(overflow splits / restacks); the loops below never special-case either.
+
+The public ``ABTree``/``ABForest`` entry points (``apply_round``,
+``scan_round``, ``scan_delete_round``) are thin wrappers that build a
+:class:`RoundPlan` (lane classification) and hand it to
 :func:`execute_plan`, which sequences the ordered phase pipeline
 
     scan → search/combine → apply → retry → rebalance
@@ -16,6 +26,9 @@ Phase ↔ paper terminology (Elimination (a,b)-trees, §3–§4):
                       (retry on conflict).  Runs FIRST, so every scan in a
                       round linearizes *before* the round's net writes —
                       range lanes observe the pre-round dictionary.
+                      Validation is per shard *component*: shards linked by
+                      a cross-shard lane accept/retry against ONE snapshot;
+                      independent shards validate independently.
   ``search/combine``  the paper's ``search`` (root-to-leaf descent + unsorted
                       leaf probe) followed by the publishing-elimination
                       combine (§4): all ops on one key fold to ≤ 1 net
@@ -29,24 +42,41 @@ Phase ↔ paper terminology (Elimination (a,b)-trees, §3–§4):
                       of a thread retrying after helping a split.
   ``rebalance``       relaxed-rebalancing waves of the Larsen–Fagerberg
                       sub-operations (split / merge / distribute), each wave
-                      touching ≤ 1 violating child per parent (§3's
-                      fixTagged / fixUnderfull chains, batched).
+                      touching ≤ 1 violating child per parent per shard
+                      (§3's fixTagged / fixUnderfull chains, batched).
 
 Lane classes (``RoundPlan``):
 
   * **elim-combine / occ** — point ops (find/insert/delete).  In ``elim``
     mode the whole batch runs one combine; in ``occ`` mode duplicate keys
-    force sub-rounds (duplicate-rank r executes in sub-round r).
+    force sub-rounds (duplicate-rank r executes in sub-round r; a shard
+    whose own rank budget is exhausted is masked out of the tail).
   * **range** — OP_RANGE lanes ``[lo, lo+span)`` (key = lo, val = span),
-    served by the scan phase via ``kernels/range_scan``.  Mixed batches need
-    no host-side splitting: one ``apply_round`` call executes every lane and
-    returns per-lane results in one ``RoundOutput`` (scan rows aligned to
-    the batch; non-range rows scan the empty interval).
+    served by the scan phase.  Cross-shard lanes split into per-shard
+    sub-lanes and stitch back in key order; mixed batches need no host-side
+    splitting — one ``apply_round`` call executes every lane and returns
+    per-lane results in one ``RoundOutput``.
+
+Holder protocol (duck-typed; ``ABTree`` and ``ABForest`` both provide it):
+
+  ``stacked``               get/set property: the (S, …) stacked TreeState
+  ``cfg`` / ``mode``        TreeConfig, "elim" | "occ"
+  ``n_shards``              S (1 for ABTree)
+  ``narrow`` / ``narrow_scan``  int32 device-path gates (see ABTree)
+  ``_splits`` / ``_bounds`` key-partition routing (empty / [-inf, +inf)
+                            for the single tree)
+  ``_wave_w``               structural-wave pad width
+  ``_scan_frontier``        leaf-frontier pad width (doubles on overflow)
+  ``_ensure_capacity(n)``   pool growth
+  ``scan_hook`` / ``subround_hook``  optimistic-reader & durability hooks
+  ``_rounds`` / ``_scans`` / ``_scan_retries``  host-side counters
+  ``_scan_active``          in-flight-scan counter (defers shard splits)
+  ``_maybe_split_shards()`` shard-overflow policy (no-op on ABTree)
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +89,6 @@ from repro.core.abtree import (
     KEY_DTYPE,
     NOTFOUND,
     OP_DELETE,
-    OP_INSERT,
     OP_NOP,
     OP_RANGE,
     RoundOutput,
@@ -160,7 +189,8 @@ def build_plan(ops, keys, vals=None, *, scan_cap: int = 128) -> RoundPlan:
 
 
 # ----------------------------------------------------------------------------
-# jitted phase kernels (device work; host code below only sequences them)
+# jitted per-shard phase kernels (device work; host code below only
+# sequences their vmapped forms)
 # ----------------------------------------------------------------------------
 
 
@@ -286,17 +316,94 @@ def _phase_shrink(state: TreeState, cfg: TreeConfig):
     return shrink_root(state, cfg)
 
 
-def _pad_ids(ids: np.ndarray, w: int) -> Tuple[jax.Array, jax.Array]:
-    out = np.zeros((w,), np.int32)
-    act = np.zeros((w,), bool)
-    out[: ids.size] = ids
-    act[: ids.size] = True
-    return jnp.asarray(out), jnp.asarray(act)
+# ----------------------------------------------------------------------------
+# vmapped phase kernels: one program, all shards (leading axis 0 everywhere).
+# These are the ONLY call sites of the per-shard kernels above — the S = 1
+# tree pays one trivially-mapped axis, the forest gets SPMD for free.
+# ----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6, 7))
+def _v_scan(
+    state, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int,
+    narrow: bool, narrow_descent: bool = False,
+):
+    f = lambda st, l, h: _phase_scan(
+        st, cfg, l, h, frontier_cap, cap, narrow, narrow_descent
+    )
+    return jax.vmap(f)(state, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _v_search_combine(state, batch, cfg: TreeConfig, narrow: bool = False):
+    return jax.vmap(lambda st, b: _phase_search_combine(st, b, cfg, narrow))(
+        state, batch
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _v_apply(state, cfg: TreeConfig, ks, arrival, leaf_ids, slot, res):
+    f = lambda st, a, b, c, d, e: _phase_apply(st, cfg, a, b, c, d, e)
+    return jax.vmap(f)(state, ks, arrival, leaf_ids, slot, res)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 6))
+def _v_retry_insert(state, cfg: TreeConfig, ks, vals, arrival, deferred, narrow=False):
+    f = lambda st, a, b, c, d: _phase_retry_insert(st, cfg, a, b, c, d, narrow)
+    return jax.vmap(f)(state, ks, vals, arrival, deferred)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 4))
+def _v_overfull(state, cfg: TreeConfig, ks, deferred, narrow=False):
+    return jax.vmap(lambda st, k, d: _phase_overfull_leaves(st, cfg, k, d, narrow))(
+        state, ks, deferred
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _v_split(state, cfg: TreeConfig, w: int, node_ids, active):
+    return jax.vmap(lambda st, n, a: _phase_split(st, cfg, w, n, a))(
+        state, node_ids, active
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _v_underfull(state, cfg: TreeConfig, w: int, node_ids, active):
+    return jax.vmap(lambda st, n, a: _phase_underfull(st, cfg, w, n, a))(
+        state, node_ids, active
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _v_shrink(state, cfg: TreeConfig):
+    return jax.vmap(lambda st: _phase_shrink(st, cfg))(state)
+
+
+# ----------------------------------------------------------------------------
+# host helpers
+# ----------------------------------------------------------------------------
+
+
+def _pow2(n: int) -> int:
+    """Shared pad width: power of two ≥ n, floor 8 (bounds jit recompiles)."""
+    return max(8, 1 << (int(n) - 1).bit_length())
+
+
+def _pack_slots(shard: np.ndarray, n_shards: int):
+    """Vectorized per-shard slot assignment for lane packing: returns
+    ``(shard_sorted, slot_sorted, order)`` where ``order`` stably sorts
+    lanes by shard (preserving arrival order within each shard) and
+    ``slot_sorted[j]`` is lane ``order[j]``'s slot in its shard's row."""
+    order = np.argsort(shard, kind="stable")
+    shard_sorted = shard[order]
+    starts = np.searchsorted(shard_sorted, np.arange(n_shards))
+    slot_sorted = np.arange(shard_sorted.size) - starts[shard_sorted]
+    return shard_sorted, slot_sorted, order
 
 
 def _independent_by_parent_np(parent_row: np.ndarray, ids: np.ndarray) -> np.ndarray:
     """Host-side: keep one node per parent (lowest id first).  ``parent_row``
-    is one tree's parent array — the forest passes one shard's row."""
+    is one shard's parent array."""
     keep, seen = [], set()
     for nid in ids.tolist():
         p = int(parent_row[nid])
@@ -306,16 +413,9 @@ def _independent_by_parent_np(parent_row: np.ndarray, ids: np.ndarray) -> np.nda
     return np.asarray(keep, np.int32)
 
 
-def _independent_by_parent(state: TreeState, ids_np: np.ndarray) -> np.ndarray:
-    if ids_np.size == 0:
-        return ids_np
-    return _independent_by_parent_np(np.asarray(state.parent), ids_np)
-
-
 def _duplicate_ranks(ops_np: np.ndarray, keys_np: np.ndarray) -> np.ndarray:
     """Per-lane duplicate rank of each key (OP_NOP lanes rank 0): rank r
-    executes in OCC sub-round r.  Shared by the tree's OCC round and the
-    forest's per-shard rank computation."""
+    executes in OCC sub-round r."""
     rank = np.zeros(ops_np.shape[0], np.int32)
     seen: dict = {}
     for i in range(ops_np.shape[0]):
@@ -335,9 +435,9 @@ def _duplicate_ranks(ops_np: np.ndarray, keys_np: np.ndarray) -> np.ndarray:
 def gather_until_frontier_fits(holder, gather):
     """Run ``gather(frontier_cap) → (out, touched, overflow)``, doubling
     ``holder._scan_frontier`` until no query overflows its leaf frontier
-    (powers of two keep the jit recompiles bounded).  Shared by the tree's
-    and the forest's scan phases — the growth state lives on the holder, so
-    later rounds start at the steady-state width.  Returns (out, touched)."""
+    (powers of two keep the jit recompiles bounded).  The growth state lives
+    on the holder, so later rounds start at the steady-state width.
+    Returns (out, touched)."""
     guard = 0
     while True:
         out, touched, overflow = gather(holder._scan_frontier)
@@ -348,41 +448,209 @@ def gather_until_frontier_fits(holder, gather):
         holder._scan_frontier *= 2
 
 
-def run_scan_phase(
-    tree, lo: jax.Array, hi: jax.Array, cap: int, *, n_scan_ops: int,
-    max_retries: int = 8,
-) -> ScanOutput:
-    """Gather each query's matches from a state snapshot, then validate the
-    touched-node versions against the live state (retrying on conflict —
-    ``ScanConflictError`` after ``max_retries``).  Within a round the engine
-    runs this before any write, so validation only fails when another actor
-    (``tree.scan_hook``, modeling other engine replicas) mutates the tree
-    between gather and validation."""
-    for attempt in range(max_retries):
-        snap = tree.state
-        out, touched = gather_until_frontier_fits(
-            tree,
-            lambda fc: _phase_scan(
-                snap, tree.cfg, lo, hi, fc, cap,
-                getattr(tree, "narrow_scan", False),
-                getattr(tree, "narrow", False),
-            ),
-        )
-        if tree.scan_hook is not None:
-            tree.scan_hook()
-        ids = np.unique(np.asarray(touched))
-        if np.array_equal(np.asarray(snap.ver)[ids], np.asarray(tree.state.ver)[ids]):
-            st = tree.state.stats
-            tree.state = tree.state._replace(
-                stats=st._replace(
-                    scans=st.scans + jnp.int64(n_scan_ops),
-                    scan_retries=st.scan_retries + jnp.int64(attempt),
-                )
-            )
-            return out
-    raise ScanConflictError(
-        f"scan phase: version validation failed {max_retries} times"
+def scan_lanes(holder, lo_np, hi_np, cap, *, n_scan_ops, max_retries: int = 8):
+    """Split lanes ``[lo_i, hi_i)`` at shard boundaries, run one vmapped
+    scan phase across all shards, stitch sub-lane rows back per lane in key
+    order (shards are key-ordered, rows within a shard ascending, so
+    concatenation is globally sorted).  With S = 1 every lane is its own
+    single sub-lane.  Returns numpy ``(keys (B,cap), vals, count,
+    truncated)``."""
+    n_shards = holder.n_shards
+    bsz = int(lo_np.size)
+    out_k = np.full((bsz, cap), int(EMPTY), np.int64)
+    out_v = np.zeros((bsz, cap), np.int64)
+    out_c = np.zeros((bsz,), np.int32)
+    out_t = np.zeros((bsz,), bool)
+    sub_lo: List[List[int]] = [[] for _ in range(n_shards)]
+    sub_hi: List[List[int]] = [[] for _ in range(n_shards)]
+    lane_subs: List[List[Tuple[int, int]]] = [[] for _ in range(bsz)]
+    for i in range(bsz):
+        lo, hi = int(lo_np[i]), int(hi_np[i])
+        if hi <= lo:
+            continue
+        s0 = int(np.searchsorted(holder._splits, lo, side="right"))
+        s1 = int(np.searchsorted(holder._splits, hi - 1, side="right"))
+        for s in range(s0, s1 + 1):
+            slo = max(lo, holder._bounds[s])
+            shi = min(hi, holder._bounds[s + 1])
+            if shi <= slo:
+                continue
+            lane_subs[i].append((s, len(sub_lo[s])))
+            sub_lo[s].append(slo)
+            sub_hi[s].append(shi)
+    n_per = np.array([len(x) for x in sub_lo], np.int64)
+    holder._scans += int(n_scan_ops)
+    if int(n_per.sum()) == 0:
+        return out_k, out_v, out_c, out_t
+    # Shards linked by a cross-shard lane form one validation component:
+    # all of a lane's sub-lanes must be accepted against ONE snapshot
+    # (else the stitched row could mix states that never coexisted).
+    comp = np.arange(n_shards)
+
+    def _find(x):
+        while comp[x] != x:
+            comp[x] = comp[comp[x]]
+            x = comp[x]
+        return x
+
+    for subs in lane_subs:
+        for s, _ in subs[1:]:
+            comp[_find(subs[0][0])] = _find(s)
+    groups = np.array([_find(s) for s in range(n_shards)])
+    w = _pow2(int(n_per.max()))
+    lo_sw = np.full((n_shards, w), int(EMPTY), np.int64)
+    hi_sw = np.full((n_shards, w), int(EMPTY), np.int64)
+    for s in range(n_shards):
+        lo_sw[s, : n_per[s]] = sub_lo[s]
+        hi_sw[s, : n_per[s]] = sub_hi[s]
+    g_k, g_v, g_c, g_t = run_scan_phase(
+        holder,
+        jnp.asarray(lo_sw, KEY_DTYPE),
+        jnp.asarray(hi_sw, KEY_DTYPE),
+        cap,
+        n_per,
+        max_retries,
+        groups,
     )
+    for i in range(bsz):
+        if not lane_subs[i]:
+            continue
+        parts_k, parts_v, truncated = [], [], False
+        for s, j in lane_subs[i]:  # shards ascending ⇒ keys ascending
+            c = int(g_c[s, j])
+            truncated = truncated or bool(g_t[s, j])
+            parts_k.append(g_k[s, j, :c])
+            parts_v.append(g_v[s, j, :c])
+        cat_k = np.concatenate(parts_k)
+        cat_v = np.concatenate(parts_v)
+        n = min(cat_k.size, cap)
+        out_k[i, :n] = cat_k[:n]
+        out_v[i, :n] = cat_v[:n]
+        out_c[i] = n
+        out_t[i] = truncated or cat_k.size > cap
+    return out_k, out_v, out_c, out_t
+
+
+def run_scan_phase(
+    holder, lo_sw, hi_sw, cap, n_per_shard, max_retries: int = 8, groups=None
+):
+    """One vmapped gather over all shards + per-*component* version
+    validation: shards linked by a cross-shard lane (``groups``) accept
+    or retry TOGETHER, so every lane's stitched row comes from one
+    snapshot (the single-tree linearization guarantee); independent
+    shards validate independently, which is the conflict-window shrink
+    sharding buys.  An accepted component's rows are frozen (its scans
+    linearized at that validation point); only failed components' lanes
+    retry — ``scan_retries`` accrues the retried lane count.  Raises
+    ``ScanConflictError`` after ``max_retries``; ``holder.scan_hook``
+    (modeling update rounds from other engine replicas) is called between
+    each gather and its validation."""
+    n_s, w = int(lo_sw.shape[0]), int(lo_sw.shape[1])
+    if groups is None:
+        groups = np.arange(n_s)
+    buf_k = np.full((n_s, w, cap), int(EMPTY), np.int64)
+    buf_v = np.zeros((n_s, w, cap), np.int64)
+    buf_c = np.zeros((n_s, w), np.int32)
+    buf_t = np.zeros((n_s, w), bool)
+    n_per_shard = np.asarray(n_per_shard)
+    pending = n_per_shard > 0  # lane-less shards are trivially done
+    retried = 0
+    # a scan_hook writer may push a shard past max_keys_per_shard: the
+    # split (which restacks to S+1 shards) must not fire under this
+    # loop's (S, w) lane routing — defer it to the next update round.
+    holder._scan_active += 1
+    try:
+        for _attempt in range(max_retries):
+            snap = holder.stacked
+            out, touched = gather_until_frontier_fits(
+                holder,
+                lambda fc: _v_scan(
+                    snap, holder.cfg, lo_sw, hi_sw, fc, cap,
+                    holder.narrow_scan, holder.narrow,
+                ),
+            )
+            if holder.scan_hook is not None:
+                holder.scan_hook()
+            snap_ver = np.asarray(snap.ver)
+            live_ver = np.asarray(holder.stacked.ver)
+            touched_np = np.asarray(touched)
+            shard_ok = np.zeros(n_s, bool)
+            for s in np.nonzero(pending)[0]:
+                ids = np.unique(touched_np[s])
+                shard_ok[s] = np.array_equal(snap_ver[s][ids], live_ver[s][ids])
+            accept = np.zeros(n_s, bool)
+            for g in np.unique(groups[pending]):
+                members = pending & (groups == g)
+                if shard_ok[members].all():
+                    accept |= members
+                else:  # whole component re-gathers next attempt
+                    retried += int(n_per_shard[members].sum())
+            if accept.any():
+                k_np = np.asarray(out.keys)
+                v_np = np.asarray(out.vals)
+                c_np = np.asarray(out.count)
+                t_np = np.asarray(out.truncated)
+                for s in np.nonzero(accept)[0]:
+                    buf_k[s] = k_np[s]
+                    buf_v[s] = v_np[s]
+                    buf_c[s] = c_np[s]
+                    buf_t[s] = t_np[s]
+                pending &= ~accept
+            if not pending.any():
+                holder._scan_retries += retried
+                return buf_k, buf_v, buf_c, buf_t
+        raise ScanConflictError(
+            f"scan phase: version validation failed {max_retries} "
+            f"times on shards {np.nonzero(pending)[0].tolist()}"
+        )
+    finally:
+        holder._scan_active -= 1
+
+
+def execute_scan(holder, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
+    """One batched scan round: per query the ≤ ``cap`` smallest keys in
+    ``[lo_i, hi_i)``, ascending, stitched across shards in key order.  The
+    shared body behind ``ABTree.scan_round`` and ``ABForest.scan_round``."""
+    lo = np.atleast_1d(np.asarray(lo, np.int64))
+    hi = np.atleast_1d(np.asarray(hi, np.int64))
+    assert lo.shape == hi.shape and lo.ndim == 1
+    k_, v_, c_, t_ = scan_lanes(
+        holder, lo, hi, cap, n_scan_ops=int(lo.size), max_retries=max_retries
+    )
+    return ScanOutput(
+        keys=jnp.asarray(k_),
+        vals=jnp.asarray(v_),
+        count=jnp.asarray(c_),
+        truncated=jnp.asarray(t_),
+    )
+
+
+def execute_scan_stream(holder, lo, hi, cap: int):
+    """Validate eagerly (a generator body would not run until first
+    ``next``), then stream ``[lo, hi)`` as cursor-chained pages."""
+    if cap <= 0:
+        raise ValueError(f"scan_stream: cap must be positive, got {cap}")
+    return scan_stream_pages(holder, int(lo), int(hi), cap)
+
+
+def scan_stream_pages(holder, cur: int, hi: int, cap: int):
+    """Stream all (key, value) pairs in ``[cur, hi)`` ascending by chaining
+    per-shard cursors: each page queries only the shard holding the cursor,
+    so arbitrarily long cross-shard scans stay bounded at ``cap`` entries
+    (and one shard's gather) per round."""
+    while cur < hi:
+        s = int(np.searchsorted(holder._splits, cur, side="right"))
+        s_hi = min(hi, holder._bounds[s + 1])
+        out = holder.scan_round([cur], [s_hi], cap=cap)
+        n = int(np.asarray(out.count)[0])
+        ks = np.asarray(out.keys)[0, :n]
+        vs = np.asarray(out.vals)[0, :n]
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            yield int(k), int(v)
+        if bool(np.asarray(out.truncated)[0]):
+            cur = int(ks[-1]) + 1
+        else:
+            cur = s_hi  # shard exhausted: jump to the next shard's range
 
 
 # ----------------------------------------------------------------------------
@@ -390,145 +658,199 @@ def run_scan_phase(
 # ----------------------------------------------------------------------------
 
 
-def run_point_phases(tree, ops, keys, vals) -> Tuple[jax.Array, jax.Array]:
-    """Execute the point-op pipeline in the tree's mode.  ``ops`` must be
-    free of OP_RANGE (the plan builder masks range lanes to OP_NOP)."""
-    if tree.mode == "elim":
-        return _elim_point_round(tree, ops, keys, vals)
-    return _occ_point_round(tree, ops, keys, vals)
+def run_point_phases(holder, ops_sw, keys_sw, vals_sw):
+    """Execute the point-op pipeline in the holder's mode on one packed
+    ``(S, W)`` lane block.  ``ops_sw`` must be free of OP_RANGE (the plan
+    builder masks range lanes to OP_NOP)."""
+    if holder.mode == "elim":
+        return _combine_apply(holder, ops_sw, keys_sw, vals_sw)
+    return _occ_round(holder, ops_sw, keys_sw, vals_sw)
 
 
-def _elim_point_round(tree, ops, keys, vals):
-    """Elim-ABtree: the whole batch runs one combine; ≤ 1 net write per key."""
-    tree.state, pack = _phase_search_combine(
-        tree.state, (ops, keys, vals), tree.cfg, getattr(tree, "narrow", False)
+def _combine_apply(holder, ops_sw, keys_sw, vals_sw):
+    """Elim-ABtree: every shard's batch runs one combine; ≤ 1 net write per
+    key per shard."""
+    holder.stacked, pack = _v_search_combine(
+        holder.stacked, (ops_sw, keys_sw, vals_sw), holder.cfg, holder.narrow
     )
     ks, arrival, leaf_ids, slot, res, results, found = pack
-    tree.state, deferred = _phase_apply(
-        tree.state, tree.cfg, ks, arrival, leaf_ids, slot, res
+    holder.stacked, deferred = _v_apply(
+        holder.stacked, holder.cfg, ks, arrival, leaf_ids, slot, res
     )
-    _drain_deferred(tree, ks, res.final_val, arrival, deferred)
-    _fix_underfull_all(tree)
+    _drain_deferred(holder, ks, res.final_val, arrival, deferred)
+    _fix_underfull_all(holder)
     return results, found
 
 
-def _occ_point_round(tree, ops, keys, vals):
-    """OCC baseline: duplicate-rank sub-rounds, each fully physical."""
-    bsz = int(ops.shape[0])
-    rank = _duplicate_ranks(np.asarray(ops), np.asarray(keys))
-    n_sub = int(rank.max()) + 1 if bsz else 1
-    results = jnp.full((bsz,), NOTFOUND, VAL_DTYPE)
-    found = jnp.zeros((bsz,), bool)
+def _occ_round(holder, ops_sw, keys_sw, vals_sw):
+    """OCC baseline: per-shard duplicate-rank sub-rounds, executed as
+    max-over-shards vmapped sub-rounds.  A shard whose own duplicate
+    rank is exhausted runs all-NOP lanes in the tail sub-rounds — those
+    are *not* sub-rounds it executes: its lanes are masked out, its
+    ``subrounds`` counter stays put, and its durable/validation cost is
+    zero (the vmap itself still spans all shards, as any SPMD program
+    must).  ``holder.subround_hook`` fires after every executed sub-round
+    — the durable layer's per-update flush+fence discipline."""
+    on = np.asarray(ops_sw)
+    kn = np.asarray(keys_sw)
+    n_s, w = on.shape
+    rank = np.stack([_duplicate_ranks(on[s], kn[s]) for s in range(n_s)])
+    # per-shard sub-round budget: rank r of a real op executes in
+    # sub-round r, so shard s is live only while r ≤ max(rank[s]).
+    live = on != OP_NOP  # (S, w)
+    shard_max = np.where(
+        live.any(axis=1), np.where(live, rank, 0).max(axis=1), -1
+    )
+    n_sub = int(rank.max()) + 1
+    results = jnp.full((n_s, w), NOTFOUND, VAL_DTYPE)
+    found = jnp.zeros((n_s, w), bool)
+    rank_j = jnp.asarray(rank)
     for r in range(n_sub):
-        m = jnp.asarray(rank == r) & (ops != OP_NOP)
-        sub_ops = jnp.where(m, ops, OP_NOP)
-        tree.state, pack = _phase_search_combine(
-            tree.state, (sub_ops, keys, vals), tree.cfg,
-            getattr(tree, "narrow", False),
-        )
-        ks, arrival, leaf_ids, slot, res, sub_results, sub_found = pack
-        tree.state, deferred = _phase_apply(
-            tree.state, tree.cfg, ks, arrival, leaf_ids, slot, res
-        )
-        _drain_deferred(tree, ks, res.final_val, arrival, deferred)
-        _fix_underfull_all(tree)
-        results = jnp.where(m, sub_results, results)
+        active = shard_max >= r  # (S,) host bools: shard executes r
+        m = (rank_j == r) & (ops_sw != OP_NOP)
+        sub_ops = jnp.where(m, ops_sw, OP_NOP).astype(jnp.int32)
+        sub_res, sub_found = _combine_apply(holder, sub_ops, keys_sw, vals_sw)
+        results = jnp.where(m, sub_res, results)
         found = jnp.where(m, sub_found, found)
-        st = tree.state.stats
-        tree.state = tree.state._replace(
-            stats=st._replace(subrounds=st.subrounds + 1)
+        st = holder.stacked
+        holder.stacked = st._replace(
+            stats=st.stats._replace(
+                subrounds=st.stats.subrounds + jnp.asarray(active, jnp.int64)
+            )
         )
-        if tree.subround_hook is not None:
-            tree.subround_hook()
+        if holder.subround_hook is not None:
+            holder.subround_hook()
     return results, found
 
 
-def _drain_deferred(tree, ks, final_vals, arrival, deferred):
+def _drain_deferred(holder, ks, final_vals, arrival, deferred):
     """Retry phase: split overflowing leaves and re-apply deferred inserts
-    until none remain."""
+    until none remain (all shards per wave)."""
     guard = 0
-    narrow = getattr(tree, "narrow", False)
     while bool(jnp.any(deferred)):
         guard += 1
-        assert guard < 512 * tree.cfg.max_height, "split loop diverged"
-        uniq = _phase_overfull_leaves(tree.state, tree.cfg, ks, deferred, narrow)
-        ids_np = np.asarray(uniq)
-        ids_np = ids_np[ids_np != INT_MAX].astype(np.int32)
-        if ids_np.size:
-            _split_cascade(tree, ids_np)
-        tree.state, deferred = _phase_retry_insert(
-            tree.state, tree.cfg, ks, final_vals, arrival, deferred, narrow
+        assert guard < 512 * holder.cfg.max_height, "split loop diverged"
+        uniq = np.asarray(
+            _v_overfull(holder.stacked, holder.cfg, ks, deferred, holder.narrow)
+        )
+        per_shard = [row[row != INT_MAX].astype(np.int32) for row in uniq]
+        if any(r.size for r in per_shard):
+            _split_cascade(holder, per_shard)
+        holder.stacked, deferred = _v_retry_insert(
+            holder.stacked, holder.cfg, ks, final_vals, arrival, deferred,
+            holder.narrow,
         )
 
 
-def _split_cascade(tree, ids_np: np.ndarray):
-    """Split the given full nodes.  A node whose parent is itself full is
-    postponed until the parent has split (pre-splitting ancestors) —
-    keeps every wave's parent-insert within capacity."""
-    work = {int(i) for i in ids_np}
+def _split_cascade(holder, ids_per_shard: List[np.ndarray]):
+    """Split the given full nodes, all shards per wave.  A node whose parent
+    is itself full is postponed until the parent has split (pre-splitting
+    ancestors) — keeps every wave's parent-insert within capacity; ≤ 1
+    active node per parent per wave."""
+    n_s = holder.n_shards
+    work = [set(int(i) for i in ids) for ids in ids_per_shard]
     guard = 0
-    while work:
+    while any(work):
         guard += 1
-        assert guard < 512 * tree.cfg.max_height, "split cascade diverged"
-        size = np.asarray(tree.state.size)
-        parent = np.asarray(tree.state.parent)
-        alloc = np.asarray(tree.state.alloc)
-        # prune: stale entries that are no longer full / no longer allocated
-        work = {n for n in work if alloc[n] and size[n] >= tree.cfg.b}
-        if not work:
-            break
-        ready, blocked_parents = [], []
-        for n in sorted(work):
-            p = int(parent[n])
-            if p >= 0 and size[p] >= tree.cfg.b:
-                blocked_parents.append(p)
-            else:
-                ready.append(n)
-        if not ready:
-            # all blocked: split the blocking parents first
-            work |= set(blocked_parents)
-            size = None
+        assert guard < 512 * holder.cfg.max_height * n_s, "split cascade diverged"
+        st = holder.stacked
+        size = np.asarray(st.size)
+        parent = np.asarray(st.parent)
+        alloc = np.asarray(st.alloc)
+        ready_rows: List[np.ndarray] = []
+        blocked_rows: List[List[int]] = []
+        for s in range(n_s):
+            # prune: stale entries no longer full / no longer allocated
+            ws = {n for n in work[s] if alloc[s, n] and size[s, n] >= holder.cfg.b}
+            work[s] = ws
+            ready, blocked = [], []
+            for n in sorted(ws):
+                p = int(parent[s, n])
+                if p >= 0 and size[s, p] >= holder.cfg.b:
+                    blocked.append(p)
+                else:
+                    ready.append(n)
+            if not ready:
+                # all blocked: queue the blocking parents for splitting
+                work[s] |= set(blocked)
+                ready_rows.append(np.zeros((0,), np.int32))
+                blocked_rows.append([])
+                continue
+            rd = _independent_by_parent_np(
+                parent[s], np.asarray(ready, np.int32)
+            )[: holder._wave_w]  # fixed wave width (no recompiles)
+            ready_rows.append(rd)
+            blocked_rows.append(blocked)
+        if not any(r.size for r in ready_rows):
             continue
-        ready_np = _independent_by_parent(tree.state, np.asarray(ready, np.int32))
-        ready_np = ready_np[: tree._wave_w]  # fixed wave width (no recompiles)
-        tree._ensure_capacity(2 * int(ready_np.size))
-        node_ids, active = _pad_ids(ready_np, tree._wave_w)
-        tree.state = _phase_split(tree.state, tree.cfg, tree._wave_w, node_ids, active)
-        for n in ready_np.tolist():
-            work.discard(int(n))
-        work |= set(blocked_parents)
+        holder._ensure_capacity(2 * max(int(r.size) for r in ready_rows))
+        node_ids = np.zeros((n_s, holder._wave_w), np.int32)
+        active = np.zeros((n_s, holder._wave_w), bool)
+        for s, rd in enumerate(ready_rows):
+            node_ids[s, : rd.size] = rd
+            active[s, : rd.size] = True
+        holder.stacked = _v_split(
+            holder.stacked, holder.cfg, holder._wave_w,
+            jnp.asarray(node_ids), jnp.asarray(active),
+        )
+        for s, rd in enumerate(ready_rows):
+            for n in rd.tolist():
+                work[s].discard(int(n))
+            work[s] |= set(blocked_rows[s])
 
 
-def _fix_underfull_all(tree):
-    """Rebalance phase: merge/distribute every underfull non-root node,
-    bottom-up waves."""
+def _fix_underfull_all(holder):
+    """Rebalance phase: merge/distribute every shard's underfull non-root
+    nodes, bottom-up vmapped waves; root shrink once a shard has no
+    actionable wave."""
+    n_s = holder.n_shards
     guard = 0
     while True:
         guard += 1
-        assert guard < 512 * tree.cfg.max_height, "underfull loop diverged"
-        s = tree.state
-        alloc = np.asarray(s.alloc)
-        size = np.asarray(s.size)
-        parent = np.asarray(s.parent)
-        level = np.asarray(s.level)
-        root = int(s.root)
-        under = alloc & (size < tree.cfg.a) & (parent >= 0)
-        under[root] = False
-        ids = np.nonzero(under)[0].astype(np.int32)
-        actionable = ids[size[parent[ids]] >= 2] if ids.size else ids
-        if actionable.size:
-            lv = level[actionable].min()
-            sel = actionable[level[actionable] == lv]
-            sel = _independent_by_parent(tree.state, sel)
-            sel = sel[: tree._wave_w]  # fixed wave width (no recompiles)
-            node_ids, active = _pad_ids(sel, tree._wave_w)
-            tree.state = _phase_underfull(
-                tree.state, tree.cfg, tree._wave_w, node_ids, active
+        assert guard < 512 * holder.cfg.max_height * n_s, (
+            "underfull loop diverged"
+        )
+        st = holder.stacked
+        alloc = np.asarray(st.alloc)
+        size = np.asarray(st.size)
+        parent = np.asarray(st.parent)
+        level = np.asarray(st.level)
+        is_leaf = np.asarray(st.is_leaf)
+        root = np.asarray(st.root)
+        sel_rows: List[np.ndarray] = []
+        any_wave = False
+        want_shrink = False
+        for s in range(n_s):
+            r = int(root[s])
+            under = alloc[s] & (size[s] < holder.cfg.a) & (parent[s] >= 0)
+            under[r] = False
+            ids = np.nonzero(under)[0].astype(np.int32)
+            actionable = ids[size[s][parent[s][ids]] >= 2] if ids.size else ids
+            if actionable.size:
+                lv = level[s][actionable].min()
+                sel = actionable[level[s][actionable] == lv]
+                sel = _independent_by_parent_np(parent[s], sel)[: holder._wave_w]
+                sel_rows.append(sel)
+                any_wave = True
+            else:
+                sel_rows.append(np.zeros((0,), np.int32))
+                if (not is_leaf[s, r]) and int(size[s, r]) == 1:
+                    want_shrink = True
+        if any_wave:
+            node_ids = np.zeros((n_s, holder._wave_w), np.int32)
+            active = np.zeros((n_s, holder._wave_w), bool)
+            for s, sel in enumerate(sel_rows):
+                node_ids[s, : sel.size] = sel
+                active[s, : sel.size] = True
+            holder.stacked = _v_underfull(
+                holder.stacked, holder.cfg, holder._wave_w,
+                jnp.asarray(node_ids), jnp.asarray(active),
             )
             continue
-        # nothing actionable: shrink a single-child root chain, else done.
-        if (not bool(np.asarray(s.is_leaf)[root])) and int(size[root]) == 1:
-            tree.state = _phase_shrink(tree.state, tree.cfg)
+        if want_shrink:
+            # per-shard `can` guard inside shrink_root makes the vmapped
+            # call exact: only single-child internal roots collapse.
+            holder.stacked = _v_shrink(holder.stacked, holder.cfg)
             continue
         break
 
@@ -538,55 +860,135 @@ def _fix_underfull_all(tree):
 # ----------------------------------------------------------------------------
 
 
-def execute_plan(tree, plan: RoundPlan) -> RoundOutput:
-    """Run one round through the phase pipeline.
+def execute_plan(holder, plan: RoundPlan) -> RoundOutput:
+    """Run one round through the phase pipeline: the router partitions
+    lanes by key range (a no-op at S = 1), all shards execute as one
+    vmapped round, and per-lane results come back batch-aligned.
 
     Phase order fixes the linearization: range lanes gather from the
-    pre-round state (scan phase first), point lanes then apply in arrival
-    order per key.  Returns per-lane results in one ``RoundOutput``:
-    point lanes get the §3 dictionary return values; range lanes get their
-    match count in ``results`` (``found`` ⇔ non-empty) and their rows in
+    pre-round state (scan phase first; cross-shard lanes split into
+    per-shard sub-lanes and stitch back in key order), point lanes then
+    apply in arrival order per key (stable packing preserves arrival order
+    within a shard, and all ops on one key land in one shard).  Returns
+    per-lane results in one ``RoundOutput``: point lanes get the §3
+    dictionary return values; range lanes get their match count in
+    ``results`` (``found`` ⇔ non-empty) and their rows in
     ``RoundOutput.scan`` (batch-aligned; non-range rows are empty)."""
     bsz = int(plan.ops.shape[0])
-    scan_out: Optional[ScanOutput] = None
-    if plan.has_range:
-        scan_out = run_scan_phase(
-            tree, plan.lo, plan.hi, plan.scan_cap, n_scan_ops=plan.n_range
+    n_shards = holder.n_shards
+    if bsz == 0:
+        holder._rounds += 1
+        return RoundOutput(
+            results=jnp.full((0,), NOTFOUND, VAL_DTYPE),
+            found=jnp.zeros((0,), bool),
+            scan=None,
         )
+    ops_np = np.asarray(plan.ops)
+    keys_np = np.asarray(plan.keys)
+    vals_np = np.asarray(plan.vals)
+    is_point_j, is_range_j = elim.lane_masks(plan.ops)
+    is_point = np.asarray(is_point_j)
+    is_range = np.asarray(is_range_j)
+
+    results = np.full((bsz,), int(NOTFOUND), np.int64)
+    found = np.zeros((bsz,), bool)
+
+    # --- scan phase first: range lanes linearize before the round's writes.
+    scan_out = None
+    if plan.has_range:
+        rl = np.nonzero(is_range)[0]
+        lo_np = np.asarray(plan.lo)[rl]
+        hi_np = np.asarray(plan.hi)[rl]
+        k_, v_, c_, t_ = scan_lanes(
+            holder, lo_np, hi_np, plan.scan_cap, n_scan_ops=plan.n_range
+        )
+        keys_full = np.full((bsz, plan.scan_cap), int(EMPTY), np.int64)
+        vals_full = np.zeros((bsz, plan.scan_cap), np.int64)
+        count_full = np.zeros((bsz,), np.int32)
+        trunc_full = np.zeros((bsz,), bool)
+        keys_full[rl] = k_
+        vals_full[rl] = v_
+        count_full[rl] = c_
+        trunc_full[rl] = t_
+        scan_out = ScanOutput(
+            keys=jnp.asarray(keys_full),
+            vals=jnp.asarray(vals_full),
+            count=jnp.asarray(count_full),
+            truncated=jnp.asarray(trunc_full),
+        )
+        results[rl] = c_.astype(np.int64)
+        found[rl] = c_ > 0
+
+    # --- point lanes: pack per shard (stable ⇒ arrival order kept).
     if plan.has_point:
-        tree._ensure_capacity(bsz)
-        results, found = run_point_phases(tree, plan.point_ops, plan.keys, plan.vals)
-    else:
-        results = jnp.full((bsz,), NOTFOUND, VAL_DTYPE)
-        found = jnp.zeros((bsz,), bool)
-    if scan_out is not None:
-        results = jnp.where(plan.is_range, scan_out.count.astype(VAL_DTYPE), results)
-        found = jnp.where(plan.is_range, scan_out.count > 0, found)
-    st = tree.state.stats
-    tree.state = tree.state._replace(stats=st._replace(rounds=st.rounds + 1))
-    return RoundOutput(results=results, found=found, scan=scan_out)
+        pl = np.nonzero(is_point)[0]
+        shard = np.searchsorted(holder._splits, keys_np[pl], side="right")
+        w = _pow2(int(np.bincount(shard, minlength=n_shards).max()))
+        ops_sw = np.full((n_shards, w), OP_NOP, np.int32)
+        keys_sw = np.zeros((n_shards, w), np.int64)
+        vals_sw = np.zeros((n_shards, w), np.int64)
+        shard_sorted, slot_sorted, order = _pack_slots(shard, n_shards)
+        ops_sw[shard_sorted, slot_sorted] = ops_np[pl][order]
+        keys_sw[shard_sorted, slot_sorted] = keys_np[pl][order]
+        vals_sw[shard_sorted, slot_sorted] = vals_np[pl][order]
+        slot = np.empty(pl.size, np.int64)
+        slot[order] = slot_sorted
+        holder._ensure_capacity(w)
+        res_sw, fnd_sw = run_point_phases(
+            holder,
+            jnp.asarray(ops_sw),
+            jnp.asarray(keys_sw, KEY_DTYPE),
+            jnp.asarray(vals_sw, VAL_DTYPE),
+        )
+        results[pl] = np.asarray(res_sw)[shard, slot]
+        found[pl] = np.asarray(fnd_sw)[shard, slot]
 
-
-def execute_scan_delete(tree, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
-    """One fused scan+delete round: gather every key in ``[lo_i, hi_i)``
-    (≤ ``cap`` smallest per query) and delete the gathered keys, in ONE
-    round.  Legal because the scan linearizes before the round's writes:
-    the deletes target exactly the snapshot the scan observed.
-
-    Returns the pre-delete ``ScanOutput`` (the evicted keys/values)."""
-    lo = jnp.atleast_1d(jnp.asarray(lo, KEY_DTYPE))
-    hi = jnp.atleast_1d(jnp.asarray(hi, KEY_DTYPE))
-    assert lo.shape == hi.shape and lo.ndim == 1
-    out = run_scan_phase(
-        tree, lo, hi, cap, n_scan_ops=int(lo.shape[0]), max_retries=max_retries
+    holder._rounds += 1
+    out = RoundOutput(
+        results=jnp.asarray(results, VAL_DTYPE),
+        found=jnp.asarray(found),
+        scan=scan_out,
     )
-    flat_keys = out.keys.reshape(-1)
-    valid = flat_keys != EMPTY  # rows are EMPTY-padded beyond count
-    del_ops = jnp.where(valid, OP_DELETE, OP_NOP).astype(jnp.int32)
-    n_del = int(np.asarray(out.count).sum())
-    if n_del:
-        tree._ensure_capacity(n_del)
-        run_point_phases(tree, del_ops, flat_keys, jnp.zeros_like(flat_keys))
-    st = tree.state.stats
-    tree.state = tree.state._replace(stats=st._replace(rounds=st.rounds + 1))
+    holder._maybe_split_shards()
     return out
+
+
+def execute_scan_delete(holder, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOutput:
+    """ONE fused round that gathers every key in ``[lo_i, hi_i)`` (≤ ``cap``
+    smallest per query, stitched across shards) and deletes exactly the
+    *emitted* keys, in ONE round.  Legal because the scan linearizes before
+    the round's writes: the deletes target exactly the snapshot the scan
+    observed.  Keys a truncated page did not emit survive for the caller's
+    next chunk (the one-fused-round-per-chunk sweep contract of
+    ``SessionIndex``).  Returns the pre-delete ``ScanOutput`` (the evicted
+    keys/values)."""
+    lo = np.atleast_1d(np.asarray(lo, np.int64))
+    hi = np.atleast_1d(np.asarray(hi, np.int64))
+    assert lo.shape == hi.shape and lo.ndim == 1
+    k_, v_, c_, t_ = scan_lanes(
+        holder, lo, hi, cap, n_scan_ops=int(lo.size), max_retries=max_retries
+    )
+    del_keys = k_[k_ != int(EMPTY)]
+    if del_keys.size:
+        n_shards = holder.n_shards
+        shard = np.searchsorted(holder._splits, del_keys, side="right")
+        w = _pow2(int(np.bincount(shard, minlength=n_shards).max()))
+        ops_sw = np.full((n_shards, w), OP_NOP, np.int32)
+        keys_sw = np.zeros((n_shards, w), np.int64)
+        shard_sorted, slot_sorted, order = _pack_slots(shard, n_shards)
+        ops_sw[shard_sorted, slot_sorted] = OP_DELETE
+        keys_sw[shard_sorted, slot_sorted] = del_keys[order]
+        holder._ensure_capacity(w)
+        run_point_phases(
+            holder,
+            jnp.asarray(ops_sw),
+            jnp.asarray(keys_sw, KEY_DTYPE),
+            jnp.zeros((n_shards, w), VAL_DTYPE),
+        )
+    holder._rounds += 1
+    return ScanOutput(
+        keys=jnp.asarray(k_),
+        vals=jnp.asarray(v_),
+        count=jnp.asarray(c_),
+        truncated=jnp.asarray(t_),
+    )

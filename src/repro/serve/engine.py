@@ -17,6 +17,7 @@ manager)."""
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -56,6 +57,7 @@ class ServeEngine:
         n_pages: int = 1024,
         index_mode: str = "elim",
         index_shards: int = 1,
+        index_durable_dir: Optional[str] = None,
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -70,13 +72,27 @@ class ServeEngine:
         # alone would route every live id to one shard — max_keys_per_shard
         # makes the forest re-partition the live id range adaptively (live
         # sessions are bounded by the page pool, so n_pages is the scale).
-        self.index = PrefixIndex(mode=index_mode, shards=index_shards)
+        # index_durable_dir journals both indexes as DurableForests (one
+        # journal lane per shard): a restarted engine pointing at the same
+        # directory recovers its prefix cache warm.
+        self.index = PrefixIndex(
+            mode=index_mode,
+            shards=index_shards,
+            durable_dir=(
+                None if index_durable_dir is None
+                else os.path.join(index_durable_dir, "prefix")
+            ),
+        )
         self.sessions = SessionIndex(
             mode=index_mode,
             shards=index_shards,
             key_space=(0, 1 << 31),
             max_keys_per_shard=(
                 None if index_shards == 1 else max(64, n_pages // index_shards)
+            ),
+            durable_dir=(
+                None if index_durable_dir is None
+                else os.path.join(index_durable_dir, "sessions")
             ),
         )
         self._evict_floor = 0  # session ids below this are already swept

@@ -17,11 +17,13 @@ a restarted engine recovers its prefix cache (warm restart).
 from __future__ import annotations
 
 import hashlib
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.abtree import ABTree, OP_DELETE, OP_FIND, OP_INSERT, TreeConfig
+from repro.core.durable import DurableForest, recover_forest
 from repro.core.forest import ABForest
 
 PAGE = 256  # tokens per KV page
@@ -77,7 +79,13 @@ class PrefixIndex:
     forest's vmapped per-shard pipeline, so hot-prefix churn on one key
     range stops contending with the rest of the index.  ``key_space``
     seeds the shard split points (defaults to the full 63-bit hash
-    domain; session-id indexes pass their id range instead)."""
+    domain; session-id indexes pass their id range instead).
+
+    ``durable_dir`` backs the index with a ``DurableForest`` instead (any
+    shard count, per-shard journals): every update round commits before
+    its results are released, and a restarted engine pointing at the same
+    directory recovers the index from the journal (warm restart) — shard
+    count and split points come back from the manifest."""
 
     def __init__(
         self,
@@ -87,9 +95,29 @@ class PrefixIndex:
         shards: int = 1,
         key_space: Optional[Tuple[int, int]] = None,
         max_keys_per_shard: Optional[int] = None,
+        durable_dir: Optional[str] = None,
+        snapshot_every: int = 64,
     ):
         cfg = TreeConfig(capacity=capacity, b=8, a=2)
-        if shards > 1:
+        if durable_dir is not None:
+            if os.path.exists(os.path.join(durable_dir, "MANIFEST")):
+                self.tree = recover_forest(durable_dir)  # warm restart
+                # shard count / splits legitimately come from the manifest
+                # (the forest may have re-partitioned); a mode switch would
+                # silently change the durability discipline — refuse it.
+                if self.tree.forest.mode != mode:
+                    raise ValueError(
+                        f"durable index at {durable_dir!r} was journaled in "
+                        f"{self.tree.forest.mode!r} mode; requested {mode!r}"
+                    )
+            else:
+                self.tree = DurableForest(
+                    durable_dir, n_shards=shards, cfg=cfg, mode=mode,
+                    snapshot_every=snapshot_every,
+                    key_space=key_space if key_space is not None else (0, 1 << 63),
+                    max_keys_per_shard=max_keys_per_shard,
+                )
+        elif shards > 1:
             self.tree = ABForest(
                 n_shards=shards, cfg=cfg, mode=mode,
                 key_space=key_space if key_space is not None else (0, 1 << 63),
@@ -153,10 +181,13 @@ class SessionIndex(PrefixIndex):
         shards: int = 1,
         key_space: Optional[Tuple[int, int]] = None,
         max_keys_per_shard: Optional[int] = None,
+        durable_dir: Optional[str] = None,
+        snapshot_every: int = 64,
     ):
         super().__init__(
             mode=mode, capacity=capacity, shards=shards, key_space=key_space,
-            max_keys_per_shard=max_keys_per_shard,
+            max_keys_per_shard=max_keys_per_shard, durable_dir=durable_dir,
+            snapshot_every=snapshot_every,
         )
 
     def evict_range(self, lo: int, hi: int, cap: int = 256) -> List[int]:

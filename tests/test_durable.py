@@ -1,6 +1,11 @@
 """Durable-tree tests: commit/recover roundtrips, crash injection at every
-protocol step (paper §5 strict-linearizability discipline), and the
-persistence-cost accounting that elimination reduces (Table 1 analog)."""
+protocol step (paper §5 strict-linearizability discipline) for the single
+tree AND the per-shard-journaled ``DurableForest`` (crash matrix × shard
+counts, including a crash injected mid-shard-split), journal garbage
+collection, and the persistence-cost accounting that elimination reduces
+(Table 1 analog)."""
+import os
+
 import numpy as np
 import pytest
 
@@ -8,11 +13,14 @@ from repro.core import (
     CrashPoint,
     DictOracle,
     DurableABTree,
+    DurableForest,
     OP_DELETE,
     OP_INSERT,
     TreeConfig,
+    check_forest_invariants,
     check_invariants,
     recover,
+    recover_forest,
 )
 from repro.core.durable import SimulatedCrash
 from repro.core.oracle import tree_contents
@@ -130,3 +138,283 @@ def test_recover_after_growth(tmp_path):
     r = recover(d)
     check_invariants(r.tree.state, r.tree.cfg)
     assert tree_contents(r.tree.state, r.tree.cfg) == o.items()
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: recovery completeness + journal GC
+# ---------------------------------------------------------------------------
+
+
+def test_occ_recover_reinstalls_subround_hook_and_snapshot_every(tmp_path):
+    """A recovered p-OCC tree must keep per-sub-round durability (the
+    ``subround_hook`` is re-installed by ``recover``) and resume with the
+    journaled ``snapshot_every``, not a hardcoded default."""
+    d = str(tmp_path / "occ")
+    t = DurableABTree(d, CFG, mode="occ", snapshot_every=7)
+    t.apply_round([OP_INSERT] * 4, [5, 5, 6, 7], [1, 2, 3, 4])
+    r = recover(d)
+    assert r.snapshot_every == 7
+    assert r.tree.subround_hook is not None
+    # functional check: a round with duplicate keys commits once per
+    # sub-round on the RECOVERED tree (2 duplicate ranks → 2 commits).
+    c0 = r.dstats.commits
+    r.apply_round([OP_INSERT] * 4, [9, 9, 10, 11], [1, 2, 3, 4])
+    assert r.dstats.commits - c0 == 2
+    # and the recovered journal is readable again
+    r2 = recover(d)
+    assert tree_contents(r2.tree.state, r2.tree.cfg) == tree_contents(
+        r.tree.state, r.tree.cfg
+    )
+
+
+def _journal_files(d):
+    return {
+        f for f in os.listdir(d)
+        if f.endswith(".npz") and ("_segment_" in f or "_snapshot_" in f)
+    }
+
+
+def test_journal_gc_unlinks_unreferenced_files(tmp_path):
+    """After a snapshot commit, segment/snapshot files no longer referenced
+    by the committed MANIFEST are unlinked (they must not accumulate) and
+    counted in ``DurableStats.gc_removed``."""
+    import json
+
+    d = str(tmp_path / "gc")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=3)
+    for i in range(10):
+        t.apply_round([OP_INSERT] * 4, [i, i + 40, i + 80, i + 120], [i] * 4)
+    assert t.dstats.gc_removed > 0
+    with open(os.path.join(d, "MANIFEST")) as f:
+        manifest = json.load(f)
+    referenced = set()
+    for sh in manifest["shards"]:
+        referenced.add(sh["snapshot"])
+        referenced.update(sh["segments"])
+    assert _journal_files(d) == referenced, "unreferenced journal files survive"
+
+
+def test_forest_journal_gc_across_shards(tmp_path):
+    import json
+
+    d = str(tmp_path / "fgc")
+    f = DurableForest(d, n_shards=2, cfg=CFG, key_space=(0, 128), snapshot_every=3)
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        keys = rng.integers(0, 128, 16).tolist()
+        f.apply_round([OP_INSERT] * 16, keys, keys)
+    assert f.dstats.gc_removed > 0
+    with open(os.path.join(d, "MANIFEST")) as fh:
+        manifest = json.load(fh)
+    referenced = set()
+    for sh in manifest["shards"]:
+        referenced.add(sh["snapshot"])
+        referenced.update(sh["segments"])
+    assert _journal_files(d) == referenced
+
+
+# ---------------------------------------------------------------------------
+# DurableForest: per-shard journals, crash matrix × shard counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+def test_durable_forest_commit_recover_roundtrip(tmp_path, shards, mode):
+    d = str(tmp_path / f"forest{shards}")
+    f = DurableForest(
+        d, n_shards=shards, cfg=CFG, mode=mode, key_space=(0, 64),
+        snapshot_every=3,
+    )
+    o = DictOracle()
+    for ops, keys, vals in _mk_rounds(5, bsz=24, seed=shards):
+        f.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    r = recover_forest(d)
+    check_forest_invariants(r.forest)
+    assert r.items() == o.items()
+    assert r.forest.n_shards == shards
+    if mode == "occ":
+        assert r.forest.subround_hook is not None
+    # recovered forest remains fully operational (routing restored; key 999
+    # is outside the workload's range, so the insert is fresh)
+    r.apply_round([OP_INSERT], [999], [123])
+    assert r.items()[999] == 123
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+@pytest.mark.parametrize("step", ["after_segment", "mid_manifest", "before_dirsync"])
+def test_forest_crash_injection_recovers_prefix(tmp_path, step, shards):
+    """The crash matrix × shard counts: a crash at any protocol step
+    recovers exactly a committed round boundary (strict linearizability at
+    round granularity) — the recovered forest equals the oracle prefix of
+    the committed rounds, for every shard count.  The manifest rename
+    commits ALL shards' journal advances atomically, so no mixed-shard
+    state can ever recover."""
+    at_commit = 3
+    d = str(tmp_path / "crash")
+    crash = CrashPoint(step=step, at_commit=at_commit)
+    f = DurableForest(
+        d, n_shards=shards, cfg=CFG, mode="elim", key_space=(0, 64),
+        snapshot_every=100, crash=crash,
+    )
+    o = DictOracle()
+    prefix_states = [o.items()]  # oracle contents after each committed round
+    crashed = False
+    for ops, keys, vals in _mk_rounds(6, bsz=24, seed=at_commit + shards):
+        try:
+            f.apply_round(ops, keys, vals)
+            o.apply_round(ops, keys, vals)
+            prefix_states.append(o.items())
+        except SimulatedCrash:
+            crashed = True
+            # if the rename landed before the crash, the round IS durable —
+            # compute that prefix too.
+            o2 = DictOracle()
+            o2.d = dict(prefix_states[-1])
+            o2.apply_round(ops, keys, vals)
+            prefix_states.append(o2.items())
+            break
+    assert crashed, "crash point did not fire"
+    r = recover_forest(d)
+    check_forest_invariants(r.forest)
+    got = r.items()
+    acceptable = prefix_states[-2:] if step == "before_dirsync" else prefix_states[-2:-1]
+    assert got in acceptable, (
+        f"recovered state is not a committed prefix (step={step}, shards={shards})"
+    )
+
+
+def test_forest_crash_mid_shard_split_recovers_committed_prefix(tmp_path):
+    """A crash injected while a shard split is restacking the forest must
+    recover the last committed ROUND boundary: nothing of the splitting
+    round (nor the half-swept shard) is visible, and the recovered forest
+    still splits on its next overflow."""
+    rng = np.random.default_rng(23)
+    ks = rng.choice(4096, size=120, replace=False).astype(np.int64)
+    chunks = [ks[i : i + 24] for i in range(0, ks.size, 24)]
+
+    # dry run: find the round whose shard split fires first.  During round
+    # r (0-based) the commit counter stands at r + 1 (the init snapshot is
+    # commit 0), which is the index ``mid_split`` fires against.
+    ref = DurableForest(
+        str(tmp_path / "split_ref"), n_shards=2, cfg=CFG, key_space=(0, 4096),
+        max_keys_per_shard=40, snapshot_every=10**9,
+    )
+    o_ref = DictOracle()
+    ref_prefixes = [o_ref.items()]
+    first_split_round = None
+    for r_i, c in enumerate(chunks):
+        ref.apply_round(np.full(c.size, OP_INSERT, np.int32), c, c * 3)
+        o_ref.apply_round([OP_INSERT] * c.size, c.tolist(), (c * 3).tolist())
+        ref_prefixes.append(o_ref.items())
+        if first_split_round is None and ref.forest.n_shards > 2:
+            first_split_round = r_i
+    assert first_split_round is not None, "workload did not trigger a shard split"
+
+    crash = CrashPoint(step="mid_split", at_commit=first_split_round + 1)
+    d = str(tmp_path / "split_crash")
+    f = DurableForest(
+        d, n_shards=2, cfg=CFG, key_space=(0, 4096),
+        max_keys_per_shard=40, snapshot_every=10**9, crash=crash,
+    )
+    o = DictOracle()
+    prefixes = [o.items()]
+    crashed = False
+    for c in chunks:
+        try:
+            f.apply_round(np.full(c.size, OP_INSERT, np.int32), c, c * 3)
+            o.apply_round([OP_INSERT] * c.size, c.tolist(), (c * 3).tolist())
+            prefixes.append(o.items())
+        except SimulatedCrash:
+            crashed = True
+            break
+    assert crashed, "mid-split crash did not fire"
+    r = recover_forest(d)
+    check_forest_invariants(r.forest)
+    # nothing of the splitting round committed: recovery = previous round's
+    # oracle prefix, with the PRE-split shard layout.
+    assert r.items() == prefixes[-1]
+    assert r.forest.n_shards == 2
+    # the recovered forest is operational and still re-partitions on
+    # overflow (split machinery + journal re-keying survive recovery)
+    for c in chunks:
+        r.apply_round(np.full(c.size, OP_INSERT, np.int32), c, c * 3)
+    assert r.forest.n_shards > 2
+    assert r.items() == ref_prefixes[-1]
+    check_forest_invariants(r.forest)
+    r2 = recover_forest(str(tmp_path / "split_crash"))
+    assert r2.items() == ref_prefixes[-1]
+    assert r2.forest.n_shards == r.forest.n_shards
+
+
+def test_forest_split_snapshots_only_affected_shards(tmp_path):
+    """A shard split forces snapshots of exactly the two affected shards;
+    untouched shards keep their segment chains (journals are keyed by
+    stable uids, so the restack does not re-journal them)."""
+    import json
+
+    d = str(tmp_path / "splitsnap")
+    f = DurableForest(
+        d, n_shards=3, cfg=CFG, key_space=(0, 3000),
+        max_keys_per_shard=40, snapshot_every=10**9,
+    )
+    # seed every shard, then overflow only the middle one (keys 1000-2000)
+    seed = list(range(0, 3000, 100))
+    f.apply_round([OP_INSERT] * len(seed), seed, seed)
+    hot = list(range(1000, 1900, 18))  # 50 keys > threshold in shard 1
+    f.apply_round([OP_INSERT] * len(hot), hot, hot)
+    assert f.forest.n_shards == 4
+    with open(os.path.join(d, "MANIFEST")) as fh:
+        manifest = json.load(fh)
+    by_uid = {sh["uid"]: sh for sh in manifest["shards"]}
+    uids = [sh["uid"] for sh in manifest["shards"]]
+    assert uids[0] == "s0000" and uids[-1] == "s0002"  # outer shards keep uids
+    assert uids[2] == "s0003"  # the fresh shard's uid, restacked at s+1
+    # affected shards (split + fresh) were force-snapshotted at the commit;
+    # the untouched outer shards still ride their original snapshot+segments
+    assert by_uid["s0001"]["snapshot"].endswith(f"{manifest['commit']:08d}.npz")
+    assert by_uid["s0003"]["snapshot"].endswith(f"{manifest['commit']:08d}.npz")
+    assert by_uid["s0000"]["snapshot"].endswith("_00000000.npz")
+    assert by_uid["s0002"]["snapshot"].endswith("_00000000.npz")
+
+
+def test_durable_forest_elimination_reduces_flush_traffic(tmp_path):
+    """Paper Table-1, sharded: p-Elim flushes fewer bytes than p-OCC on a
+    skewed update-heavy workload at every shard count (occ pays a segment
+    per sub-round; eliminated ops dirty no nodes)."""
+    rng = np.random.default_rng(7)
+    rounds = []
+    for _ in range(4):
+        ops = rng.choice([OP_INSERT, OP_DELETE], 48).tolist()
+        keys = np.minimum(rng.zipf(1.8, 48), 60).tolist()  # very hot keys
+        vals = rng.integers(0, 100, 48).tolist()
+        rounds.append((ops, keys, vals))
+    for shards in (1, 2):
+        stats = {}
+        for mode in ("elim", "occ"):
+            f = DurableForest(
+                str(tmp_path / f"{mode}{shards}"), n_shards=shards, cfg=CFG,
+                mode=mode, key_space=(0, 64), snapshot_every=10**9,
+            )
+            for ops, keys, vals in rounds:
+                f.apply_round(ops, keys, vals)
+            stats[mode] = f.stats()
+        assert stats["elim"]["flush_bytes"] < stats["occ"]["flush_bytes"], shards
+        assert stats["elim"]["fsyncs"] < stats["occ"]["fsyncs"], shards
+
+
+def test_durable_session_index_warm_restart(tmp_path):
+    """The serving layer's durable sharded index option: a SessionIndex
+    pointed at an existing journal directory recovers its contents (warm
+    restart), keeping the evict_range contract."""
+    from repro.serve.pages import SessionIndex
+
+    d = str(tmp_path / "sessions")
+    si = SessionIndex(mode="elim", shards=2, key_space=(0, 256), durable_dir=d)
+    si.publish_batch(list(range(100, 140)), list(range(40)))
+    freed = si.evict_range(100, 120, cap=8)
+    assert sorted(freed) == list(range(20))
+    si2 = SessionIndex(mode="elim", shards=2, key_space=(0, 256), durable_dir=d)
+    assert si2.lookup_batch([119, 120, 139]) == [None, 20, 39]
+    assert si2.tree.n_shards == 2

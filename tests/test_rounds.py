@@ -279,3 +279,78 @@ else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_property_mixed_rounds_oracle_equivalence():
         pass
+
+
+# ---------------------------------------------------------------------------
+# Unified engine: exactly one host-sequencing implementation
+# ---------------------------------------------------------------------------
+
+
+def test_forest_has_no_host_sequencing_copies():
+    """Grep-pin for the unified engine: ``core/forest.py`` must contain NO
+    copy of the round engine's host loops — they live once, in
+    ``core/rounds.py``'s (S, wave_w) form, shared with ABTree (S = 1)."""
+    import inspect
+
+    import repro.core.forest as F
+    import repro.core.rounds as R
+
+    src = inspect.getsource(F)
+    for token in (
+        "_drain_deferred",
+        "_split_cascade",
+        "_occ_round",
+        "_fix_underfull",
+        "underfull",
+        "_combine_apply",
+        "_v_scan",
+        "_v_split",
+        "_v_underfull",
+        "run_scan_phase",
+        "run_point_phases",
+        "subrounds",
+    ):
+        assert token not in src, f"forest.py re-implements/host-sequences {token!r}"
+    rsrc = inspect.getsource(R)
+    for token in (
+        "_drain_deferred",
+        "_split_cascade",
+        "_occ_round",
+        "_fix_underfull_all",
+        "run_scan_phase",
+        "execute_plan",
+        "execute_scan_delete",
+    ):
+        assert token in rsrc, f"rounds.py lost the unified {token!r}"
+
+
+def test_abtree_rounds_execute_through_s1_stacked_path(monkeypatch):
+    """ABTree rounds must run through the unified engine's vmapped S = 1
+    path: every phase sees a leading shard axis of size 1, and the
+    RoundOutput semantics are unchanged (oracle-exact)."""
+    from repro.core import rounds as R
+
+    combine_shapes = []
+    scan_shapes = []
+    orig_combine = R._v_search_combine
+    orig_scan = R._v_scan
+
+    def spy_combine(state, batch, cfg, narrow=False):
+        combine_shapes.append(tuple(np.asarray(batch[0]).shape))
+        return orig_combine(state, batch, cfg, narrow)
+
+    def spy_scan(state, cfg, lo, hi, fc, cap, narrow, narrow_descent=False):
+        scan_shapes.append(tuple(np.asarray(lo).shape))
+        return orig_scan(state, cfg, lo, hi, fc, cap, narrow, narrow_descent)
+
+    monkeypatch.setattr(R, "_v_search_combine", spy_combine)
+    monkeypatch.setattr(R, "_v_scan", spy_scan)
+
+    t = ABTree(SMALL)
+    o = DictOracle()
+    ops = [OP_INSERT, OP_INSERT, OP_RANGE, OP_DELETE, OP_FIND]
+    keys = [3, 9, 0, 3, 9]
+    vals = [30, 90, 20, 0, 0]
+    _check_mixed_round(t, o, ops, keys, vals, cap=16)
+    assert combine_shapes and all(s[0] == 1 and len(s) == 2 for s in combine_shapes)
+    assert scan_shapes and all(s[0] == 1 and len(s) == 2 for s in scan_shapes)
