@@ -22,36 +22,14 @@ from benchmarks.common import emit, timeit
 
 
 def _hlo_op_counts():
-    """Lower the search/scan phases both ways and count sort/gather ops."""
-    from repro.core import ABTree, OP_INSERT, TreeConfig
-    from repro.core import rounds as R
-    from repro.core.abtree import frontier_expand
+    """Lower the search/scan phases both ways and count sort/gather ops
+    (the reusable audit in :mod:`repro.obs.hlo_audit`; the no-sort trace
+    tests assert on the same programs)."""
+    from repro.obs.hlo_audit import audit_search_phases
 
-    t = ABTree(TreeConfig(capacity=2048, b=8, a=2, max_height=12))
-    rng = np.random.default_rng(0)
-    keys = rng.choice(10**6, size=600, replace=False).astype(np.int64)
-    t.apply_round(np.full(600, OP_INSERT, np.int32), keys, keys)
-    lo = jnp.asarray([0, 10**5], jnp.int64)
-    hi = jnp.asarray([10**4, 10**6], jnp.int64)
-    fe = jax.jit(
-        functools.partial(frontier_expand, frontier_cap=16), static_argnums=(1,)
-    )
-    batch = (
-        jnp.zeros((256,), jnp.int32) + np.int32(OP_INSERT),
-        jnp.asarray(rng.integers(0, 10**6, 256), jnp.int64),
-        jnp.zeros((256,), jnp.int64),
-    )
-    for name, txt in (
-        ("scan_descent", fe.lower(t.state, t.cfg, lo, hi).as_text()),
-        ("scan_phase.narrow", R._phase_scan.lower(
-            t.state, t.cfg, lo, hi, 16, 32, True, True).as_text()),
-        ("search.ref", R._phase_search_combine.lower(
-            t.state, batch, t.cfg, False).as_text()),
-        ("search.narrow", R._phase_search_combine.lower(
-            t.state, batch, t.cfg, True).as_text()),
-    ):
-        sorts = txt.count("stablehlo.sort")
-        gathers = txt.count("stablehlo.gather")
+    for name, counts in audit_search_phases().items():
+        sorts = counts["stablehlo.sort"]
+        gathers = counts["stablehlo.gather"]
         emit(
             f"kernel.search_phase.hlo.{name}", 0.0,
             f"sorts={sorts};gathers={gathers}",

@@ -98,6 +98,39 @@ def main(quick=False):
                 f"occ={bytes_per_op['occ']:.1f})"
             )
 
+    # GC churn leg: frequent snapshots supersede earlier journal files, so
+    # the post-commit GC must actually collect them (gc_removed > 0 —
+    # guards against the journal directory growing without bound; the
+    # main legs never snapshot, so they never exercise GC).  Also the one
+    # leg that publishes fsync latency percentiles, from the registry
+    # histogram the durable layer feeds.
+    d = tempfile.mkdtemp(prefix="ptree_gc_")
+    dur = DurableForest(
+        d, n_shards=2, cfg=tree_cfg, mode="elim",
+        key_space=(0, key_range), snapshot_every=2,
+    )
+    prefill_tree(dur.forest, cfg)
+    t_gc = _run(dur, stream)
+    s = dur.stats()
+    fs = dur.metrics.histogram_summary("fsync_latency_s")
+    if s["gc_removed"] <= 0:
+        raise RuntimeError(
+            "persistence.gc: snapshot churn must GC superseded journal "
+            f"files (gc_removed={s['gc_removed']})"
+        )
+    emit(
+        "persistence.zipf.gc_churn.s2",
+        t_gc / n_ops * 1e6,
+        f"gc_removed={s['gc_removed']};fsync_p99_us={fs['p99'] * 1e6:.0f}",
+        ops_per_s=n_ops / t_gc,
+        gc_removed=s["gc_removed"],
+        commits=s["commits"],
+        fsyncs=s["fsyncs"],
+        fsync_p50_us=fs["p50"] * 1e6,
+        fsync_p99_us=fs["p99"] * 1e6,
+    )
+    shutil.rmtree(d, ignore_errors=True)
+
 
 if __name__ == "__main__":
     main()

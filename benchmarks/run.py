@@ -10,7 +10,9 @@ counts, conflict retries, …) so the perf trajectory accumulates.
                   per shard count, YCSB A/E; 4 shards must strictly beat
                   1 shard on retries/op)
   range_scan    — scan_round throughput + kernels/range_scan hot loop
-  persistence   — Table 1 (durable overhead + flush traffic)
+  persistence   — Table 1 (durable overhead + flush traffic + GC churn)
+  serve_latency — p50/p99 ServeEngine.tick at N sessions, durable vs
+                  volatile index backends (latency under load)
   elim_rate     — §4 mechanism (elimination fraction vs skew)
   embed_elim    — framework integration (sparse-update write collapse)
   kernels       — per-kernel timings
@@ -121,6 +123,7 @@ def main() -> None:
         microbench,
         persistence,
         range_scan,
+        serve_latency,
         ycsb,
     )
 
@@ -131,6 +134,7 @@ def main() -> None:
         "forest": forest.main,
         "range_scan": range_scan.main,
         "persistence": persistence.main,
+        "serve_latency": serve_latency.main,
         "elim_rate": elim_rate.main,
         "embed_elim": embed_elim.main,
         "kernels": kernels_bench.main,

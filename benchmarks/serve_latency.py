@@ -1,0 +1,80 @@
+"""Latency under load: p50/p99 ``ServeEngine.tick`` at N concurrent
+sessions, durable vs volatile index backends.
+
+The serving engine's tick latency is the paper claim that matters at the
+system level: the batched index rounds (admit lookups, prefix publishes,
+session-range sweeps) ride the scheduler tick, so index-side regressions
+surface here as tail latency.  Each leg submits N seeded sessions against
+a 2-shard forest index (durable legs journal both indexes to a temp
+directory) and reads p50/p99 from the engine's ``tick_latency_s``
+histogram — compile time is excluded by warming the engine on a couple of
+throwaway sessions and then swapping in a fresh registry.
+
+Gating (``run.py --check results/BENCH_serve_latency.json``):
+``ops_per_s`` (ticks/s of measured wall time) is floor-gated; ``rounds``
+(the measured tick count — deterministic for seeded prompts under greedy
+decode) is exact-gated.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _run_leg(cfg, n_sessions: int, durable: bool, *, seed: int = 0):
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serve import Request, ServeEngine
+
+    ddir = tempfile.mkdtemp(prefix="bench_serve_lat_") if durable else None
+    eng = ServeEngine(
+        cfg,
+        max_batch=4,
+        s_max=64,
+        n_pages=128,
+        index_shards=2,
+        index_durable_dir=ddir,
+    )
+    rng = np.random.default_rng(seed)
+    # warm: compile the decode step + round kernels outside the window
+    for rid in range(2):
+        eng.submit(
+            Request(rid=rid, prompt=list(rng.integers(0, cfg.vocab, 8)), max_new=2)
+        )
+    eng.run_until_done(max_ticks=200)
+    eng.metrics = MetricsRegistry()  # drop warm-up ticks from the histogram
+    for rid in range(100, 100 + n_sessions):
+        eng.submit(
+            Request(rid=rid, prompt=list(rng.integers(0, cfg.vocab, 8)), max_new=4)
+        )
+    eng.run_until_done(max_ticks=2000)
+    hist = eng.metrics.histogram_summary("tick_latency_s")
+    return hist, int(eng.metrics.value("ticks"))
+
+
+def main(quick: bool = False):
+    from repro.configs import get_config
+    from repro.models import reduced
+
+    cfg = reduced(get_config("qwen2-0.5b"), n_layers=1)
+    loads = (2, 8) if quick else (2, 8, 16)
+    for n in loads:
+        for durable in (False, True):
+            hist, ticks = _run_leg(cfg, n, durable)
+            mode = "durable" if durable else "volatile"
+            total_s = hist["sum"] or 1e-9
+            emit(
+                f"serve_latency.n{n}.{mode}",
+                hist["p50"] * 1e6,
+                f"p99_us={hist['p99'] * 1e6:.1f};ticks={ticks}",
+                ops_per_s=ticks / total_s,
+                rounds=ticks,
+                p50_us=hist["p50"] * 1e6,
+                p99_us=hist["p99"] * 1e6,
+            )
+
+
+if __name__ == "__main__":
+    main()

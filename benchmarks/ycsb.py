@@ -33,7 +33,11 @@ descent+probe, Pallas frontier compaction, kernel rank-select) instead of
 the int64 jnp references — the A/B for the device-resident search path.
 
 ``python benchmarks/ycsb.py [--workload A|E] [--scan-path fused|split|both]
-[--shards K] [--narrow] [--quick]``
+[--shards K] [--narrow] [--trace PATH] [--quick]``
+
+``--trace PATH`` installs a phase ``Tracer`` on every holder the section
+builds and writes Chrome trace-event JSON (Perfetto-loadable; or render a
+phase/shard table with ``python -m repro.obs.report PATH``).
 """
 from __future__ import annotations
 
@@ -60,6 +64,16 @@ from repro.data.workloads import (
 
 from benchmarks.common import emit
 
+# set by main(trace=...): every holder the section builds gets this tracer
+# installed, so one --trace run captures all of the section's rounds.
+_TRACER = None
+
+
+def _instrument(holder):
+    if _TRACER is not None:
+        holder.tracer = _TRACER
+    return holder
+
 
 def _run_a(quick=False, narrow=False):
     key_range = 4096
@@ -68,7 +82,9 @@ def _run_a(quick=False, narrow=False):
     rows = np.zeros(key_range, np.int64)
     rng = np.random.default_rng(3)
     for mode in ("elim", "occ"):
-        tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode, narrow=narrow)
+        tree = _instrument(
+            ABTree(TPU8._replace(capacity=4 * key_range), mode=mode, narrow=narrow)
+        )
         prefill_tree(tree, WorkloadConfig(key_range=key_range, seed=1))
         keys = zipf_keys(rng, batch * rounds, key_range, 0.5)
         is_write = rng.random(batch * rounds) < 0.5
@@ -100,13 +116,13 @@ def run_a_forest(shards, quick=False, key_range=4096, batch=256, narrow=False):
     retries the shards the writer actually touched)."""
     rounds_n = 10 if quick else 30
     wl = WorkloadConfig(key_range=key_range, seed=1)
-    forest = ABForest(
+    forest = _instrument(ABForest(
         n_shards=shards,
         cfg=TPU8._replace(capacity=4 * key_range),
         mode="elim",
         key_space=(0, key_range),
         narrow=narrow,
-    )
+    ))
     prefill_tree(forest, wl)
     rng = np.random.default_rng(3)
     n_w = 8  # hot-key writes per round (the contended fraction)
@@ -166,13 +182,13 @@ def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128, narrow
     wl = WorkloadConfig(
         key_range=key_range, dist="zipf", zipf_s=1.0, batch=batch, seed=5
     )
-    forest = ABForest(
+    forest = _instrument(ABForest(
         n_shards=shards,
         cfg=TPU8._replace(capacity=4 * key_range),
         mode="elim",
         key_space=(0, key_range),
         narrow=narrow,
-    )
+    ))
     prefill_tree(forest, wl)
     for ops, keys, vals in ycsb_e_stream(wl, 3):  # warm
         forest.apply_round(ops, keys, vals, scan_cap=cap)
@@ -253,7 +269,9 @@ def _run_e_path(mode, path, wl, rounds, cap, narrow=False):
     scan+update pipeline).  split: the legacy host-split baseline — one
     ``scan_round`` + one ``apply_round`` per batch (2 rounds/batch)."""
     key_range = wl.key_range
-    tree = ABTree(TPU8._replace(capacity=4 * key_range), mode=mode, narrow=narrow)
+    tree = _instrument(
+        ABTree(TPU8._replace(capacity=4 * key_range), mode=mode, narrow=narrow)
+    )
     prefill_tree(tree, wl)
     # warm: several rounds so the scan frontier reaches steady state and
     # every (frontier, cap) jit compile lands outside the timed region
@@ -326,19 +344,33 @@ def _run_e(quick=False, scan_path="both", narrow=False):
             )
 
 
-def main(quick=False, workload="A", scan_path="both", shards=0, narrow=False):
-    if workload.upper() == "A":
-        if shards:
-            _run_a_sharded(shards, quick=quick, narrow=narrow)
+def main(quick=False, workload="A", scan_path="both", shards=0, narrow=False,
+         trace=None):
+    global _TRACER
+    if trace:
+        from repro.obs.tracer import Tracer
+
+        _TRACER = Tracer()
+    try:
+        if workload.upper() == "A":
+            if shards:
+                _run_a_sharded(shards, quick=quick, narrow=narrow)
+            else:
+                _run_a(quick=quick, narrow=narrow)
+        elif workload.upper() == "E":
+            if shards:
+                _run_e_sharded(shards, quick=quick, narrow=narrow)
+            else:
+                _run_e(quick=quick, scan_path=scan_path, narrow=narrow)
         else:
-            _run_a(quick=quick, narrow=narrow)
-    elif workload.upper() == "E":
-        if shards:
-            _run_e_sharded(shards, quick=quick, narrow=narrow)
-        else:
-            _run_e(quick=quick, scan_path=scan_path, narrow=narrow)
-    else:
-        raise ValueError(f"unknown YCSB workload {workload!r} (A or E)")
+            raise ValueError(f"unknown YCSB workload {workload!r} (A or E)")
+    finally:
+        if trace:
+            from repro.obs.trace_export import write_chrome_trace
+
+            write_chrome_trace(trace, _TRACER)
+            print(f"# wrote trace: {trace} ({len(_TRACER.events)} events)")
+            _TRACER = None
 
 
 if __name__ == "__main__":
@@ -370,6 +402,15 @@ if __name__ == "__main__":
         "(fused descent+probe, Pallas frontier compaction, kernel "
         "rank-select) — the device-resident A/B against the jnp refs",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="record a phase trace of the whole section (every holder the "
+        "section builds) and write Chrome trace-event JSON to PATH — "
+        "load it in Perfetto, or render a table with "
+        "`python -m repro.obs.report PATH`",
+    )
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     main(
@@ -378,4 +419,5 @@ if __name__ == "__main__":
         scan_path=args.scan_path,
         shards=args.shards,
         narrow=args.narrow,
+        trace=args.trace,
     )

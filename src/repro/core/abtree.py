@@ -55,6 +55,12 @@ import numpy as np
 from repro.core import elimination as elim
 from repro.kernels.tree_descend.ops import frontier_compact
 from repro.kernels.tree_descend.ref import descend_ref, probe_ref
+from repro.obs.metrics import (
+    MetricsRegistry,
+    RegistryBackedCounters,
+    engine_collector,
+)
+from repro.obs.tracer import NULL_TRACER
 
 # ----------------------------------------------------------------------------
 # Constants & state
@@ -796,7 +802,7 @@ def frontier_expand(
 # ----------------------------------------------------------------------------
 
 
-class ABTree:
+class ABTree(RegistryBackedCounters):
     """Host-orchestrated batched (a,b)-tree — the S = 1 case of the unified
     sharded round engine.  Every entry point builds a round plan and runs
     the ``core/rounds.py`` (S, wave_w) phase pipeline (the ``stacked``
@@ -818,6 +824,13 @@ class ABTree:
         self.n_shards = 1
         self._splits = np.empty((0,), np.int64)
         self._bounds = [int(KEY_MIN), int(EMPTY)]
+        # telemetry: metrics registry (the one store behind the legacy
+        # ``_rounds``/``_scans``/``_scan_retries`` counter properties) and
+        # the host-side phase tracer (NULL_TRACER = strict no-op; install a
+        # ``repro.obs.Tracer()`` to record spans).
+        self.metrics = MetricsRegistry()
+        self.metrics.add_collector(engine_collector(self))
+        self.tracer = NULL_TRACER
         self._rounds = 0
         self._scans = 0
         self._scan_retries = 0
@@ -863,6 +876,9 @@ class ABTree:
 
     def _maybe_split_shards(self):
         """Shard-overflow policy: the single tree never splits shards."""
+
+    def _note_shard_load(self, counts):
+        """Hot-shard accounting is a forest concern; S = 1 has no skew."""
 
     # -- public API -----------------------------------------------------------
 

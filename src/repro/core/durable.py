@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -127,6 +128,10 @@ class _DurableBase:
 
     # -- backend surface (provided by subclasses) ------------------------------
 
+    def _holder(self):
+        """The backing round-engine holder (the ABTree or ABForest)."""
+        raise NotImplementedError
+
     def _n_shards(self) -> int:
         raise NotImplementedError
 
@@ -152,6 +157,24 @@ class _DurableBase:
 
     def _manifest_extra(self) -> dict:
         return {}
+
+    # -- telemetry (shared with the backing holder) ----------------------------
+    # The durable wrapper has no registry of its own: journal metrics land
+    # in the backing holder's registry, so ``holder.metrics`` is ONE
+    # surface across volatile and durable variants, and installing a
+    # tracer on the wrapper also times the engine phases underneath.
+
+    @property
+    def metrics(self):
+        return self._holder().metrics
+
+    @property
+    def tracer(self):
+        return self._holder().tracer
+
+    @tracer.setter
+    def tracer(self, t):
+        self._holder().tracer = t
 
     # -- journal lifecycle -----------------------------------------------------
 
@@ -191,11 +214,13 @@ class _DurableBase:
             # round boundaries and must never become the durable prefix.
             return
         idx = self._commit_idx
+        tr = self.tracer
+        reg = self.metrics
         # a pool growth invalidates segment node indexing → force snapshots
         grown = self._snap_capacity != self._capacity()
         dirty = self._take_dirty_all()
         shard_arrays = self._persisted_host_arrays()
-        jobs = []  # (uid, fname, node_ids, arrays)
+        jobs = []  # (shard, uid, fname, node_ids, arrays)
         for s in range(self._n_shards()):
             uid = self._uids[s]
             snap = (
@@ -206,18 +231,26 @@ class _DurableBase:
                 or self._snapshots[uid] is None
             )
             if snap:
-                jobs.append((uid, f"{uid}_snapshot_{idx:08d}.npz", None,
+                jobs.append((s, uid, f"{uid}_snapshot_{idx:08d}.npz", None,
                              shard_arrays[s]))
             elif dirty[s].size:
                 arrs = {f: a[dirty[s]] for f, a in shard_arrays[s].items()}
-                jobs.append((uid, f"{uid}_segment_{idx:08d}.npz", dirty[s], arrs))
+                jobs.append(
+                    (s, uid, f"{uid}_segment_{idx:08d}.npz", dirty[s], arrs)
+                )
             # untouched shard: its journal lane is quiet this commit
-        for (uid, fname, node_ids, _), (nbytes, nnodes) in zip(
-            jobs, self._write_shard_files(jobs)
+        with tr.span("journal_flush", commit=idx, files=len(jobs)):
+            written = self._write_shard_files(jobs)
+        for (s, uid, fname, node_ids, _), (nbytes, nnodes, dt_w) in zip(
+            jobs, written
         ):
             self.dstats.flush_bytes += nbytes
             self.dstats.fsyncs += 1
             self.dstats.nodes_flushed += nnodes
+            reg.inc("flush_bytes", nbytes, shard=s)
+            reg.inc("fsyncs", shard=s)
+            reg.inc("nodes_flushed", nnodes, shard=s)
+            reg.observe("fsync_latency_s", dt_w)
             if node_ids is None:
                 self._snapshots[uid] = fname
                 self._segments[uid] = []
@@ -256,19 +289,24 @@ class _DurableBase:
         }
         tmp = os.path.join(self.dir, "MANIFEST.tmp")
         payload = json.dumps(manifest)
-        with open(tmp, "w") as f:
-            f.write(payload[: len(payload) // 2])
-            f.flush()
-            self.crash.maybe_fire("mid_manifest", idx)
-            f.write(payload[len(payload) // 2 :])
-            f.flush()
-            os.fsync(f.fileno())
+        with tr.span("manifest_commit", commit=idx):
+            t0 = time.perf_counter()
+            with open(tmp, "w") as f:
+                f.write(payload[: len(payload) // 2])
+                f.flush()
+                self.crash.maybe_fire("mid_manifest", idx)
+                f.write(payload[len(payload) // 2 :])
+                f.flush()
+                os.fsync(f.fileno())
+            self.dstats.fsyncs += 1
+            reg.observe("fsync_latency_s", time.perf_counter() - t0)
+            os.replace(tmp, os.path.join(self.dir, "MANIFEST"))  # the "link" step
+            self.crash.maybe_fire("before_dirsync", idx)
+            _fsync_dir(self.dir)  # the "persist" step
         self.dstats.fsyncs += 1
-        os.replace(tmp, os.path.join(self.dir, "MANIFEST"))  # the "link" step
-        self.crash.maybe_fire("before_dirsync", idx)
-        _fsync_dir(self.dir)  # the "persist" step
-        self.dstats.fsyncs += 1
+        reg.inc("fsyncs", 2)  # manifest file + directory entry
         self.dstats.commits += 1
+        reg.inc("commits")
         self._commit_idx += 1
         self._gc(manifest)
 
@@ -277,10 +315,10 @@ class _DurableBase:
         the parallel fsync lanes (one thread per shard file; a single
         file is written inline)."""
         if len(jobs) <= 1:
-            return [self._write_npz(f, ids, a) for _, f, ids, a in jobs]
+            return [self._write_npz(f, ids, a) for _, _, f, ids, a in jobs]
         with ThreadPoolExecutor(max_workers=min(len(jobs), 8)) as ex:
             return list(
-                ex.map(lambda j: self._write_npz(j[1], j[2], j[3]), jobs)
+                ex.map(lambda j: self._write_npz(j[2], j[3], j[4]), jobs)
             )
 
     def _write_npz(self, fname: str, node_ids, arrs):
@@ -289,16 +327,18 @@ class _DurableBase:
         save = dict(arrs)
         if node_ids is not None:
             save["node_ids"] = node_ids
+        t0 = time.perf_counter()
         with open(tmp, "wb") as f:
             np.savez(f, **save)
             f.flush()
             os.fsync(f.fileno())  # the paper's clwb+sfence of new nodes
         os.replace(tmp, path)
+        dt = time.perf_counter() - t0
         nbytes = sum(a.nbytes for a in save.values())
         nnodes = (
             int(node_ids.size) if node_ids is not None else int(arrs["keys"].shape[0])
         )
-        return nbytes, nnodes
+        return nbytes, nnodes, dt
 
     def _gc(self, manifest: dict):
         """Unlink journal files the committed manifest no longer references
@@ -324,6 +364,8 @@ class _DurableBase:
                 except OSError:
                     pass
         self.dstats.gc_removed += removed
+        if removed:
+            self.metrics.inc("gc_removed", removed)
 
     def _durable_stats_dict(self) -> Dict[str, int]:
         return dict(
@@ -356,6 +398,9 @@ class DurableABTree(_DurableBase):
         self._init_journal(directory, crash, snapshot_every)
 
     # -- backend surface -------------------------------------------------------
+
+    def _holder(self):
+        return self.tree
 
     def _n_shards(self) -> int:
         return 1
@@ -452,6 +497,9 @@ class DurableForest(_DurableBase):
         self.crash.maybe_fire("mid_split", self._commit_idx)
 
     # -- backend surface -------------------------------------------------------
+
+    def _holder(self):
+        return self.forest
 
     def _n_shards(self) -> int:
         return self.forest.n_shards

@@ -79,13 +79,19 @@ from repro.core.abtree import (
     grow_pool,
     make_tree,
 )
+from repro.obs.metrics import (
+    MetricsRegistry,
+    RegistryBackedCounters,
+    engine_collector,
+)
+from repro.obs.tracer import NULL_TRACER
 
 
 def _stack_states(states: List[TreeState]) -> TreeState:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
 
-class ABForest:
+class ABForest(RegistryBackedCounters):
     """Key-partitioned forest of batched (a,b)-trees; ``ABTree``-compatible
     round API (``apply_round`` / ``scan_round`` / ``scan_delete_round`` /
     ``scan_stream``), one vmapped round across all shards per call."""
@@ -101,6 +107,8 @@ class ABForest:
         narrow_scan: bool = False,
         narrow: bool = False,
         max_keys_per_shard: Optional[int] = None,
+        hot_shard_frac: float = 0.5,
+        hot_shard_window: int = 256,
     ):
         assert mode in ("elim", "occ")
         assert 2 <= cfg.a <= cfg.b // 2, "(a,b) requires 2 ≤ a ≤ b/2"
@@ -145,10 +153,24 @@ class ABForest:
         # split and the fresh shard restacked at s + 1 (before the swept
         # keys re-insert) — the durable layer's journal re-keying point.
         self.split_hook = None
+        # telemetry: the registry is the one store behind the legacy
+        # counter properties; the tracer defaults to the strict no-op.
+        self.metrics = MetricsRegistry()
+        self.metrics.add_collector(engine_collector(self))
+        self.tracer = NULL_TRACER
         # forest-level counters (device stats stay per shard; see stats()).
         self._rounds = 0
         self._scans = 0
         self._scan_retries = 0
+        # hot-shard detection (fed by the router via _note_shard_load):
+        # over each window of ``hot_shard_window`` routed lanes, if one
+        # shard received ≥ ``hot_shard_frac`` of them the hook fires with
+        # (shard, info) — the detection primitive for load-aware
+        # re-partitioning (ROADMAP item 2).
+        self.hot_shard_hook = None
+        self.hot_shard_frac = float(hot_shard_frac)
+        self.hot_shard_window = int(hot_shard_window)
+        self._shard_load = np.zeros(self.n_shards, np.int64)
 
     # -- unified-engine holder protocol ---------------------------------------
 
@@ -171,6 +193,39 @@ class ABForest:
 
     def _shard_of(self, keys: np.ndarray) -> np.ndarray:
         return np.searchsorted(self._splits, keys, side="right")
+
+    def _note_shard_load(self, counts):
+        """Router callback: accumulate per-shard routed-lane counts and
+        fire ``hot_shard_hook(shard, info)`` when one shard dominates the
+        current window (see __init__).  The window resets either way once
+        full, so sustained skew fires repeatedly and transient skew ages
+        out."""
+        if self.hot_shard_hook is None:
+            return
+        counts = np.asarray(counts, np.int64)
+        if counts.size != self._shard_load.size:
+            # shard count changed mid-window (shard split): restart clean
+            self._shard_load = np.zeros(self.n_shards, np.int64)
+        self._shard_load[: counts.size] += counts
+        total = int(self._shard_load.sum())
+        if total < self.hot_shard_window:
+            return
+        s = int(np.argmax(self._shard_load))
+        frac = float(self._shard_load[s]) / total
+        lanes = int(self._shard_load[s])
+        self._shard_load[:] = 0
+        if frac >= self.hot_shard_frac and self.n_shards > 1:
+            self.metrics.inc("hot_shard_events", shard=s)
+            self.hot_shard_hook(
+                s,
+                {
+                    "shard": s,
+                    "frac": frac,
+                    "lanes": lanes,
+                    "window": total,
+                    "bounds": (self._bounds[s], self._bounds[s + 1]),
+                },
+            )
 
     # -- public API -----------------------------------------------------------
 
@@ -326,6 +381,11 @@ class ABForest:
             self.n_shards += 1
             self._splits = np.insert(self._splits, s, m)
             self._rebuild_bounds()
+            # keep telemetry attribution aligned with the restack: shift
+            # per-shard metric cells ≥ s+1 up one, reset the load window.
+            self.metrics.inc("shard_splits", shard=s)
+            self.metrics.insert_shard(s + 1)
+            self._shard_load = np.zeros(self.n_shards, np.int64)
             if self.split_hook is not None:
                 self.split_hook(s)
             bs = 1024

@@ -72,6 +72,11 @@ Holder protocol (duck-typed; ``ABTree`` and ``ABForest`` both provide it):
   ``_rounds`` / ``_scans`` / ``_scan_retries``  host-side counters
   ``_scan_active``          in-flight-scan counter (defers shard splits)
   ``_maybe_split_shards()`` shard-overflow policy (no-op on ABTree)
+  ``metrics`` / ``tracer``  telemetry (``repro.obs``): the registry backs
+                            the legacy counters; the tracer wraps phase
+                            launches host-side (NULL_TRACER = no-op)
+  ``_note_shard_load(c)``   per-shard routed-lane counts → hot-shard
+                            detection (no-op on ABTree)
 """
 from __future__ import annotations
 
@@ -106,6 +111,32 @@ from repro.core.abtree import (
 )
 from repro.kernels.range_scan.ops import range_scan
 from repro.kernels.tree_descend.ops import descend_probe
+from repro.obs.tracer import NULL_TRACER
+
+# ----------------------------------------------------------------------------
+# telemetry accessors (host-side only — spans/counters wrap the jitted
+# phase launches and never enter them, so tracing cannot change HLO)
+# ----------------------------------------------------------------------------
+
+
+def _tr(holder):
+    """The holder's installed tracer (NULL_TRACER when absent/None)."""
+    t = getattr(holder, "tracer", None)
+    return NULL_TRACER if t is None else t
+
+
+def _metrics(holder):
+    """The holder's metrics registry, or None for bare mock holders."""
+    return getattr(holder, "metrics", None)
+
+
+def _note_load(holder, counts):
+    """Feed per-shard routed-lane counts to the holder's hot-shard
+    detector (a forest concern; ABTree's implementation is a no-op)."""
+    note = getattr(holder, "_note_shard_load", None)
+    if note is not None:
+        note(counts)
+
 
 # ----------------------------------------------------------------------------
 # Round plans: lane classification
@@ -480,6 +511,14 @@ def scan_lanes(holder, lo_np, hi_np, cap, *, n_scan_ops, max_retries: int = 8):
             sub_hi[s].append(shi)
     n_per = np.array([len(x) for x in sub_lo], np.int64)
     holder._scans += int(n_scan_ops)
+    tr = _tr(holder)
+    tr.shard_marks("scan.sublanes", n_per)
+    _note_load(holder, n_per)
+    m = _metrics(holder)
+    if m is not None:
+        for s in np.nonzero(n_per)[0]:
+            m.inc_shard("scan_sublanes", int(n_per[s]), int(s))
+        m.inc("scan_sublanes", int(n_per.sum()))
     if int(n_per.sum()) == 0:
         return out_k, out_v, out_c, out_t
     # Shards linked by a cross-shard lane form one validation component:
@@ -512,22 +551,23 @@ def scan_lanes(holder, lo_np, hi_np, cap, *, n_scan_ops, max_retries: int = 8):
         max_retries,
         groups,
     )
-    for i in range(bsz):
-        if not lane_subs[i]:
-            continue
-        parts_k, parts_v, truncated = [], [], False
-        for s, j in lane_subs[i]:  # shards ascending ⇒ keys ascending
-            c = int(g_c[s, j])
-            truncated = truncated or bool(g_t[s, j])
-            parts_k.append(g_k[s, j, :c])
-            parts_v.append(g_v[s, j, :c])
-        cat_k = np.concatenate(parts_k)
-        cat_v = np.concatenate(parts_v)
-        n = min(cat_k.size, cap)
-        out_k[i, :n] = cat_k[:n]
-        out_v[i, :n] = cat_v[:n]
-        out_c[i] = n
-        out_t[i] = truncated or cat_k.size > cap
+    with tr.span("router_stitch", lanes=bsz):
+        for i in range(bsz):
+            if not lane_subs[i]:
+                continue
+            parts_k, parts_v, truncated = [], [], False
+            for s, j in lane_subs[i]:  # shards ascending ⇒ keys ascending
+                c = int(g_c[s, j])
+                truncated = truncated or bool(g_t[s, j])
+                parts_k.append(g_k[s, j, :c])
+                parts_v.append(g_v[s, j, :c])
+            cat_k = np.concatenate(parts_k)
+            cat_v = np.concatenate(parts_v)
+            n = min(cat_k.size, cap)
+            out_k[i, :n] = cat_k[:n]
+            out_v[i, :n] = cat_v[:n]
+            out_c[i] = n
+            out_t[i] = truncated or cat_k.size > cap
     return out_k, out_v, out_c, out_t
 
 
@@ -555,54 +595,74 @@ def run_scan_phase(
     n_per_shard = np.asarray(n_per_shard)
     pending = n_per_shard > 0  # lane-less shards are trivially done
     retried = 0
+    tr = _tr(holder)
+    m = _metrics(holder)
     # a scan_hook writer may push a shard past max_keys_per_shard: the
     # split (which restacks to S+1 shards) must not fire under this
     # loop's (S, w) lane routing — defer it to the next update round.
     holder._scan_active += 1
     try:
-        for _attempt in range(max_retries):
-            snap = holder.stacked
-            out, touched = gather_until_frontier_fits(
-                holder,
-                lambda fc: _v_scan(
-                    snap, holder.cfg, lo_sw, hi_sw, fc, cap,
-                    holder.narrow_scan, holder.narrow,
-                ),
+        with tr.span("scan", lanes=int(n_per_shard.sum()), shards=n_s) as scan_sp:
+            for _attempt in range(max_retries):
+                snap = holder.stacked
+                with tr.span("scan.gather", attempt=_attempt) as sp:
+                    out, touched = gather_until_frontier_fits(
+                        holder,
+                        lambda fc: _v_scan(
+                            snap, holder.cfg, lo_sw, hi_sw, fc, cap,
+                            holder.narrow_scan, holder.narrow,
+                        ),
+                    )
+                    sp.fence((out, touched))
+                if holder.scan_hook is not None:
+                    holder.scan_hook()
+                with tr.span("scan.validate", attempt=_attempt):
+                    snap_ver = np.asarray(snap.ver)
+                    live_ver = np.asarray(holder.stacked.ver)
+                    touched_np = np.asarray(touched)
+                    shard_ok = np.zeros(n_s, bool)
+                    for s in np.nonzero(pending)[0]:
+                        ids = np.unique(touched_np[s])
+                        shard_ok[s] = np.array_equal(
+                            snap_ver[s][ids], live_ver[s][ids]
+                        )
+                    accept = np.zeros(n_s, bool)
+                    for g in np.unique(groups[pending]):
+                        members = pending & (groups == g)
+                        if shard_ok[members].all():
+                            accept |= members
+                        else:  # whole component re-gathers next attempt
+                            retried += int(n_per_shard[members].sum())
+                            if m is not None:
+                                for s in np.nonzero(members)[0]:
+                                    m.inc_shard(
+                                        "scan_retries",
+                                        int(n_per_shard[s]), int(s),
+                                    )
+                            tr.shard_marks(
+                                "scan.retry",
+                                np.where(members, n_per_shard, 0),
+                                attempt=_attempt,
+                            )
+                if accept.any():
+                    k_np = np.asarray(out.keys)
+                    v_np = np.asarray(out.vals)
+                    c_np = np.asarray(out.count)
+                    t_np = np.asarray(out.truncated)
+                    for s in np.nonzero(accept)[0]:
+                        buf_k[s] = k_np[s]
+                        buf_v[s] = v_np[s]
+                        buf_c[s] = c_np[s]
+                        buf_t[s] = t_np[s]
+                    pending &= ~accept
+                if not pending.any():
+                    holder._scan_retries += retried
+                    scan_sp.note(retries=retried, attempts=_attempt + 1)
+                    return buf_k, buf_v, buf_c, buf_t
+            raise ScanConflictError(
+                f"scan phase: version validation failed {max_retries} "
+                f"times on shards {np.nonzero(pending)[0].tolist()}"
             )
-            if holder.scan_hook is not None:
-                holder.scan_hook()
-            snap_ver = np.asarray(snap.ver)
-            live_ver = np.asarray(holder.stacked.ver)
-            touched_np = np.asarray(touched)
-            shard_ok = np.zeros(n_s, bool)
-            for s in np.nonzero(pending)[0]:
-                ids = np.unique(touched_np[s])
-                shard_ok[s] = np.array_equal(snap_ver[s][ids], live_ver[s][ids])
-            accept = np.zeros(n_s, bool)
-            for g in np.unique(groups[pending]):
-                members = pending & (groups == g)
-                if shard_ok[members].all():
-                    accept |= members
-                else:  # whole component re-gathers next attempt
-                    retried += int(n_per_shard[members].sum())
-            if accept.any():
-                k_np = np.asarray(out.keys)
-                v_np = np.asarray(out.vals)
-                c_np = np.asarray(out.count)
-                t_np = np.asarray(out.truncated)
-                for s in np.nonzero(accept)[0]:
-                    buf_k[s] = k_np[s]
-                    buf_v[s] = v_np[s]
-                    buf_c[s] = c_np[s]
-                    buf_t[s] = t_np[s]
-                pending &= ~accept
-            if not pending.any():
-                holder._scan_retries += retried
-                return buf_k, buf_v, buf_c, buf_t
-        raise ScanConflictError(
-            f"scan phase: version validation failed {max_retries} "
-            f"times on shards {np.nonzero(pending)[0].tolist()}"
-        )
     finally:
         holder._scan_active -= 1
 
@@ -670,15 +730,27 @@ def run_point_phases(holder, ops_sw, keys_sw, vals_sw):
 def _combine_apply(holder, ops_sw, keys_sw, vals_sw):
     """Elim-ABtree: every shard's batch runs one combine; ≤ 1 net write per
     key per shard."""
-    holder.stacked, pack = _v_search_combine(
-        holder.stacked, (ops_sw, keys_sw, vals_sw), holder.cfg, holder.narrow
-    )
+    tr = _tr(holder)
+    with tr.span("search_combine") as sp:
+        holder.stacked, pack = _v_search_combine(
+            holder.stacked, (ops_sw, keys_sw, vals_sw), holder.cfg,
+            holder.narrow,
+        )
+        sp.fence(pack)
     ks, arrival, leaf_ids, slot, res, results, found = pack
-    holder.stacked, deferred = _v_apply(
-        holder.stacked, holder.cfg, ks, arrival, leaf_ids, slot, res
-    )
-    _drain_deferred(holder, ks, res.final_val, arrival, deferred)
-    _fix_underfull_all(holder)
+    with tr.span("apply") as sp:
+        holder.stacked, deferred = _v_apply(
+            holder.stacked, holder.cfg, ks, arrival, leaf_ids, slot, res
+        )
+        sp.fence(holder.stacked)
+    # retry and rebalance spans are emitted even when the phase has no
+    # work: a trace of any round shows the full five-phase pipeline.
+    with tr.span("retry") as sp:
+        passes = _drain_deferred(holder, ks, res.final_val, arrival, deferred)
+        sp.note(passes=passes)
+    with tr.span("rebalance") as sp:
+        waves, shrinks = _fix_underfull_all(holder)
+        sp.note(waves=waves, shrinks=shrinks)
     return results, found
 
 
@@ -705,13 +777,20 @@ def _occ_round(holder, ops_sw, keys_sw, vals_sw):
     results = jnp.full((n_s, w), NOTFOUND, VAL_DTYPE)
     found = jnp.zeros((n_s, w), bool)
     rank_j = jnp.asarray(rank)
+    tr = _tr(holder)
+    reg = _metrics(holder)
     for r in range(n_sub):
         active = shard_max >= r  # (S,) host bools: shard executes r
         m = (rank_j == r) & (ops_sw != OP_NOP)
         sub_ops = jnp.where(m, ops_sw, OP_NOP).astype(jnp.int32)
-        sub_res, sub_found = _combine_apply(holder, sub_ops, keys_sw, vals_sw)
+        with tr.span("occ_subround", subround=r, active=int(active.sum())):
+            sub_res, sub_found = _combine_apply(
+                holder, sub_ops, keys_sw, vals_sw
+            )
         results = jnp.where(m, sub_res, results)
         found = jnp.where(m, sub_found, found)
+        if reg is not None:
+            reg.inc("occ_subrounds", int(active.sum()))
         st = holder.stacked
         holder.stacked = st._replace(
             stats=st.stats._replace(
@@ -725,11 +804,14 @@ def _occ_round(holder, ops_sw, keys_sw, vals_sw):
 
 def _drain_deferred(holder, ks, final_vals, arrival, deferred):
     """Retry phase: split overflowing leaves and re-apply deferred inserts
-    until none remain (all shards per wave)."""
+    until none remain (all shards per wave).  Returns the pass count."""
     guard = 0
+    reg = _metrics(holder)
     while bool(jnp.any(deferred)):
         guard += 1
         assert guard < 512 * holder.cfg.max_height, "split loop diverged"
+        if reg is not None:
+            reg.inc("retry_passes")
         uniq = np.asarray(
             _v_overfull(holder.stacked, holder.cfg, ks, deferred, holder.narrow)
         )
@@ -740,6 +822,7 @@ def _drain_deferred(holder, ks, final_vals, arrival, deferred):
             holder.stacked, holder.cfg, ks, final_vals, arrival, deferred,
             holder.narrow,
         )
+    return guard
 
 
 def _split_cascade(holder, ids_per_shard: List[np.ndarray]):
@@ -789,10 +872,20 @@ def _split_cascade(holder, ids_per_shard: List[np.ndarray]):
         for s, rd in enumerate(ready_rows):
             node_ids[s, : rd.size] = rd
             active[s, : rd.size] = True
-        holder.stacked = _v_split(
-            holder.stacked, holder.cfg, holder._wave_w,
-            jnp.asarray(node_ids), jnp.asarray(active),
-        )
+        tr = _tr(holder)
+        with tr.span("split_wave", wave=guard) as sp:
+            holder.stacked = _v_split(
+                holder.stacked, holder.cfg, holder._wave_w,
+                jnp.asarray(node_ids), jnp.asarray(active),
+            )
+            sp.fence(holder.stacked)
+        reg = _metrics(holder)
+        if reg is not None:
+            reg.inc("split_waves")
+            for s, rd in enumerate(ready_rows):
+                if rd.size:
+                    reg.inc("split_nodes", int(rd.size), shard=s)
+        tr.shard_marks("split_wave.nodes", [int(r.size) for r in ready_rows])
         for s, rd in enumerate(ready_rows):
             for n in rd.tolist():
                 work[s].discard(int(n))
@@ -802,8 +895,11 @@ def _split_cascade(holder, ids_per_shard: List[np.ndarray]):
 def _fix_underfull_all(holder):
     """Rebalance phase: merge/distribute every shard's underfull non-root
     nodes, bottom-up vmapped waves; root shrink once a shard has no
-    actionable wave."""
+    actionable wave.  Returns (wave count, shrink count)."""
     n_s = holder.n_shards
+    tr = _tr(holder)
+    reg = _metrics(holder)
+    n_waves = n_shrinks = 0
     guard = 0
     while True:
         guard += 1
@@ -842,17 +938,30 @@ def _fix_underfull_all(holder):
             for s, sel in enumerate(sel_rows):
                 node_ids[s, : sel.size] = sel
                 active[s, : sel.size] = True
-            holder.stacked = _v_underfull(
-                holder.stacked, holder.cfg, holder._wave_w,
-                jnp.asarray(node_ids), jnp.asarray(active),
+            with tr.span("underfull_wave", wave=guard) as sp:
+                holder.stacked = _v_underfull(
+                    holder.stacked, holder.cfg, holder._wave_w,
+                    jnp.asarray(node_ids), jnp.asarray(active),
+                )
+                sp.fence(holder.stacked)
+            n_waves += 1
+            if reg is not None:
+                reg.inc("underfull_waves")
+            tr.shard_marks(
+                "underfull_wave.nodes", [int(r.size) for r in sel_rows]
             )
             continue
         if want_shrink:
             # per-shard `can` guard inside shrink_root makes the vmapped
             # call exact: only single-child internal roots collapse.
-            holder.stacked = _v_shrink(holder.stacked, holder.cfg)
+            with tr.span("root_shrink"):
+                holder.stacked = _v_shrink(holder.stacked, holder.cfg)
+            n_shrinks += 1
+            if reg is not None:
+                reg.inc("root_shrinks")
             continue
         break
+    return n_waves, n_shrinks
 
 
 # ----------------------------------------------------------------------------
@@ -883,73 +992,87 @@ def execute_plan(holder, plan: RoundPlan) -> RoundOutput:
             found=jnp.zeros((0,), bool),
             scan=None,
         )
-    ops_np = np.asarray(plan.ops)
-    keys_np = np.asarray(plan.keys)
-    vals_np = np.asarray(plan.vals)
-    is_point_j, is_range_j = elim.lane_masks(plan.ops)
-    is_point = np.asarray(is_point_j)
-    is_range = np.asarray(is_range_j)
+    tr = _tr(holder)
+    reg = _metrics(holder)
+    with tr.span("round", lanes=bsz, shards=n_shards):
+        ops_np = np.asarray(plan.ops)
+        keys_np = np.asarray(plan.keys)
+        vals_np = np.asarray(plan.vals)
+        is_point_j, is_range_j = elim.lane_masks(plan.ops)
+        is_point = np.asarray(is_point_j)
+        is_range = np.asarray(is_range_j)
 
-    results = np.full((bsz,), int(NOTFOUND), np.int64)
-    found = np.zeros((bsz,), bool)
+        results = np.full((bsz,), int(NOTFOUND), np.int64)
+        found = np.zeros((bsz,), bool)
 
-    # --- scan phase first: range lanes linearize before the round's writes.
-    scan_out = None
-    if plan.has_range:
-        rl = np.nonzero(is_range)[0]
-        lo_np = np.asarray(plan.lo)[rl]
-        hi_np = np.asarray(plan.hi)[rl]
-        k_, v_, c_, t_ = scan_lanes(
-            holder, lo_np, hi_np, plan.scan_cap, n_scan_ops=plan.n_range
+        # --- scan phase first: range lanes linearize before the round's
+        # writes.
+        scan_out = None
+        if plan.has_range:
+            rl = np.nonzero(is_range)[0]
+            lo_np = np.asarray(plan.lo)[rl]
+            hi_np = np.asarray(plan.hi)[rl]
+            k_, v_, c_, t_ = scan_lanes(
+                holder, lo_np, hi_np, plan.scan_cap, n_scan_ops=plan.n_range
+            )
+            keys_full = np.full((bsz, plan.scan_cap), int(EMPTY), np.int64)
+            vals_full = np.zeros((bsz, plan.scan_cap), np.int64)
+            count_full = np.zeros((bsz,), np.int32)
+            trunc_full = np.zeros((bsz,), bool)
+            keys_full[rl] = k_
+            vals_full[rl] = v_
+            count_full[rl] = c_
+            trunc_full[rl] = t_
+            scan_out = ScanOutput(
+                keys=jnp.asarray(keys_full),
+                vals=jnp.asarray(vals_full),
+                count=jnp.asarray(count_full),
+                truncated=jnp.asarray(trunc_full),
+            )
+            results[rl] = c_.astype(np.int64)
+            found[rl] = c_ > 0
+
+        # --- point lanes: pack per shard (stable ⇒ arrival order kept).
+        if plan.has_point:
+            pl = np.nonzero(is_point)[0]
+            with tr.span("router_pack", lanes=int(pl.size)):
+                shard = np.searchsorted(
+                    holder._splits, keys_np[pl], side="right"
+                )
+                counts = np.bincount(shard, minlength=n_shards)
+                w = _pow2(int(counts.max()))
+                ops_sw = np.full((n_shards, w), OP_NOP, np.int32)
+                keys_sw = np.zeros((n_shards, w), np.int64)
+                vals_sw = np.zeros((n_shards, w), np.int64)
+                shard_sorted, slot_sorted, order = _pack_slots(shard, n_shards)
+                ops_sw[shard_sorted, slot_sorted] = ops_np[pl][order]
+                keys_sw[shard_sorted, slot_sorted] = keys_np[pl][order]
+                vals_sw[shard_sorted, slot_sorted] = vals_np[pl][order]
+                slot = np.empty(pl.size, np.int64)
+                slot[order] = slot_sorted
+            tr.shard_marks("point_lanes", counts)
+            _note_load(holder, counts)
+            if reg is not None:
+                reg.inc("point_lanes", int(pl.size))
+                for s in np.nonzero(counts)[0]:
+                    reg.inc_shard("point_lanes", int(counts[s]), int(s))
+            holder._ensure_capacity(w)
+            res_sw, fnd_sw = run_point_phases(
+                holder,
+                jnp.asarray(ops_sw),
+                jnp.asarray(keys_sw, KEY_DTYPE),
+                jnp.asarray(vals_sw, VAL_DTYPE),
+            )
+            results[pl] = np.asarray(res_sw)[shard, slot]
+            found[pl] = np.asarray(fnd_sw)[shard, slot]
+
+        holder._rounds += 1
+        out = RoundOutput(
+            results=jnp.asarray(results, VAL_DTYPE),
+            found=jnp.asarray(found),
+            scan=scan_out,
         )
-        keys_full = np.full((bsz, plan.scan_cap), int(EMPTY), np.int64)
-        vals_full = np.zeros((bsz, plan.scan_cap), np.int64)
-        count_full = np.zeros((bsz,), np.int32)
-        trunc_full = np.zeros((bsz,), bool)
-        keys_full[rl] = k_
-        vals_full[rl] = v_
-        count_full[rl] = c_
-        trunc_full[rl] = t_
-        scan_out = ScanOutput(
-            keys=jnp.asarray(keys_full),
-            vals=jnp.asarray(vals_full),
-            count=jnp.asarray(count_full),
-            truncated=jnp.asarray(trunc_full),
-        )
-        results[rl] = c_.astype(np.int64)
-        found[rl] = c_ > 0
-
-    # --- point lanes: pack per shard (stable ⇒ arrival order kept).
-    if plan.has_point:
-        pl = np.nonzero(is_point)[0]
-        shard = np.searchsorted(holder._splits, keys_np[pl], side="right")
-        w = _pow2(int(np.bincount(shard, minlength=n_shards).max()))
-        ops_sw = np.full((n_shards, w), OP_NOP, np.int32)
-        keys_sw = np.zeros((n_shards, w), np.int64)
-        vals_sw = np.zeros((n_shards, w), np.int64)
-        shard_sorted, slot_sorted, order = _pack_slots(shard, n_shards)
-        ops_sw[shard_sorted, slot_sorted] = ops_np[pl][order]
-        keys_sw[shard_sorted, slot_sorted] = keys_np[pl][order]
-        vals_sw[shard_sorted, slot_sorted] = vals_np[pl][order]
-        slot = np.empty(pl.size, np.int64)
-        slot[order] = slot_sorted
-        holder._ensure_capacity(w)
-        res_sw, fnd_sw = run_point_phases(
-            holder,
-            jnp.asarray(ops_sw),
-            jnp.asarray(keys_sw, KEY_DTYPE),
-            jnp.asarray(vals_sw, VAL_DTYPE),
-        )
-        results[pl] = np.asarray(res_sw)[shard, slot]
-        found[pl] = np.asarray(fnd_sw)[shard, slot]
-
-    holder._rounds += 1
-    out = RoundOutput(
-        results=jnp.asarray(results, VAL_DTYPE),
-        found=jnp.asarray(found),
-        scan=scan_out,
-    )
-    holder._maybe_split_shards()
+        holder._maybe_split_shards()
     return out
 
 
@@ -965,27 +1088,39 @@ def execute_scan_delete(holder, lo, hi, cap: int = 128, max_retries: int = 8) ->
     lo = np.atleast_1d(np.asarray(lo, np.int64))
     hi = np.atleast_1d(np.asarray(hi, np.int64))
     assert lo.shape == hi.shape and lo.ndim == 1
-    k_, v_, c_, t_ = scan_lanes(
-        holder, lo, hi, cap, n_scan_ops=int(lo.size), max_retries=max_retries
-    )
-    del_keys = k_[k_ != int(EMPTY)]
-    if del_keys.size:
-        n_shards = holder.n_shards
-        shard = np.searchsorted(holder._splits, del_keys, side="right")
-        w = _pow2(int(np.bincount(shard, minlength=n_shards).max()))
-        ops_sw = np.full((n_shards, w), OP_NOP, np.int32)
-        keys_sw = np.zeros((n_shards, w), np.int64)
-        shard_sorted, slot_sorted, order = _pack_slots(shard, n_shards)
-        ops_sw[shard_sorted, slot_sorted] = OP_DELETE
-        keys_sw[shard_sorted, slot_sorted] = del_keys[order]
-        holder._ensure_capacity(w)
-        run_point_phases(
-            holder,
-            jnp.asarray(ops_sw),
-            jnp.asarray(keys_sw, KEY_DTYPE),
-            jnp.zeros((n_shards, w), VAL_DTYPE),
+    tr = _tr(holder)
+    reg = _metrics(holder)
+    with tr.span("round", lanes=int(lo.size), fused="scan_delete"):
+        k_, v_, c_, t_ = scan_lanes(
+            holder, lo, hi, cap, n_scan_ops=int(lo.size),
+            max_retries=max_retries,
         )
-    holder._rounds += 1
+        del_keys = k_[k_ != int(EMPTY)]
+        if del_keys.size:
+            n_shards = holder.n_shards
+            with tr.span("router_pack", lanes=int(del_keys.size)):
+                shard = np.searchsorted(holder._splits, del_keys, side="right")
+                counts = np.bincount(shard, minlength=n_shards)
+                w = _pow2(int(counts.max()))
+                ops_sw = np.full((n_shards, w), OP_NOP, np.int32)
+                keys_sw = np.zeros((n_shards, w), np.int64)
+                shard_sorted, slot_sorted, order = _pack_slots(shard, n_shards)
+                ops_sw[shard_sorted, slot_sorted] = OP_DELETE
+                keys_sw[shard_sorted, slot_sorted] = del_keys[order]
+            tr.shard_marks("point_lanes", counts)
+            _note_load(holder, counts)
+            if reg is not None:
+                reg.inc("point_lanes", int(del_keys.size))
+                for s in np.nonzero(counts)[0]:
+                    reg.inc_shard("point_lanes", int(counts[s]), int(s))
+            holder._ensure_capacity(w)
+            run_point_phases(
+                holder,
+                jnp.asarray(ops_sw),
+                jnp.asarray(keys_sw, KEY_DTYPE),
+                jnp.zeros((n_shards, w), VAL_DTYPE),
+            )
+        holder._rounds += 1
     return ScanOutput(
         keys=jnp.asarray(k_),
         vals=jnp.asarray(v_),

@@ -1,0 +1,37 @@
+"""Round-engine telemetry: phase tracing, per-shard metrics, exporters.
+
+Three cooperating layers, all host-side (nothing here ever enters a jitted
+program — the overhead guarantee the spy tests pin):
+
+  * :mod:`repro.obs.tracer` — ``Tracer``: span timers around every phase of
+    the ``core/rounds.py`` pipeline (``scan → search/combine → apply →
+    retry → rebalance``, plus occ sub-rounds, structural waves, router
+    pack/stitch, journal flushes, manifest commits, serve ticks).  Fences
+    with ``jax.block_until_ready`` ONLY when enabled; disabled it is a
+    single attribute check returning a shared no-op span.
+  * :mod:`repro.obs.metrics` — ``MetricsRegistry``: counters / gauges /
+    histograms with optional per-shard attribution, one queryable
+    ``snapshot()`` absorbing the engine's scattered counter surfaces
+    (``_rounds`` / ``_scans`` / ``_scan_retries`` / ``DurableStats`` /
+    device ``TreeStats``).
+  * :mod:`repro.obs.trace_export` / :mod:`repro.obs.report` /
+    :mod:`repro.obs.hlo_audit` — Chrome trace-event JSON (Perfetto-
+    loadable), the phase/shard breakdown CLI, and the reusable HLO
+    sort/gather audit.
+
+See ``src/repro/obs/README.md`` for the contract and overhead guarantees.
+"""
+from repro.obs.metrics import (
+    MetricsRegistry,
+    RegistryBackedCounters,
+    engine_collector,
+)
+from repro.obs.tracer import NULL_TRACER, Tracer
+
+__all__ = [
+    "MetricsRegistry",
+    "RegistryBackedCounters",
+    "Tracer",
+    "NULL_TRACER",
+    "engine_collector",
+]

@@ -1,0 +1,101 @@
+"""Reusable HLO structure audit: count ops in lowered phase programs.
+
+Promotes the ad-hoc sort/gather counting that lived in
+``benchmarks/kernels_bench._hlo_op_counts`` into a shared surface used by
+both the bench and the no-sort trace tests (``tests/test_tree_descend.py``)
+— one place that knows how to lower the round engine's phases and inspect
+the resulting StableHLO text.
+
+The audit is also the enforcement arm of the tracer's overhead contract:
+because tracing is host-side, ``lower(...).as_text()`` of any phase is
+byte-identical with tracing enabled or disabled — ``test_obs.py`` pins
+that with :func:`lower_text` snapshots.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterable, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "count_ops",
+    "lower_text",
+    "audit_search_phases",
+    "assert_no_sort",
+]
+
+# StableHLO ops worth counting when auditing the search/scan pipeline:
+# sorts are the structural cost the device-resident descent removes,
+# gathers approximate indexed-load traffic, while/scatter bound control
+# and write structure.
+DEFAULT_OPS: Tuple[str, ...] = (
+    "stablehlo.sort",
+    "stablehlo.gather",
+    "stablehlo.scatter",
+    "stablehlo.while",
+)
+
+
+def count_ops(hlo_text: str, ops: Iterable[str] = DEFAULT_OPS) -> Dict[str, int]:
+    """Occurrences of each op mnemonic in lowered StableHLO text."""
+    return {op: hlo_text.count(op) for op in ops}
+
+
+def lower_text(fn, *args, **kwargs) -> str:
+    """StableHLO text of ``fn`` lowered at these args (jitted fns expose
+    ``.lower`` directly; plain callables are jitted first)."""
+    lowered = fn.lower(*args, **kwargs) if hasattr(fn, "lower") else jax.jit(fn).lower(*args, **kwargs)
+    return lowered.as_text()
+
+
+def assert_no_sort(hlo_text: str, what: str = "program") -> None:
+    n = hlo_text.count("stablehlo.sort")
+    if n:
+        raise AssertionError(f"{what}: expected sort-free HLO, found {n} stablehlo.sort op(s)")
+
+
+def audit_search_phases(ops: Iterable[str] = DEFAULT_OPS) -> Dict[str, Dict[str, int]]:
+    """Lower the round engine's search/scan phases on a small populated
+    tree and count ``ops`` in each — the audit ``kernels_bench`` records
+    and the no-sort tests assert against.
+
+    Returns ``{program_name: {op: count}}`` for:
+      * ``scan_descent``       — ``frontier_expand`` (tree_descend path)
+      * ``scan_phase.narrow``  — ``rounds._phase_scan`` narrow descent
+      * ``search.ref``         — ``rounds._phase_search_combine`` jnp oracle
+      * ``search.narrow``      — same phase on the fused narrow path
+    """
+    from repro.core import ABTree, OP_INSERT, TreeConfig
+    from repro.core import rounds as R
+    from repro.core.abtree import frontier_expand
+
+    t = ABTree(TreeConfig(capacity=2048, b=8, a=2, max_height=12))
+    rng = np.random.default_rng(0)
+    keys = rng.choice(10**6, size=600, replace=False).astype(np.int64)
+    t.apply_round(np.full(600, OP_INSERT, np.int32), keys, keys)
+    lo = jnp.asarray([0, 10**5], jnp.int64)
+    hi = jnp.asarray([10**4, 10**6], jnp.int64)
+    fe = jax.jit(
+        functools.partial(frontier_expand, frontier_cap=16), static_argnums=(1,)
+    )
+    batch = (
+        jnp.zeros((256,), jnp.int32) + np.int32(OP_INSERT),
+        jnp.asarray(rng.integers(0, 10**6, 256), jnp.int64),
+        jnp.zeros((256,), jnp.int64),
+    )
+    programs = {
+        "scan_descent": fe.lower(t.state, t.cfg, lo, hi).as_text(),
+        "scan_phase.narrow": R._phase_scan.lower(
+            t.state, t.cfg, lo, hi, 16, 32, True, True
+        ).as_text(),
+        "search.ref": R._phase_search_combine.lower(
+            t.state, batch, t.cfg, False
+        ).as_text(),
+        "search.narrow": R._phase_search_combine.lower(
+            t.state, batch, t.cfg, True
+        ).as_text(),
+    }
+    return {name: count_ops(txt, ops) for name, txt in programs.items()}

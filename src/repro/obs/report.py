@@ -1,0 +1,85 @@
+"""Phase/shard breakdown report from a Chrome trace-event file.
+
+    PYTHONPATH=src python -m repro.obs.report results/trace_ycsb_a.json
+
+Validates the trace schema first (non-zero exit on violations), then
+renders two tables: total/mean duration per span name (track 0, the
+engine's sequencing thread) and per-shard lane attribution (instants on
+tracks 1+s).  This is the quick look; load the same file in Perfetto for
+the timeline view.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import defaultdict
+
+from repro.obs.trace_export import load_trace, validate_trace
+
+__all__ = ["render_report", "main"]
+
+
+def render_report(doc: dict) -> str:
+    spans = defaultdict(lambda: [0, 0.0])  # name -> [count, total_us]
+    shard_lanes = defaultdict(lambda: defaultdict(int))  # name -> shard -> lanes
+    shard_events = defaultdict(lambda: defaultdict(int))  # name -> shard -> count
+    for ev in doc.get("traceEvents", []):
+        ph = ev.get("ph")
+        tid = int(ev.get("tid", 0))
+        if ph == "X" and tid == 0:
+            agg = spans[ev["name"]]
+            agg[0] += 1
+            agg[1] += float(ev.get("dur", 0.0))
+        elif ph == "i" and tid >= 1:
+            s = tid - 1
+            shard_events[ev["name"]][s] += 1
+            shard_lanes[ev["name"]][s] += int((ev.get("args") or {}).get("lanes", 0))
+
+    lines = []
+    lines.append("phase breakdown (engine track)")
+    lines.append(f"  {'span':<24} {'count':>7} {'total_ms':>10} {'mean_us':>10}")
+    for name, (cnt, tot) in sorted(spans.items(), key=lambda kv: -kv[1][1]):
+        lines.append(
+            f"  {name:<24} {cnt:>7} {tot / 1e3:>10.3f} {tot / max(cnt, 1):>10.1f}"
+        )
+    if not spans:
+        lines.append("  (no spans)")
+
+    lines.append("")
+    lines.append("per-shard attribution (lane counts)")
+    all_shards = sorted({s for per in shard_lanes.values() for s in per})
+    if all_shards:
+        hdr = "  " + f"{'event':<24}" + "".join(f"{'s' + str(s):>10}" for s in all_shards)
+        lines.append(hdr)
+        for name in sorted(shard_lanes):
+            row = f"  {name:<24}"
+            for s in all_shards:
+                row += f"{shard_lanes[name][s]:>10}"
+            lines.append(row)
+    else:
+        lines.append("  (no per-shard events)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Validate + summarize a Chrome trace-event file.",
+    )
+    ap.add_argument("trace", help="path to a trace JSON exported by Tracer.export")
+    args = ap.parse_args(argv)
+
+    doc = load_trace(args.trace)
+    errs = validate_trace(doc)
+    if errs:
+        for e in errs[:20]:
+            print(f"schema error: {e}", file=sys.stderr)
+        print(f"{len(errs)} schema violation(s) in {args.trace}", file=sys.stderr)
+        return 1
+    print(f"{args.trace}: {len(doc.get('traceEvents', []))} events, schema OK")
+    print(render_report(doc))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

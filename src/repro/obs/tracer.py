@@ -1,0 +1,173 @@
+"""Low-overhead span tracer for the host-sequenced round engine.
+
+The round engine is host code sequencing jitted phase kernels, so tracing
+lives entirely on the host: a span wraps one phase's kernel launch and
+fences (``jax.block_until_ready``) before taking the end timestamp, so the
+recorded duration covers the device work, not just the dispatch.
+
+Overhead contract (pinned by ``tests/test_obs.py``):
+
+  * **Disabled** (``enabled=False``, or no tracer installed on the
+    holder): ``span()`` returns a shared no-op context manager; ``fence``
+    is the identity; NO ``block_until_ready`` is ever issued and nothing
+    is recorded.  Because the tracer never appears inside ``jax.jit``,
+    the jitted round lowers to byte-identical HLO with tracing on or off
+    — zero added device ops, zero recompiles.
+  * **Enabled**: one ``perf_counter`` pair + one dict append per span,
+    plus the explicit fences.  Fencing serializes host/device overlap, so
+    an enabled tracer is a measurement tool, not a production default.
+
+Events use the Chrome trace-event model (complete events ``ph="X"``,
+instants ``ph="i"``, counters ``ph="C"``) so export is a dump, not a
+transform — see ``repro.obs.trace_export``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+__all__ = ["Tracer", "NULL_TRACER"]
+
+
+class _NullSpan:
+    """Shared do-nothing span: the whole disabled fast path."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def fence(self, x):
+        return x
+
+    def note(self, **kw):
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "name", "shard", "args", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, shard, args: dict):
+        self._tracer = tracer
+        self.name = name
+        self.shard = shard
+        self.args = args
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def fence(self, x):
+        """Block until ``x``'s device work completes (enabled path only):
+        the span's duration then covers the kernels it launched."""
+        return jax.block_until_ready(x)
+
+    def note(self, **kw):
+        """Attach key/values to the span's args (visible in the trace)."""
+        self.args.update(kw)
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        tr = self._tracer
+        tr.events.append(
+            {
+                "name": self.name,
+                "ph": "X",
+                "ts": (self._t0 - tr._epoch) * 1e6,
+                "dur": (t1 - self._t0) * 1e6,
+                "pid": tr.pid,
+                "tid": 0 if self.shard is None else 1 + int(self.shard),
+                "args": self.args,
+            }
+        )
+        return False
+
+
+class Tracer:
+    """Span/instant/counter recorder in Chrome trace-event form.
+
+    ``tid`` convention: track 0 is the engine's sequencing thread (phase
+    spans); track ``1 + s`` is shard ``s``'s attribution track (per-shard
+    instants/counters).  ``export(path)`` writes Perfetto-loadable JSON.
+    """
+
+    def __init__(self, enabled: bool = True, *, pid: int = 0):
+        self.enabled = enabled
+        self.pid = pid
+        self.events: List[Dict] = []
+        self._epoch = time.perf_counter()
+
+    # -- recording -------------------------------------------------------------
+
+    def span(self, name: str, *, shard: Optional[int] = None, **args):
+        """Context manager timing one phase.  ``with tracer.span("apply")
+        as sp: out = kernel(...); sp.fence(out)``."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, shard, args)
+
+    def instant(self, name: str, *, shard: Optional[int] = None, **args):
+        """Zero-duration marker (per-shard attribution events)."""
+        if not self.enabled:
+            return
+        self.events.append(
+            {
+                "name": name,
+                "ph": "i",
+                "s": "t",
+                "ts": (time.perf_counter() - self._epoch) * 1e6,
+                "pid": self.pid,
+                "tid": 0 if shard is None else 1 + int(shard),
+                "args": args,
+            }
+        )
+
+    def counter(self, name: str, value, *, shard: Optional[int] = None):
+        """Chrome counter-track sample (rendered as a graph in Perfetto)."""
+        if not self.enabled:
+            return
+        self.events.append(
+            {
+                "name": name,
+                "ph": "C",
+                "ts": (time.perf_counter() - self._epoch) * 1e6,
+                "pid": self.pid,
+                "tid": 0 if shard is None else 1 + int(shard),
+                "args": {"value": float(value)},
+            }
+        )
+
+    def shard_marks(self, name: str, per_shard, **extra):
+        """One instant per shard with non-zero work: the per-shard
+        attribution of a vmapped phase (the vmap spans all shards in one
+        launch, so per-shard *time* is unobservable from the host — lane
+        counts are the honest per-shard cost signal)."""
+        if not self.enabled:
+            return
+        for s, n in enumerate(per_shard):
+            if int(n):
+                self.instant(name, shard=s, lanes=int(n), **extra)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def clear(self):
+        self.events.clear()
+        self._epoch = time.perf_counter()
+
+    def export(self, path: str) -> str:
+        """Write the Chrome trace-event JSON file (Perfetto-loadable)."""
+        from repro.obs.trace_export import write_chrome_trace
+
+        return write_chrome_trace(path, self)
+
+
+# The disabled singleton holders fall back to when no tracer is installed.
+NULL_TRACER = Tracer(enabled=False)

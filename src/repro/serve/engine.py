@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from repro.models import backbone, init_params
 from repro.models.config import ModelConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import NULL_TRACER
 from repro.serve.pages import (
     PAGE,
     PagedKVCache,
@@ -95,6 +97,11 @@ class ServeEngine:
                 else os.path.join(index_durable_dir, "sessions")
             ),
         )
+        # engine-level telemetry: tick latency + scheduler counters live in
+        # the engine's own registry; the index holders keep theirs (round
+        # phases, journal flushes) — stats() stitches both surfaces.
+        self.metrics = MetricsRegistry()
+        self._tracer = NULL_TRACER
         self._evict_floor = 0  # session ids below this are already swept
         self._retired_since_sweep = 0
         self._max_rid = -1  # highest session id ever admitted
@@ -112,6 +119,18 @@ class ServeEngine:
         )
 
     # ------------------------------------------------------------------ --
+
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, t):
+        # one tracer for the whole stack: installing it here also times the
+        # round-engine phases (and journal commits) under both indexes.
+        self._tracer = t
+        self.index.tree.tracer = t
+        self.sessions.tree.tracer = t
 
     def submit(self, req: Request):
         req.t_submit = time.time()
@@ -131,6 +150,7 @@ class ServeEngine:
                     break
                 n_hit += 1
             req.cache_hit_blocks = n_hit
+            self.metrics.inc("cache_hit_blocks", n_hit)
             need_pages = max(1, (len(req.prompt) + req.max_new + PAGE - 1) // PAGE)
             pages = self.kv.alloc(req.rid, need_pages)
             if pages is None:
@@ -147,6 +167,7 @@ class ServeEngine:
             # prompt tokens streamed token-by-token into the slot's cache)
             self.slots[slot] = req.rid
             self.running[req.rid] = req
+            self.metrics.inc("admitted")
             self.pos[slot] = 0
             for tok in req.prompt[:-1]:
                 self._step_slot(slot, tok)
@@ -163,7 +184,16 @@ class ServeEngine:
 
     def tick(self):
         """One scheduler iteration: admit + fused decode for all running."""
-        self._admit()
+        t0 = time.perf_counter()
+        tr = self._tracer
+        with tr.span("serve.tick"):
+            self._tick_body(tr)
+        self.metrics.inc("ticks")
+        self.metrics.observe("tick_latency_s", time.perf_counter() - t0)
+
+    def _tick_body(self, tr):
+        with tr.span("serve.admit", waiting=len(self.waiting)):
+            self._admit()
         active = [s for s in range(self.max_batch) if self.slots[s] is not None]
         if not active:
             return
@@ -175,10 +205,13 @@ class ServeEngine:
         # per-slot positions aligned by admitting same-length prompts or by
         # per-slot stepping during prefill.  Fused decode uses max pos.
         pos = int(self.pos[active].max())
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
-        )
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        with tr.span("serve.decode", lanes=len(active)) as sp:
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
+            )
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            sp.fence(self.cache)
+        self.metrics.inc("decode_tokens", len(active))
         for s in active:
             rid = self.slots[s]
             req = self.running[rid]
@@ -186,13 +219,15 @@ class ServeEngine:
             req._last_tok = int(nxt[s])
             self.pos[s] = pos + 1
             if len(req.out) >= req.max_new or self.pos[s] >= self.s_max - 1:
-                self._retire(s)
+                with tr.span("serve.retire", slot=s):
+                    self._retire(s)
 
     def _retire(self, slot: int):
         rid = self.slots[slot]
         req = self.running.pop(rid)
         req.t_done = time.time()
         self.done.append(req)
+        self.metrics.inc("retired")
         self.slots[slot] = None
         self.kv.release(rid)
         # session churn: hot prompts get re-inserted by the next request —
@@ -229,4 +264,8 @@ class ServeEngine:
         s["n_done"] = len(self.done)
         s["mean_latency_s"] = float(np.mean(lat)) if lat else 0.0
         s["cache_hit_blocks"] = sum(r.cache_hit_blocks for r in self.done)
+        s["ticks"] = self.metrics.value("ticks")
+        s["tick_latency"] = self.metrics.histogram_summary("tick_latency_s")
+        s["metrics"] = self.metrics.snapshot()
+        s["index_metrics"] = self.index.tree.metrics.snapshot()
         return s

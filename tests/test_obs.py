@@ -1,0 +1,241 @@
+"""Observability subsystem: tracer overhead contract (no fences, no HLO
+delta when disabled), metrics-registry/legacy-counter equivalence (incl.
+the durable layer's ``DurableStats``), Chrome trace-event schema + report
+CLI, and the forest's hot-shard hook."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ABForest, ABTree, OP_FIND, OP_INSERT, TreeConfig
+from repro.obs import MetricsRegistry, NULL_TRACER, Tracer
+
+CFG = TreeConfig(capacity=2048, b=8, a=2, max_height=12)
+
+
+def _insert_batch(rng, n=128, hi=10**6):
+    keys = rng.choice(hi, size=n, replace=False).astype(np.int64)
+    return np.full(n, OP_INSERT, np.int32), keys, keys * 2
+
+
+# ---------------------------------------------------------------------------
+# tracer overhead contract
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_disabled_adds_no_fences_and_no_hlo(monkeypatch):
+    """The whole disabled path is one attribute check: an untraced round
+    must issue ZERO ``block_until_ready`` calls, and the jitted phases
+    lower to byte-identical HLO before/after installing a live tracer
+    (the tracer never enters jit)."""
+    from repro.core import rounds as R
+
+    t = ABTree(CFG)
+    rng = np.random.default_rng(0)
+    st0 = t.state
+    batch = (
+        jnp.full((64,), OP_INSERT, jnp.int32),
+        jnp.asarray(rng.integers(0, 10**6, 64), jnp.int64),
+        jnp.zeros((64,), jnp.int64),
+    )
+    hlo_before = R._phase_search_combine.lower(st0, batch, t.cfg, False).as_text()
+
+    calls = []
+    real = jax.block_until_ready
+
+    def spy(x):
+        calls.append(1)
+        return real(x)
+
+    monkeypatch.setattr("repro.obs.tracer.jax.block_until_ready", spy)
+
+    assert t.tracer is NULL_TRACER  # no tracer installed → shared no-op
+    t.apply_round(*_insert_batch(rng))
+    t.scan_round([0], [10**6], cap=8)
+    assert calls == [], "disabled tracer must never fence"
+
+    t.tracer = Tracer()
+    t.apply_round(*_insert_batch(rng))
+    assert calls, "enabled tracer must fence the phases it times"
+    assert t.tracer.events, "enabled tracer must record spans"
+
+    hlo_after = R._phase_search_combine.lower(st0, batch, t.cfg, False).as_text()
+    assert hlo_before == hlo_after, "tracing must not change lowered HLO"
+
+
+def test_null_tracer_span_is_shared_noop():
+    s1 = NULL_TRACER.span("a", shard=3, foo=1)
+    s2 = NULL_TRACER.span("b")
+    assert s1 is s2  # one shared object, no allocation per phase
+    with s1 as sp:
+        assert sp.fence(123) == 123
+        sp.note(k=1)
+    assert NULL_TRACER.events == []
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + legacy-counter equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_shard_attribution():
+    m = MetricsRegistry()
+    m.inc("x", 3, shard=0)
+    m.inc("x", 2, shard=2)
+    m.inc_shard("x", 5, 1)  # per-shard only: global stays 5
+    assert m.value("x") == 5
+    assert m.per_shard("x", 3) == [3, 5, 2]
+    m.insert_shard(1)  # split at 1: cells ≥ 1 shift up
+    assert m.per_shard("x", 4) == [3, 0, 5, 2]
+    m.observe("h", 1.0)
+    m.observe("h", 3.0)
+    s = m.histogram_summary("h")
+    assert s["count"] == 2 and s["min"] == 1.0 and s["max"] == 3.0
+    snap = m.snapshot()
+    assert snap["counters"]["x"] == 5
+    assert snap["per_shard"]["x"] == {"0": 3, "2": 5, "3": 2}
+    assert snap["histograms"]["h"]["count"] == 2
+
+
+def test_legacy_counters_are_registry_backed():
+    """``tree._rounds`` / ``_scans`` / ``_scan_retries`` and the registry
+    are ONE store — reads agree after writes through either surface."""
+    t = ABTree(CFG)
+    rng = np.random.default_rng(1)
+    t.apply_round(*_insert_batch(rng))
+    t.apply_round(*_insert_batch(rng))
+    t.scan_round([0], [10**6], cap=8)
+    assert t._rounds == t.stats()["rounds"] == t.metrics.value("rounds") == 2
+    assert t._scans == t.stats()["scans"] == t.metrics.value("scans") == 1
+    assert t._scan_retries == t.metrics.value("scan_retries")
+    t._rounds = 77  # legacy write lands in the registry
+    assert t.metrics.value("rounds") == 77
+    snap = t.metrics.snapshot()
+    assert snap["engine"]["rounds"] == 77
+    assert "retries_per_op" in snap["derived"]
+
+
+def test_forest_per_shard_lanes_sum_to_global():
+    f = ABForest(n_shards=4, cfg=CFG, key_space=(0, 4096))
+    rng = np.random.default_rng(2)
+    keys = rng.choice(4096, size=256, replace=False).astype(np.int64)
+    f.apply_round(np.full(256, OP_INSERT, np.int32), keys, keys)
+    total = f.metrics.value("point_lanes")
+    assert total == 256
+    assert sum(f.metrics.per_shard("point_lanes", 4)) == total
+
+
+def test_durable_stats_match_registry(tmp_path):
+    """The durable layer mirrors every ``DurableStats`` field into the
+    backing holder's registry (ONE ``holder.metrics`` surface), and
+    snapshot churn actually garbage-collects superseded journal files."""
+    from repro.core.durable import DurableForest
+
+    dur = DurableForest(str(tmp_path), 2, CFG, snapshot_every=2)
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        dur.apply_round(*_insert_batch(rng, n=64))
+    m = dur.metrics  # delegated to the backing forest's registry
+    assert m is dur.forest.metrics
+    for field in ("commits", "flush_bytes", "fsyncs", "nodes_flushed", "gc_removed"):
+        assert m.value(field) == getattr(dur.dstats, field), field
+    assert dur.dstats.gc_removed > 0
+    h = m.histogram_summary("fsync_latency_s")
+    assert h["count"] > 0 and h["p99"] >= h["p50"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# trace export schema + report CLI
+# ---------------------------------------------------------------------------
+
+
+def _traced_forest_trace(tmp_path):
+    f = ABForest(n_shards=2, cfg=CFG, key_space=(0, 4096))
+    f.tracer = Tracer()
+    rng = np.random.default_rng(4)
+    keys = rng.choice(4096, size=200, replace=False).astype(np.int64)
+    f.apply_round(np.full(200, OP_INSERT, np.int32), keys, keys)
+    f.scan_round([0, 2048], [2048, 4096], cap=16)
+    path = str(tmp_path / "trace.json")
+    f.tracer.export(path)
+    return path
+
+
+def test_trace_export_schema(tmp_path):
+    from repro.obs.trace_export import load_trace, validate_trace
+
+    path = _traced_forest_trace(tmp_path)
+    doc = load_trace(path)
+    assert validate_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    # every engine phase of the round pipeline shows up in one traced run
+    for phase in ("round", "search_combine", "apply", "retry", "rebalance", "scan"):
+        assert phase in names, phase
+    # per-shard attribution rides instant events on tid >= 1
+    assert any(
+        e["ph"] == "i" and e["tid"] >= 1 for e in doc["traceEvents"]
+    ), "expected per-shard instants"
+
+
+def test_report_cli_roundtrip(tmp_path, capsys):
+    from repro.obs import report
+
+    path = _traced_forest_trace(tmp_path)
+    assert report.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "phase breakdown" in out and "search_combine" in out
+
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"traceEvents": [{"ph": "Q"}]}')
+    assert report.main([str(bad)]) == 1
+
+
+def test_validate_trace_rejects_malformed():
+    from repro.obs.trace_export import validate_trace
+
+    assert validate_trace({"nope": 1})
+    assert validate_trace({"traceEvents": [{"name": "x", "ph": "X", "pid": 0}]})
+    ok = {
+        "traceEvents": [
+            {"name": "x", "ph": "X", "ts": 0.0, "dur": 1.0, "pid": 0, "tid": 0}
+        ]
+    }
+    assert validate_trace(ok) == []
+
+
+# ---------------------------------------------------------------------------
+# hot-shard hook
+# ---------------------------------------------------------------------------
+
+
+def test_hot_shard_hook_fires_under_skew():
+    """A Zipf-skewed stream concentrating on one shard's key range must
+    trip the hook with that shard's id once the observation window fills;
+    a uniform stream across shards must not."""
+    events = []
+    f = ABForest(
+        n_shards=2, cfg=CFG, key_space=(0, 4096),
+        hot_shard_frac=0.9, hot_shard_window=128,
+    )
+    f.hot_shard_hook = lambda s, info: events.append((s, info))
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        keys = rng.choice(2048, size=128, replace=False).astype(np.int64)
+        f.apply_round(np.full(128, OP_INSERT, np.int32), keys, keys)  # all shard 0
+    assert events, "skewed load must fire the hot-shard hook"
+    s, info = events[0]
+    assert s == 0
+    assert info["frac"] >= 0.9
+    assert info["bounds"][0] <= 0 < info["bounds"][1]
+    assert f.metrics.value("hot_shard_events", shard=0) == len(events)
+
+    events.clear()
+    f2 = ABForest(
+        n_shards=2, cfg=CFG, key_space=(0, 4096),
+        hot_shard_frac=0.9, hot_shard_window=128,
+    )
+    f2.hot_shard_hook = lambda s, info: events.append((s, info))
+    keys = rng.choice(4096, size=256, replace=False).astype(np.int64)  # uniform
+    f2.apply_round(np.full(256, OP_INSERT, np.int32), keys, keys)
+    assert not events, "balanced load must not fire the hook"

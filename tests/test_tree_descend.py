@@ -297,10 +297,10 @@ def _hlo_of_frontier_expand(narrow: bool) -> str:
 def test_scan_descent_trace_has_no_sort(narrow):
     """The per-level frontier compaction used a stable XLA argsort (24× per
     scan); both replacement paths must lower with zero sort ops."""
+    from repro.obs.hlo_audit import assert_no_sort
+
     txt = _hlo_of_frontier_expand(narrow)
-    assert "stablehlo.sort" not in txt, (
-        f"sort op in scan descent trace (narrow={narrow})"
-    )
+    assert_no_sort(txt, f"scan descent trace (narrow={narrow})")
 
 
 def test_narrow_scan_phase_trace_has_no_sort():
@@ -308,6 +308,7 @@ def test_narrow_scan_phase_trace_has_no_sort():
     compaction + rank-select gather) is sort-free; the int64 ref path keeps
     exactly one sort (the rank-select oracle's argsort)."""
     from repro.core import rounds as R
+    from repro.obs.hlo_audit import assert_no_sort, count_ops
 
     t, _ = _grown_tree(n_keys=64)
     lo = jnp.asarray([0, 100], jnp.int64)
@@ -318,5 +319,21 @@ def test_narrow_scan_phase_trace_has_no_sort():
     txt_ref = R._phase_scan.lower(
         t.state, t.cfg, lo, hi, 8, 16, False, False
     ).as_text()
-    assert "stablehlo.sort" not in txt_narrow
-    assert txt_ref.count("stablehlo.sort") <= 1  # descent contributes none
+    assert_no_sort(txt_narrow, "narrow scan phase")
+    # descent contributes none — only the rank-select oracle's argsort
+    assert count_ops(txt_ref, ("stablehlo.sort",))["stablehlo.sort"] <= 1
+
+
+def test_hlo_audit_scan_paths_sort_free():
+    """The shared audit (the surface ``kernels_bench`` records) agrees:
+    both scan-path programs lower sort-free, and the narrow point-op
+    search never needs MORE gathers than the int64 oracle."""
+    from repro.obs.hlo_audit import audit_search_phases
+
+    audit = audit_search_phases()
+    assert audit["scan_descent"]["stablehlo.sort"] == 0
+    assert audit["scan_phase.narrow"]["stablehlo.sort"] == 0
+    assert (
+        audit["search.narrow"]["stablehlo.gather"]
+        <= audit["search.ref"]["stablehlo.gather"]
+    )
