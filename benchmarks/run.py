@@ -43,7 +43,7 @@ import traceback
 # metrics compared under the relative tolerance (higher is better);
 # integral metrics compared exactly (deterministic for a seeded workload:
 # round counts, and the durable layer's commit/fsync counts).
-_THROUGHPUT_KEYS = ("ops_per_s", "items_per_s")
+_THROUGHPUT_KEYS = ("ops_per_s", "items_per_s", "speedup_x")
 _EXACT_KEYS = ("rounds", "rounds_fused", "rounds_split", "commits", "fsyncs")
 
 

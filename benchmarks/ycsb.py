@@ -109,12 +109,20 @@ def _run_a(quick=False, narrow=False):
         )
 
 
-def run_a_forest(shards, quick=False, key_range=4096, batch=256, narrow=False):
+def run_a_forest(shards, quick=False, key_range=4096, batch=256, narrow=False,
+                 dist="zipf", repartition=False):
     """YCSB-A on an ``ABForest``: reads as validated optimistic point-reads
     under a concurrent writer replica (the ``scan_hook``).  Returns metrics
     incl. ``conflict_retries`` = retried lanes (per-shard validation only
-    retries the shards the writer actually touched)."""
+    retries the shards the writer actually touched).
+
+    ``dist`` picks the read-key distribution: "zipf" (s=0.5, the skewed
+    leg) or "uniform" (the scaling leg — per-shard lane groups stay even,
+    so s4 ≥ s1 ops/s is the ragged-batching gate).  ``repartition`` turns
+    on the forest's load-aware boundary moves (the zipf leg's fix)."""
     rounds_n = 10 if quick else 30
+    n_warm = 8  # adaptive warm budget (see below)
+    n_total = rounds_n + n_warm
     wl = WorkloadConfig(key_range=key_range, seed=1)
     forest = _instrument(ABForest(
         n_shards=shards,
@@ -122,13 +130,17 @@ def run_a_forest(shards, quick=False, key_range=4096, batch=256, narrow=False):
         mode="elim",
         key_space=(0, key_range),
         narrow=narrow,
+        auto_repartition=repartition,
     ))
     prefill_tree(forest, wl)
     rng = np.random.default_rng(3)
     n_w = 8  # hot-key writes per round (the contended fraction)
-    reads = zipf_keys(rng, batch * (rounds_n + 1), key_range, 0.5)
-    writes = zipf_keys(rng, n_w * (rounds_n + 1), key_range, 1.2)
-    wvals = rng.integers(0, 1 << 30, n_w * (rounds_n + 1)).astype(np.int64)
+    if dist == "uniform":
+        reads = rng.integers(0, key_range, batch * n_total).astype(np.int64)
+    else:
+        reads = zipf_keys(rng, batch * n_total, key_range, 0.5)
+    writes = zipf_keys(rng, n_w * n_total, key_range, 1.2)
+    wvals = rng.integers(0, 1 << 30, n_w * n_total).astype(np.int64)
     # writer round: delete+insert per hot key collapses to ONE net leaf
     # write (overwrite / insert) that always bumps the leaf version.
     w_ops = np.concatenate(
@@ -156,7 +168,24 @@ def run_a_forest(shards, quick=False, key_range=4096, batch=256, narrow=False):
         )
         forest.scan_round(k, k + 1, cap=1)
 
-    one_round(rounds_n)  # warm (jit compiles land outside the timed region)
+    # warm adaptively: the ragged round widths (retry re-gathers, writer
+    # point blocks, structural waves) each jit-compile on first sight, so
+    # run real rounds until one executes without a compile spike — then
+    # every width the steady state touches is cached outside the timed
+    # region.  Pre-compile the common retry scan widths explicitly too.
+    forest.scan_hook = None
+    for w_ in (32, 64, 128):
+        kw = reads[:w_]
+        forest.scan_round(kw, kw + 1, cap=1)
+    forest.scan_hook = writer_replica
+    t_best = None
+    for w_r in range(rounds_n, n_total):
+        t0 = time.perf_counter()
+        one_round(w_r)
+        t_r = time.perf_counter() - t0
+        if t_best is not None and t_r <= 1.5 * t_best:
+            break  # no compile landed in this round: warmed up
+        t_best = t_r if t_best is None else min(t_best, t_r)
     base_retries = forest.stats()["scan_retries"]
     t0 = time.perf_counter()
     for r in range(rounds_n):
@@ -167,11 +196,13 @@ def run_a_forest(shards, quick=False, key_range=4096, batch=256, narrow=False):
     n_ops = batch * rounds_n
     return {
         "shards": shards,
+        "dist": dist,
         "ops_per_s": n_ops / dt,
         "us_per_op": dt / n_ops * 1e6,
         "conflict_retries": retries,
         "retries_per_op": retries / n_ops,
         "rounds": rounds_n,
+        "repartitions": int(forest.metrics.snapshot()["counters"].get("repartitions", 0)),
     }
 
 
@@ -190,15 +221,31 @@ def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128, narrow
         narrow=narrow,
     ))
     prefill_tree(forest, wl)
-    for ops, keys, vals in ycsb_e_stream(wl, 3):  # warm
+    # Warm adaptively on a prefix of the stream, then time its
+    # CONTINUATION — replaying warm batches on the (now mutated) forest
+    # shifts round widths and lands fresh compiles inside the timed
+    # region, which is where this leg's run-to-run 10x swings came from.
+    n_warm = 8
+    batches = list(ycsb_e_stream(wl, n_warm + rounds_n))
+    t_best = None
+    for ops, keys, vals in batches[:n_warm]:
+        t0 = time.perf_counter()
         forest.apply_round(ops, keys, vals, scan_cap=cap)
+        t_r = time.perf_counter() - t0
+        if t_best is not None and t_r <= 1.5 * t_best:
+            break  # no compile landed in this round: warmed up
+        t_best = t_r if t_best is None else min(t_best, t_r)
     n_ops = n_items = 0
-    t0 = time.perf_counter()
-    for ops, keys, vals in ycsb_e_stream(wl, rounds_n):
+    dts = []
+    for ops, keys, vals in batches[n_warm:]:
+        t0 = time.perf_counter()
         out = forest.apply_round(ops, keys, vals, scan_cap=cap)
+        dts.append(time.perf_counter() - t0)
         n_items += int(np.sum(np.asarray(out.scan.count)))
         n_ops += len(ops)
-    dt = time.perf_counter() - t0
+    # median x count: one straggler round (late compile, scheduler
+    # spike) must not own the section's committed ops/s record.
+    dt = float(np.median(dts)) * len(dts)
     st = forest.stats()
     return {
         "shards": shards,
@@ -210,11 +257,15 @@ def run_e_forest(shards, quick=False, key_range=4096, batch=256, cap=128, narrow
     }
 
 
-def _run_a_sharded(shards, quick=False, narrow=False):
+def _run_a_sharded(shards, quick=False, narrow=False, dist="zipf",
+                   repartition=False):
     per = {}
     sfx = ".narrow" if narrow else ""
+    if dist != "zipf":
+        sfx += f".{dist}"
     for k in sorted({1, shards}):
-        m = run_a_forest(k, quick=quick, narrow=narrow)
+        m = run_a_forest(k, quick=quick, narrow=narrow, dist=dist,
+                         repartition=repartition)
         per[k] = m
         emit(
             f"ycsb_a.forest.s{k}{sfx}",
@@ -230,12 +281,23 @@ def _run_a_sharded(shards, quick=False, narrow=False):
                 f"forest({shards}) retries/op {rk:.3f} not strictly below "
                 f"1-shard baseline {r1:.3f}"
             )
+        o1, ok = per[1]["ops_per_s"], per[shards]["ops_per_s"]
+        if dist == "uniform" and shards >= 4 and ok < o1:
+            # the ragged-batching gate: sharding must pay in wall-clock,
+            # not just in retries (the s1→s4 cliff can never return).
+            raise RuntimeError(
+                f"forest({shards}) uniform ops/s {ok:.0f} below 1-shard "
+                f"baseline {o1:.0f} — sharding lost throughput"
+            )
         emit(
             f"ycsb_a.forest.s{shards}_vs_s1{sfx}",
             0.0,
-            f"retries/op={rk:.3f} vs {r1:.3f} ({r1 / max(rk, 1e-9):.2f}x fewer)",
+            f"retries/op={rk:.3f} vs {r1:.3f} ({r1 / max(rk, 1e-9):.2f}x fewer);"
+            f"ops/s={ok:.0f} vs {o1:.0f} ({ok / max(o1, 1e-9):.2f}x)",
             retries_per_op_sharded=rk,
             retries_per_op_single=r1,
+            ops_per_s_sharded=ok,
+            ops_per_s_single=o1,
         )
 
 
@@ -262,63 +324,108 @@ def _run_e_sharded(shards, quick=False, narrow=False):
         )
 
 
-def _run_e_path(mode, path, wl, rounds, cap, narrow=False):
-    """Run YCSB-E in one (tree mode, scan path) config; returns metrics.
+def _run_e_path(mode, paths, wl, rounds, cap, narrow=False):
+    """Run YCSB-E in one tree mode across ``paths``, batch-INTERLEAVED on
+    one tree per path; returns ``{path: metrics}``.
 
     fused: one ``apply_round`` per mixed batch (the round engine's fused
     scan+update pipeline).  split: the legacy host-split baseline — one
-    ``scan_round`` + one ``apply_round`` per batch (2 rounds/batch)."""
+    ``scan_round`` + one ``apply_round`` per batch (2 rounds/batch).
+
+    The paths are timed interleaved (batch i on every path before batch
+    i+1) and aggregated as median-of-batches × batches: the fused/split
+    gate compares estimates whose true ratio sits a few percent above
+    1.0, so sequential timing — where heap growth, GC epochs and CPU
+    clocks drift between the two passes — made the ratio a coin flip."""
     key_range = wl.key_range
-    tree = _instrument(
-        ABTree(TPU8._replace(capacity=4 * key_range), mode=mode, narrow=narrow)
-    )
-    prefill_tree(tree, wl)
-    # warm: several rounds so the scan frontier reaches steady state and
-    # every (frontier, cap) jit compile lands outside the timed region
-    # (the compile cache is shared across modes).
-    for ops, keys, vals in ycsb_e_stream(wl, 3):
-        if path == "fused":
-            tree.apply_round(ops, keys, vals, scan_cap=cap)
-        else:
-            (lo, hi), point = split_scan_round(ops, keys, vals)
-            tree.scan_round(lo, hi, cap=cap)
-            tree.apply_round(*point)
-    n_ops = n_items = n_rounds = 0
-    t0 = time.perf_counter()
-    for ops, keys, vals in ycsb_e_stream(wl, rounds):
+    trees = {
+        path: _instrument(
+            ABTree(
+                TPU8._replace(capacity=4 * key_range), mode=mode,
+                narrow=narrow,
+            )
+        )
+        for path in paths
+    }
+    stats = {
+        path: {"dts": [], "ops": 0, "items": 0, "rounds": 0}
+        for path in paths
+    }
+
+    def _one(path, ops, keys, vals, timed):
+        tree = trees[path]
+        st = stats[path]
+        t0 = time.perf_counter()
         if path == "fused":
             out = tree.apply_round(ops, keys, vals, scan_cap=cap)
-            n_items += int(np.sum(np.asarray(out.scan.count)))
-            n_rounds += 1
+            dt = time.perf_counter() - t0
+            items = int(np.sum(np.asarray(out.scan.count)))
+            n_rounds = 1
         else:
             (lo, hi), point = split_scan_round(ops, keys, vals)
             out = tree.scan_round(lo, hi, cap=cap)
             tree.apply_round(*point)
-            n_items += int(np.sum(np.asarray(out.count)))
-            n_rounds += 2
-        n_ops += len(ops)
-    dt = time.perf_counter() - t0
-    return {
-        "ops_per_s": n_ops / dt,
-        "items_per_s": n_items / dt,
-        "rounds": n_rounds,
-        "scan_retries": tree.stats()["scan_retries"],
-        "us_per_op": dt / n_ops * 1e6,
-    }
+            dt = time.perf_counter() - t0
+            items = int(np.sum(np.asarray(out.count)))
+            n_rounds = 2
+        if timed:
+            st["dts"].append(dt)
+            st["ops"] += len(ops)
+            st["items"] += items
+            st["rounds"] += n_rounds
+
+    # Timed rounds CONTINUE the stream past the warm prefix rather than
+    # replaying it: a replay re-runs the same batches against a larger
+    # tree, so the ragged widths shift and fresh jit compiles land in the
+    # timed region.  Advancing the stream keeps the width mix evolving
+    # continuously out of the warm state.
+    n_warm = 10
+    batches = list(ycsb_e_stream(wl, n_warm + rounds))
+    for path in paths:
+        prefill_tree(trees[path], wl)
+        # pre-compile the small point-block widths the mixed rounds bucket
+        # to (the ~5% insert fraction flaps across pow2 buckets round to
+        # round); FIND-only rounds hit the compiled pipeline w/o mutating.
+        for w_ in (8, 16, 32):
+            trees[path].apply_round(
+                np.full(w_, OP_FIND, np.int32),
+                np.arange(w_, dtype=np.int64),
+                np.zeros(w_, np.int64),
+            )
+        for ops, keys, vals in batches[:n_warm]:
+            _one(path, ops, keys, vals, timed=False)
+    for ops, keys, vals in batches[n_warm:]:
+        for path in paths:
+            _one(path, ops, keys, vals, timed=True)
+    out = {}
+    for path in paths:
+        st = stats[path]
+        dt = float(np.median(st["dts"])) * len(st["dts"])
+        out[path] = {
+            "ops_per_s": st["ops"] / dt,
+            "items_per_s": st["items"] / dt,
+            "rounds": st["rounds"],
+            "scan_retries": trees[path].stats()["scan_retries"],
+            "us_per_op": dt / st["ops"] * 1e6,
+            "batch_dts": st["dts"],
+        }
+    return out
 
 
 def _run_e(quick=False, scan_path="both", narrow=False):
     key_range = 4096
     batch = 256
-    rounds = 6 if quick else 20
+    # quick still times 16 batches: the occ fused-vs-split gate compares
+    # two median-of-batches estimates whose true ratio sits only a few
+    # percent above 1.0 — 6 batches left it a coin flip.
+    rounds = 16 if quick else 20
     cap = 128
     wl = WorkloadConfig(key_range=key_range, dist="zipf", zipf_s=1.0, batch=batch, seed=5)
     paths = ("fused", "split") if scan_path == "both" else (scan_path,)
     for mode in ("elim", "occ"):
-        per_path = {}
+        per_path = _run_e_path(mode, paths, wl, rounds, cap, narrow=narrow)
         for path in paths:
-            m = _run_e_path(mode, path, wl, rounds, cap, narrow=narrow)
-            per_path[path] = m
+            m = per_path[path]
             emit(
                 f"ycsb_e.{mode}.{path}{'.narrow' if narrow else ''}",
                 m["us_per_op"],
@@ -334,18 +441,38 @@ def _run_e(quick=False, scan_path="both", narrow=False):
                 raise RuntimeError(
                     f"fused rounds {rf} not below split baseline {rs}"
                 )
+            # Paired estimator: batch i ran on both trees back to back, so
+            # the per-pair ratio cancels batch difficulty (subround count,
+            # scan spans) and the median cancels scheduler spikes.
+            speedup = float(np.median(
+                np.asarray(per_path["split"]["batch_dts"])
+                / np.asarray(per_path["fused"]["batch_dts"])
+            ))
+            if mode == "occ" and speedup < 0.9:
+                # the ragged duplicate-rank gate: with already-satisfied
+                # lanes masked out of each occ sub-pass, fusing runs at
+                # parity-or-better with the 2-rounds-per-batch host split
+                # (measured ~1.0x; the old full-width sub-pass penalty
+                # this guards against costs well over 10%).  The floor
+                # sits below the ±5% noise of a shared host; the committed
+                # BENCH_ycsb_e.json speedup_x record is the ≥ 1.0x anchor
+                # the --check gate compares against.
+                raise RuntimeError(
+                    f"occ fused {speedup:.2f}x vs split — full-width "
+                    f"sub-pass padding regressed the fused occ path"
+                )
             emit(
                 f"ycsb_e.{mode}.fused_vs_split",
                 0.0,
-                f"rounds_fused={rf};rounds_split={rs};"
-                f"speedup={per_path['split']['us_per_op']/per_path['fused']['us_per_op']:.2f}x",
+                f"rounds_fused={rf};rounds_split={rs};speedup={speedup:.2f}x",
                 rounds_fused=rf,
                 rounds_split=rs,
+                speedup_x=speedup,
             )
 
 
 def main(quick=False, workload="A", scan_path="both", shards=0, narrow=False,
-         trace=None):
+         trace=None, dist="zipf", repartition=False):
     global _TRACER
     if trace:
         from repro.obs.tracer import Tracer
@@ -354,7 +481,8 @@ def main(quick=False, workload="A", scan_path="both", shards=0, narrow=False,
     try:
         if workload.upper() == "A":
             if shards:
-                _run_a_sharded(shards, quick=quick, narrow=narrow)
+                _run_a_sharded(shards, quick=quick, narrow=narrow, dist=dist,
+                               repartition=repartition)
             else:
                 _run_a(quick=quick, narrow=narrow)
         elif workload.upper() == "E":
@@ -411,6 +539,21 @@ if __name__ == "__main__":
         "load it in Perfetto, or render a table with "
         "`python -m repro.obs.report PATH`",
     )
+    ap.add_argument(
+        "--dist",
+        default="zipf",
+        choices=["zipf", "uniform"],
+        help="workload A read-key distribution (sharded path only): 'zipf' "
+        "(s=0.5, the skewed leg) or 'uniform' (the scaling leg — with "
+        "--shards ≥ 4 the run fails unless sharded ops/s ≥ the 1-shard "
+        "baseline)",
+    )
+    ap.add_argument(
+        "--repartition",
+        action="store_true",
+        help="enable the forest's load-aware repartitioning (boundary "
+        "rebalance / cold-shard merge driven by the hot-shard window)",
+    )
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     main(
@@ -420,4 +563,6 @@ if __name__ == "__main__":
         shards=args.shards,
         narrow=args.narrow,
         trace=args.trace,
+        dist=args.dist,
+        repartition=args.repartition,
     )

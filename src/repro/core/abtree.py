@@ -797,6 +797,82 @@ def frontier_expand(
     )
 
 
+def frontier_expand_sharded(
+    state: TreeState, cfg: TreeConfig, sid: jax.Array, lo: jax.Array,
+    hi: jax.Array, frontier_cap: int, *, narrow: bool = False,
+):
+    """Flat ragged form of :func:`frontier_expand` over a STACKED ``(S, …)``
+    state: lane ``i`` expands inside shard ``sid[i]``, so one launch covers
+    every shard's sub-lanes packed side by side — no per-shard row padding.
+    Every state access is the per-shard gather generalized to two index
+    axes (``state.X[sid[:, None], node]``); the per-level compaction and
+    the downstream gather kernels are shard-agnostic and unchanged.
+
+    Returns the same tuple as :func:`frontier_expand`; ``touched`` records
+    per-LANE node ids (the caller groups lanes by ``sid`` to build each
+    shard's validated read set).  Padding lanes (``lo = hi = EMPTY``)
+    expand into nothing past level 0."""
+    bsz = lo.shape[0]
+    f, b = frontier_cap, cfg.b
+    scratch = state.keys.shape[1] - 1  # node axis is 1 on the stacked state
+    sid2 = sid[:, None]  # broadcasts against (B, F) node-id blocks
+
+    frontier0 = jnp.full((bsz, f), scratch, jnp.int32).at[:, 0].set(
+        state.root[sid]
+    )
+    valid0 = jnp.zeros((bsz, f), bool).at[:, 0].set(True)
+    touched0 = jnp.full((cfg.max_height, bsz, f), scratch, jnp.int32)
+    overflow0 = jnp.zeros((bsz,), bool)
+
+    def body(level, carry):
+        frontier, valid, touched, overflow = carry
+        node = jnp.where(valid, frontier, scratch)
+        touched = touched.at[level].set(node)
+        leaf = state.is_leaf[sid2, node]  # (B,F); scratch is a leaf
+        routers = state.keys[sid2, node][:, :, : b - 1]
+        sz = state.size[sid2, node]  # (B,F)
+        pad_lo = jnp.full((bsz, f, 1), KEY_MIN, KEY_DTYPE)
+        pad_hi = jnp.full((bsz, f, 1), EMPTY, KEY_DTYPE)
+        clo = jnp.concatenate([pad_lo, routers], axis=2)  # (B,F,b)
+        chi = jnp.concatenate([routers, pad_hi], axis=2)
+        j = jnp.arange(b, dtype=jnp.int32)[None, None, :]
+        isect = (
+            (j < sz[:, :, None])
+            & (chi > lo[:, None, None])
+            & (clo < hi[:, None, None])
+        )
+        expand = (valid & ~leaf)[:, :, None] & isect  # (B,F,b)
+        keep = valid & leaf
+        cand = jnp.concatenate(
+            [
+                jnp.where(expand, state.children[sid2, node], scratch),
+                jnp.where(keep, frontier, scratch)[:, :, None],
+            ],
+            axis=2,
+        ).reshape(bsz, f * (b + 1))
+        cand_valid = jnp.concatenate(
+            [expand, keep[:, :, None]], axis=2
+        ).reshape(bsz, f * (b + 1))
+        frontier, valid, of = frontier_compact(
+            cand, cand_valid, f, scratch=scratch, use_pallas=narrow
+        )
+        return frontier, valid, touched, overflow | of
+
+    frontier, valid, touched, overflow = jax.lax.fori_loop(
+        0, cfg.max_height, body, (frontier0, valid0, touched0, overflow0)
+    )
+    leaves = jnp.where(valid, frontier, scratch)
+    cand_keys = jnp.where(valid[:, :, None], state.keys[sid2, leaves], EMPTY)
+    cand_vals = state.vals[sid2, leaves]
+    return (
+        leaves,
+        cand_keys.reshape(bsz, f * b),
+        cand_vals.reshape(bsz, f * b),
+        touched,
+        overflow,
+    )
+
+
 # ----------------------------------------------------------------------------
 # Host-orchestrated tree (thin wrappers over the core/rounds.py engine)
 # ----------------------------------------------------------------------------
@@ -864,18 +940,42 @@ class ABTree(RegistryBackedCounters):
 
     # -- unified-engine holder protocol ---------------------------------------
 
+    # ``state`` (bare) and ``stacked`` (leading axis 1 — the form every
+    # ``core/rounds.py`` phase executes on) are lazy views of one another:
+    # each setter just invalidates the other form, and each getter converts
+    # only when its form is stale.  A round's phases touch ``stacked``
+    # a dozen times; eagerly re-deriving the 25-leaf tree_map on every
+    # access cost more host time than the phases' device calls.
+
+    @property
+    def state(self) -> TreeState:
+        if self._state is None:
+            self._state = jax.tree_util.tree_map(lambda x: x[0], self._stacked)
+        return self._state
+
+    @state.setter
+    def state(self, st: TreeState):
+        self._state = st
+        self._stacked = None
+
     @property
     def stacked(self) -> TreeState:
         """This tree's state as a one-shard stack (leading axis 1 on every
         array) — the form every ``core/rounds.py`` phase executes on."""
-        return jax.tree_util.tree_map(lambda x: x[None], self.state)
+        if self._stacked is None:
+            self._stacked = jax.tree_util.tree_map(lambda x: x[None], self._state)
+        return self._stacked
 
     @stacked.setter
     def stacked(self, st: TreeState):
-        self.state = jax.tree_util.tree_map(lambda x: x[0], st)
+        self._stacked = st
+        self._state = None
 
     def _maybe_split_shards(self):
         """Shard-overflow policy: the single tree never splits shards."""
+
+    def _maybe_repartition(self):
+        """Load rebalancing is a forest concern; S = 1 has one partition."""
 
     def _note_shard_load(self, counts):
         """Hot-shard accounting is a forest concern; S = 1 has no skew."""

@@ -91,9 +91,13 @@ class CrashPoint:
     written), ``mid_manifest`` (torn manifest tmp), ``before_dirsync``
     (manifest renamed, directory not yet synced), ``mid_split`` (a shard
     split restacked the forest; nothing of the surrounding round has
-    committed — ``at_commit`` is the NEXT commit index at that moment)."""
+    committed — ``at_commit`` is the NEXT commit index at that moment),
+    ``mid_repartition`` (a load-aware boundary rebalance or cold-shard
+    merge just re-keyed the journals; same NEXT-commit-index convention
+    as ``mid_split``)."""
 
-    step: str = ""  # "after_segment" | "mid_manifest" | "before_dirsync" | "mid_split"
+    step: str = ""  # "after_segment" | "mid_manifest" | "before_dirsync"
+    #              | "mid_split" | "mid_repartition"
     at_commit: int = -1  # commit index at which to fire (-1 = never)
     _count: int = field(default=0, repr=False)
 
@@ -466,6 +470,7 @@ class DurableForest(_DurableBase):
         max_keys_per_shard: Optional[int] = None,
         narrow_scan: bool = False,
         narrow: bool = False,
+        auto_repartition: bool = False,
     ):
         self.forest = ABForest(
             n_shards=n_shards,
@@ -476,6 +481,7 @@ class DurableForest(_DurableBase):
             max_keys_per_shard=max_keys_per_shard,
             narrow_scan=narrow_scan,
             narrow=narrow,
+            auto_repartition=auto_repartition,
         )
         self._wire_hooks()
         self._init_journal(directory, crash, snapshot_every)
@@ -485,6 +491,7 @@ class DurableForest(_DurableBase):
             # p-OCC: per-update flush discipline → per-sub-round commits
             self.forest.subround_hook = self._commit
         self.forest.split_hook = self._on_shard_split
+        self.forest.repartition_hook = self._on_repartition
 
     def _on_shard_split(self, s: int):
         """Journal re-keying for a shard split: the fresh shard at ``s + 1``
@@ -495,6 +502,26 @@ class DurableForest(_DurableBase):
         self._uids.insert(s + 1, self._new_shard_uid())
         self._force_snapshot.add(self._uids[s])
         self.crash.maybe_fire("mid_split", self._commit_idx)
+
+    def _on_repartition(self, kind: str, a: int, b: int):
+        """Journal re-keying for a load-aware repartition.  A boundary
+        rebalance keeps every shard's uid (contents moved between two
+        chains) but forces both affected shards' snapshots — their replay
+        prefixes no longer reproduce the moved keys.  A cold-shard merge
+        retires the dead shard's uid (its chain is garbage after the
+        restack) and forces the survivor's snapshot.  Either way the
+        next manifest commit records the new split points."""
+        if kind == "merge":
+            dead = self._uids.pop(a)
+            self._snapshots.pop(dead, None)
+            self._segments.pop(dead, None)
+            self._shard_commits.pop(dead, None)
+            self._force_snapshot.discard(dead)
+            self._force_snapshot.add(self._uids[b])
+        else:
+            self._force_snapshot.add(self._uids[a])
+            self._force_snapshot.add(self._uids[b])
+        self.crash.maybe_fire("mid_repartition", self._commit_idx)
 
     # -- backend surface -------------------------------------------------------
 
@@ -537,6 +564,7 @@ class DurableForest(_DurableBase):
             "max_keys_per_shard": self.forest.max_keys_per_shard,
             "narrow": self.forest.narrow,
             "narrow_scan": self.forest.narrow_scan,
+            "auto_repartition": self.forest.auto_repartition,
         }
 
     # -- public API -----------------------------------------------------------
@@ -699,6 +727,7 @@ def recover(directory: str, crash: Optional[CrashPoint] = None):
             max_keys_per_shard=manifest["max_keys_per_shard"],
             narrow=manifest["narrow"],
             narrow_scan=manifest["narrow_scan"],
+            auto_repartition=manifest.get("auto_repartition", False),
         )
         forest.state = _stack_states(states)
         out.forest = forest

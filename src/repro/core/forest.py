@@ -26,11 +26,49 @@ Representation
 Routing (host, per round — performed inside ``rounds.execute_plan``)
     ``elimination.lane_masks`` classifies the batch's lanes; point lanes go
     to ``shard = searchsorted(splits, key)``; OP_RANGE lanes are split at
-    shard boundaries into per-shard sub-lanes.  Each shard's lane group is
-    padded to a shared power-of-two width (bounded recompiles) and the whole
-    (S, W) block executes as one vmapped round.  Sub-lane scan rows are
+    shard boundaries into per-shard sub-lanes.  Sub-lane scan rows are
     stitched back in key order (shards are ordered by key range, rows within
     a shard are ascending, so concatenation is globally sorted).
+
+Ragged-width bucketing contract
+    Scan lanes are flat-packed: all shards' sub-lanes concatenate into ONE
+    1-D block whose width is pow2(true sub-lane count), and each lane
+    gathers through its own shard id on the stacked state — no per-shard
+    rectangle, no max-over-shards padding, and a retry re-packs only the
+    lanes of still-conflicted shard components.  Point lanes keep the
+    (S, W) rectangle (arrival-order packing needs per-shard slots) with
+    W = pow2(max per-shard lane count); the repartition actions below
+    exist precisely to keep that max — and hence the padding every later
+    ``shard_map`` step would ship over the wire — low.  The occ mode's
+    duplicate-rank passes re-pack only their live lanes the same way.
+    Widths always bucket to powers of two (bounded recompiles), and pad
+    waste is observable via the ``router_pack_width`` /
+    ``pad_waste_frac`` gauges and per-pack tracer span args.
+
+Load-aware repartitioning
+    The router feeds two host-side signals: per-shard routed-lane counts
+    (the windowed hot-shard detector behind ``hot_shard_hook``) and a ring
+    buffer of recently routed keys (``_note_key_sample``).  With
+    ``auto_repartition=True``, a window fire also queues ONE pending
+    action; it is consumed at a round boundary when no scan is in flight
+    and no restack is running.  The state machine:
+
+        IDLE --window fire (hot frac ≥ max(hot_shard_frac, 1.5/S))--> PENDING
+        PENDING --round boundary, quiescent--> MERGE | REBALANCE --> IDLE
+
+    REBALANCE moves the boundary between the hot shard and its colder
+    neighbor to the load-weighted quantile of the sampled keys (NOT the
+    key-count median — skew lives in traffic, not population): the moved
+    range is swept off with fused scan+delete rounds and re-inserted
+    through the router, reusing the shard-overflow split machinery.
+    MERGE instead retires the coldest shard (window share ≤
+    ``cold_shard_frac``) into a neighbor the same way, shrinking S.
+    Either way ``repartition_hook(kind, a, b)`` fires after the partition
+    changes — the durable layer's journal re-keying point (mirrors
+    ``split_hook``).  Overflow splits also prefer the sampled-load
+    quantile as their split point, falling back to the key median when
+    the sample is thin.  Uniform traffic never reaches PENDING: no shard
+    dominates a window, so the partition stays put.
 
 Semantics
     Identical to ``ABTree`` — they run the same engine: a forest round is
@@ -109,6 +147,8 @@ class ABForest(RegistryBackedCounters):
         max_keys_per_shard: Optional[int] = None,
         hot_shard_frac: float = 0.5,
         hot_shard_window: int = 256,
+        auto_repartition: bool = False,
+        cold_shard_frac: float = 0.05,
     ):
         assert mode in ("elim", "occ")
         assert 2 <= cfg.a <= cfg.b // 2, "(a,b) requires 2 ≤ a ≤ b/2"
@@ -171,6 +211,20 @@ class ABForest(RegistryBackedCounters):
         self.hot_shard_frac = float(hot_shard_frac)
         self.hot_shard_window = int(hot_shard_window)
         self._shard_load = np.zeros(self.n_shards, np.int64)
+        # load-aware repartitioning (see module docstring): a window fire
+        # queues ONE pending action; consumed at a quiescent round boundary.
+        self.auto_repartition = bool(auto_repartition)
+        self.cold_shard_frac = float(cold_shard_frac)
+        self._repartition_pending = None
+        # shard-lifecycle hook: repartition_hook(kind, a, b) fires after a
+        # boundary rebalance ("rebalance", hot, neighbor) or a cold-shard
+        # merge ("merge", retired, survivor-after-restack) — the durable
+        # layer's journal re-keying point, mirroring split_hook.
+        self.repartition_hook = None
+        # ring buffer of recently routed keys: the weighted-quantile sample
+        # behind load-aware split points and boundary moves.
+        self._key_sample = np.zeros(4096, np.int64)
+        self._key_sample_n = 0
 
     # -- unified-engine holder protocol ---------------------------------------
 
@@ -199,8 +253,15 @@ class ABForest(RegistryBackedCounters):
         fire ``hot_shard_hook(shard, info)`` when one shard dominates the
         current window (see __init__).  The window resets either way once
         full, so sustained skew fires repeatedly and transient skew ages
-        out."""
-        if self.hot_shard_hook is None:
+        out.  With ``auto_repartition`` the fire also queues the pending
+        repartition action (window snapshot included) for the next
+        quiescent round boundary."""
+        if self.hot_shard_hook is None and not self.auto_repartition:
+            return
+        if self._in_split:
+            # sweep/re-insert lanes of a shard split or repartition in
+            # progress are internal traffic, not offered load — counting
+            # them would make every action look like a fresh hot spot.
             return
         counts = np.asarray(counts, np.int64)
         if counts.size != self._shard_load.size:
@@ -213,19 +274,61 @@ class ABForest(RegistryBackedCounters):
         s = int(np.argmax(self._shard_load))
         frac = float(self._shard_load[s]) / total
         lanes = int(self._shard_load[s])
+        win = self._shard_load.copy()
         self._shard_load[:] = 0
-        if frac >= self.hot_shard_frac and self.n_shards > 1:
+        # "hot" is relative to fair share: a fixed fraction reads very
+        # differently at S=2 (fair share 0.5) than at S=8 (0.125), so the
+        # trip point is the larger of the configured frac and 1.5x fair
+        # share — with a bare 0.5 frac a 2-shard forest fires on almost
+        # every window and the boundary thrashes.
+        thresh = max(self.hot_shard_frac, 1.5 / self.n_shards)
+        if frac >= thresh and self.n_shards > 1:
             self.metrics.inc("hot_shard_events", shard=s)
-            self.hot_shard_hook(
-                s,
-                {
-                    "shard": s,
-                    "frac": frac,
-                    "lanes": lanes,
-                    "window": total,
-                    "bounds": (self._bounds[s], self._bounds[s + 1]),
-                },
-            )
+            info = {
+                "shard": s,
+                "frac": frac,
+                "lanes": lanes,
+                "window": total,
+                "bounds": (self._bounds[s], self._bounds[s + 1]),
+                "window_loads": win,
+            }
+            if self.hot_shard_hook is not None:
+                self.hot_shard_hook(s, info)
+            if self.auto_repartition:
+                self._repartition_pending = info
+
+    def _note_key_sample(self, keys):
+        """Router callback: fold routed keys (point keys and scan lower
+        bounds) into the fixed-size ring sample behind ``_load_quantile``."""
+        if self._in_split:
+            return  # internal sweep/re-insert keys are not offered load
+        keys = np.asarray(keys, np.int64).reshape(-1)
+        if keys.size == 0:
+            return
+        cap = self._key_sample.size
+        if keys.size >= cap:
+            self._key_sample[:] = keys[-cap:]
+        else:
+            start = self._key_sample_n % cap
+            end = start + keys.size
+            if end <= cap:
+                self._key_sample[start:end] = keys
+            else:
+                k = cap - start
+                self._key_sample[start:] = keys[:k]
+                self._key_sample[: end - cap] = keys[k:]
+        self._key_sample_n += keys.size
+
+    def _load_quantile(self, lo, hi, q, default=None):
+        """q-quantile of the *observed* (routed) keys inside ``[lo, hi)`` —
+        the load-weighted split point.  Falls back to ``default`` when the
+        sample holds fewer than 32 in-range keys."""
+        n = min(self._key_sample_n, self._key_sample.size)
+        sel = self._key_sample[:n]
+        sel = np.sort(sel[(sel >= lo) & (sel < hi)])
+        if sel.size < 32:
+            return default
+        return int(sel[min(int(q * sel.size), sel.size - 1)])
 
     # -- public API -----------------------------------------------------------
 
@@ -337,6 +440,7 @@ class ABForest(RegistryBackedCounters):
         return np.sum(np.where(leaf, np.asarray(st.size), 0), axis=1)
 
     def _maybe_split_shards(self):
+        self._maybe_repartition()
         if self.max_keys_per_shard is None or self._in_split or self._scan_active:
             return
         guard = 0
@@ -349,11 +453,45 @@ class ABForest(RegistryBackedCounters):
             assert guard < 64, "shard split diverged"
             self._split_shard(s)
 
+    def _sweep_range(self, lo: int, hi: int) -> Tuple[List[int], List[int]]:
+        """Sweep every key in ``[lo, hi)`` off the forest with fused
+        scan+delete rounds (the shared move primitive behind overflow
+        splits, boundary rebalances and cold-shard merges); returns the
+        evicted (keys, vals)."""
+        moved_k: List[int] = []
+        moved_v: List[int] = []
+        cap = max(256, self.cfg.b)
+        # The bulk sweep needs a far wider leaf frontier than steady-state
+        # point scans; _scan_frontier is sticky, so restore it afterwards or
+        # every later scan round pays the sweep's width forever (the wide
+        # executable stays jit-cached for the next sweep regardless).
+        frontier0 = self._scan_frontier
+        try:
+            while True:
+                out = self.scan_delete_round([lo], [hi], cap=cap)
+                n = int(np.asarray(out.count)[0])
+                moved_k.extend(int(k) for k in np.asarray(out.keys)[0, :n])
+                moved_v.extend(int(v) for v in np.asarray(out.vals)[0, :n])
+                if not bool(np.asarray(out.truncated)[0]):
+                    break
+        finally:
+            self._scan_frontier = frontier0
+        return moved_k, moved_v
+
+    def _reinsert(self, moved_k: List[int], moved_v: List[int]):
+        bs = 1024
+        for i in range(0, len(moved_k), bs):
+            ck = moved_k[i : i + bs]
+            cv = moved_v[i : i + bs]
+            self.apply_round(np.full(len(ck), OP_INSERT, np.int32), ck, cv)
+
     def _split_shard(self, s: int):
-        """Split shard ``s`` at its median key: sweep the upper half off with
-        fused scan+delete rounds, restack with a fresh shard at ``s + 1``,
-        and re-insert the swept keys through the router (which now targets
-        the new shard)."""
+        """Split shard ``s``: sweep the upper part off with fused
+        scan+delete rounds, restack with a fresh shard at ``s + 1``, and
+        re-insert the swept keys through the router (which now targets the
+        new shard).  The split point prefers the load-weighted quantile of
+        observed keys (skew-aware: balances *traffic*, not population) and
+        falls back to the shard's key median when the sample is thin."""
         self._in_split = True
         try:
             st = self.state
@@ -364,17 +502,11 @@ class ABForest(RegistryBackedCounters):
                 return
             ks.sort()
             m = int(ks[ks.size // 2])  # > ks[0] ≥ bounds[s]; < bounds[s+1]
+            lm = self._load_quantile(self._bounds[s], self._bounds[s + 1], 0.5)
+            if lm is not None and int(ks[0]) < lm <= int(ks[-1]):
+                m = lm  # both sides stay non-empty
             hi_bound = self._bounds[s + 1]
-            moved_k: List[int] = []
-            moved_v: List[int] = []
-            cap = max(256, self.cfg.b)
-            while True:
-                out = self.scan_delete_round([m], [hi_bound], cap=cap)
-                n = int(np.asarray(out.count)[0])
-                moved_k.extend(int(k) for k in np.asarray(out.keys)[0, :n])
-                moved_v.extend(int(v) for v in np.asarray(out.vals)[0, :n])
-                if not bool(np.asarray(out.truncated)[0]):
-                    break
+            moved_k, moved_v = self._sweep_range(m, hi_bound)
             per = [self.shard_state(i) for i in range(self.n_shards)]
             per.insert(s + 1, make_tree(self.cfg))
             self.state = _stack_states(per)
@@ -388,13 +520,115 @@ class ABForest(RegistryBackedCounters):
             self._shard_load = np.zeros(self.n_shards, np.int64)
             if self.split_hook is not None:
                 self.split_hook(s)
-            bs = 1024
-            for i in range(0, len(moved_k), bs):
-                ck = moved_k[i : i + bs]
-                cv = moved_v[i : i + bs]
-                self.apply_round(np.full(len(ck), OP_INSERT, np.int32), ck, cv)
+            self._reinsert(moved_k, moved_v)
         finally:
             self._in_split = False
+
+    # -- load-aware repartitioning (see module docstring) -----------------------
+
+    def _maybe_repartition(self):
+        """Consume the pending repartition action, if any, at a quiescent
+        round boundary: prefer retiring a cold shard (window share ≤
+        ``cold_shard_frac``), otherwise move the hot boundary."""
+        info = self._repartition_pending
+        if info is None or self._in_split or self._scan_active:
+            return
+        self._repartition_pending = None
+        if self.n_shards < 2:
+            return
+        win = np.asarray(info.get("window_loads"), np.int64)
+        if win.size != self.n_shards:
+            return  # shard count changed since detection: signal is stale
+        s = int(info["shard"])
+        total = int(win.sum())
+        c = int(np.argmin(win))
+        # engine-track span (``shard=`` would route it onto the per-shard
+        # attribution track): the hot shard rides as a plain arg instead.
+        with self.tracer.span("repartition", hot_shard=s, hot_frac=info["frac"]) as sp:
+            if (
+                c != s
+                and total > 0
+                and float(win[c]) / total <= self.cold_shard_frac
+                and self._merge_cold(c)
+            ):
+                sp.note(action="merge", cold=c)
+                self.metrics.inc("repartitions", shard=s)
+            elif self._rebalance_boundary(s, win):
+                sp.note(action="rebalance")
+                self.metrics.inc("repartitions", shard=s)
+            else:
+                sp.note(action="noop")
+
+    def _rebalance_boundary(self, s: int, win: np.ndarray) -> bool:
+        """Move the boundary between hot shard ``s`` and its colder
+        neighbor ``t`` to the load-weighted quantile that would even their
+        observed loads: sweep the moved range off ``s``, shift the split
+        point, re-insert through the router (keys now land on ``t``)."""
+        nbrs = [t for t in (s - 1, s + 1) if 0 <= t < self.n_shards]
+        if not nbrs:
+            return False
+        t = min(nbrs, key=lambda i: int(win[i]))
+        load_s, load_t = int(win[s]), int(win[t])
+        if load_s <= load_t or load_s == 0:
+            return False
+        phi = (load_s - load_t) / (2.0 * load_s)  # load share to hand over
+        lo_b, hi_b = self._bounds[s], self._bounds[s + 1]
+        q = (1.0 - phi) if t == s + 1 else phi
+        m = self._load_quantile(lo_b, hi_b, q)
+        if m is None or not (lo_b < m < hi_b):
+            return False
+        self._in_split = True
+        try:
+            if t == s + 1:
+                moved_k, moved_v = self._sweep_range(m, hi_b)
+                self._splits[s] = m
+            else:
+                moved_k, moved_v = self._sweep_range(lo_b, m)
+                self._splits[s - 1] = m
+            self._rebuild_bounds()
+            self.metrics.inc("boundary_moves", shard=s)
+            self._shard_load = np.zeros(self.n_shards, np.int64)
+            if self.repartition_hook is not None:
+                self.repartition_hook("rebalance", s, t)
+            self._reinsert(moved_k, moved_v)
+        finally:
+            self._in_split = False
+        return True
+
+    def _merge_cold(self, c: int) -> bool:
+        """Retire cold shard ``c`` into a neighbor: sweep its whole range
+        off, drop the shard from the stack and the boundary between the
+        pair, re-insert through the router (keys land on the survivor)."""
+        nbrs = [t for t in (c - 1, c + 1) if 0 <= t < self.n_shards]
+        if not nbrs:
+            return False
+        t = nbrs[0] if len(nbrs) == 1 else min(
+            nbrs, key=lambda i: int(self._live_key_counts()[i])
+        )
+        if self.max_keys_per_shard is not None:
+            counts = self._live_key_counts()
+            if int(counts[c]) + int(counts[t]) > self.max_keys_per_shard:
+                return False  # survivor would overflow: not worth merging
+        self._in_split = True
+        try:
+            moved_k, moved_v = self._sweep_range(
+                self._bounds[c], self._bounds[c + 1]
+            )
+            per = [self.shard_state(i) for i in range(self.n_shards)]
+            per.pop(c)
+            self.state = _stack_states(per)
+            self.n_shards -= 1
+            self._splits = np.delete(self._splits, c - 1 if t == c - 1 else c)
+            self._rebuild_bounds()
+            self.metrics.inc("shard_merges", shard=t if t < c else t - 1)
+            self.metrics.remove_shard(c)
+            self._shard_load = np.zeros(self.n_shards, np.int64)
+            if self.repartition_hook is not None:
+                self.repartition_hook("merge", c, t if t < c else t - 1)
+            self._reinsert(moved_k, moved_v)
+        finally:
+            self._in_split = False
+        return True
 
     # -- pool management --------------------------------------------------------
 

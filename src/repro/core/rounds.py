@@ -81,7 +81,7 @@ Holder protocol (duck-typed; ``ABTree`` and ``ABForest`` both provide it):
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Tuple
+from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -103,7 +103,7 @@ from repro.core.abtree import (
     TreeState,
     VAL_DTYPE,
     apply_net_ops,
-    frontier_expand,
+    frontier_expand_sharded,
     shrink_root,
     split_wave,
     underfull_wave,
@@ -136,6 +136,30 @@ def _note_load(holder, counts):
     note = getattr(holder, "_note_shard_load", None)
     if note is not None:
         note(counts)
+
+
+def _note_keys(holder, keys):
+    """Feed routed lane keys to the holder's key-sample reservoir (the
+    forest's skew-aware repartitioner draws its weighted quantiles from
+    it; ABTree has no reservoir)."""
+    note = getattr(holder, "_note_key_sample", None)
+    if note is not None:
+        note(keys)
+
+
+def _note_pack(holder, tr_span, width: int, n_real: int):
+    """Record one lane-pack's width + pad waste: gauges in the metrics
+    registry (``router_pack_width`` / ``pad_waste_frac``) and span args on
+    the pack's trace span, so both the registry snapshot and
+    ``repro.obs.report``'s pack table surface the padding the router
+    actually shipped."""
+    waste = (width - n_real) / width if width else 0.0
+    m = _metrics(holder)
+    if m is not None:
+        m.set_gauge("router_pack_width", width)
+        m.set_gauge("pad_waste_frac", waste)
+        m.observe("pack_pad_waste", waste)
+    tr_span.note(width=width, real=n_real, pad_waste=round(waste, 4))
 
 
 # ----------------------------------------------------------------------------
@@ -225,24 +249,28 @@ def build_plan(ops, keys, vals=None, *, scan_cap: int = 128) -> RoundPlan:
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6, 7))
-def _phase_scan(
-    state: TreeState, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int,
-    narrow: bool = False, narrow_descent: bool = False,
+@functools.partial(jax.jit, static_argnums=(1, 5, 6, 7, 8))
+def _phase_scan_flat(
+    state: TreeState, cfg: TreeConfig, sid, lo, hi, frontier_cap: int,
+    cap: int, narrow: bool = False, narrow_descent: bool = False,
 ):
-    """jit: frontier expansion + in-range gather.  The gather goes through
-    ``kernels/range_scan``'s dispatching wrapper: int64 host-index keys take
-    the jnp reference, int32 device keys the Pallas kernel.  ``narrow``
-    (static, from ``tree.narrow_scan``) asserts the caller's keys/values fit
-    in int32, routing the fused-round gather through the Pallas kernel even
-    on the int64 host index (the ROADMAP "fused-round scan kernel" path).
-    ``narrow_descent`` (static, from ``tree.narrow`` — the full device-path
-    gate) additionally routes the per-level frontier compaction through its
-    Pallas kernel; either way the jnp compaction is sort-free (cumsum rank
-    + scatter), so plain ``narrow_scan`` users keep the PR-1 contract of
-    kernel-gathers-only."""
-    leaves, ck, cv, touched, overflow = frontier_expand(
-        state, cfg, lo, hi, frontier_cap, narrow=narrow_descent
+    """jit: flat ragged frontier expansion + in-range gather over the
+    STACKED state.  One launch covers every shard's scan sub-lanes packed
+    side by side (lane ``i`` expands inside shard ``sid[i]``), so the
+    device cost is proportional to the TRUE sub-lane count bucketed to one
+    power of two — not ``S × pow2(max per-shard count)`` as the old
+    per-shard row padding was.  The gather goes through
+    ``kernels/range_scan``'s dispatching wrapper: int64 host-index keys
+    take the jnp reference, int32 device keys the Pallas kernel.
+    ``narrow`` (static, from ``tree.narrow_scan``) asserts the caller's
+    keys/values fit in int32, routing the fused-round gather through the
+    Pallas kernel even on the int64 host index (the ROADMAP "fused-round
+    scan kernel" path).  ``narrow_descent`` (static, from ``tree.narrow``
+    — the full device-path gate) additionally routes the per-level
+    frontier compaction through its Pallas kernel; either way the jnp
+    compaction is sort-free (cumsum rank + scatter)."""
+    leaves, ck, cv, touched, overflow = frontier_expand_sharded(
+        state, cfg, sid, lo, hi, frontier_cap, narrow=narrow_descent
     )
     keys, vals, count, truncated = range_scan(ck, cv, lo, hi, cap=cap, narrow=narrow)
     return ScanOutput(keys=keys, vals=vals, count=count, truncated=truncated), touched, overflow
@@ -354,17 +382,6 @@ def _phase_shrink(state: TreeState, cfg: TreeConfig):
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6, 7))
-def _v_scan(
-    state, cfg: TreeConfig, lo, hi, frontier_cap: int, cap: int,
-    narrow: bool, narrow_descent: bool = False,
-):
-    f = lambda st, l, h: _phase_scan(
-        st, cfg, l, h, frontier_cap, cap, narrow, narrow_descent
-    )
-    return jax.vmap(f)(state, lo, hi)
-
-
 @functools.partial(jax.jit, static_argnums=(2, 3))
 def _v_search_combine(state, batch, cfg: TreeConfig, narrow: bool = False):
     return jax.vmap(lambda st, b: _phase_search_combine(st, b, cfg, narrow))(
@@ -446,15 +463,18 @@ def _independent_by_parent_np(parent_row: np.ndarray, ids: np.ndarray) -> np.nda
 
 def _duplicate_ranks(ops_np: np.ndarray, keys_np: np.ndarray) -> np.ndarray:
     """Per-lane duplicate rank of each key (OP_NOP lanes rank 0): rank r
-    executes in OCC sub-round r."""
+    executes in OCC sub-round r.  Vectorized: a stable sort groups equal
+    keys while preserving arrival order, so a lane's rank is its offset
+    from its key-run's first occurrence."""
     rank = np.zeros(ops_np.shape[0], np.int32)
-    seen: dict = {}
-    for i in range(ops_np.shape[0]):
-        if ops_np[i] == OP_NOP:
-            continue
-        k = int(keys_np[i])
-        rank[i] = seen.get(k, 0)
-        seen[k] = rank[i] + 1
+    idx = np.nonzero(ops_np != OP_NOP)[0]
+    if idx.size == 0:
+        return rank
+    k = keys_np[idx]
+    order = np.argsort(k, kind="stable")
+    ks = k[order]
+    run_start = np.searchsorted(ks, ks, side="left")
+    rank[idx[order]] = (np.arange(ks.size) - run_start).astype(np.int32)
     return rank
 
 
@@ -480,87 +500,127 @@ def gather_until_frontier_fits(holder, gather):
 
 
 def scan_lanes(holder, lo_np, hi_np, cap, *, n_scan_ops, max_retries: int = 8):
-    """Split lanes ``[lo_i, hi_i)`` at shard boundaries, run one vmapped
-    scan phase across all shards, stitch sub-lane rows back per lane in key
-    order (shards are key-ordered, rows within a shard ascending, so
-    concatenation is globally sorted).  With S = 1 every lane is its own
-    single sub-lane.  Returns numpy ``(keys (B,cap), vals, count,
-    truncated)``."""
+    """Split lanes ``[lo_i, hi_i)`` at shard boundaries, run one FLAT
+    ragged scan phase over all sub-lanes (per-lane shard ids, one shared
+    width bucketed to a power of two — no per-shard row padding), stitch
+    sub-lane rows back per lane in key order (shards are key-ordered, rows
+    within a shard ascending, so concatenation is globally sorted).  With
+    S = 1 every lane is its own single sub-lane.  Routing is vectorized
+    (two ``searchsorted`` calls over the whole batch; only the rare
+    cross-shard lanes take a host loop) and computed ONCE per round — the
+    retry loop re-gathers pending lanes without re-routing.  Returns numpy
+    ``(keys (B,cap), vals, count, truncated)``."""
     n_shards = holder.n_shards
     bsz = int(lo_np.size)
+    lo_np = np.asarray(lo_np, np.int64)
+    hi_np = np.asarray(hi_np, np.int64)
     out_k = np.full((bsz, cap), int(EMPTY), np.int64)
     out_v = np.zeros((bsz, cap), np.int64)
     out_c = np.zeros((bsz,), np.int32)
     out_t = np.zeros((bsz,), bool)
-    sub_lo: List[List[int]] = [[] for _ in range(n_shards)]
-    sub_hi: List[List[int]] = [[] for _ in range(n_shards)]
-    lane_subs: List[List[Tuple[int, int]]] = [[] for _ in range(bsz)]
-    for i in range(bsz):
-        lo, hi = int(lo_np[i]), int(hi_np[i])
-        if hi <= lo:
-            continue
-        s0 = int(np.searchsorted(holder._splits, lo, side="right"))
-        s1 = int(np.searchsorted(holder._splits, hi - 1, side="right"))
-        for s in range(s0, s1 + 1):
-            slo = max(lo, holder._bounds[s])
-            shi = min(hi, holder._bounds[s + 1])
-            if shi <= slo:
-                continue
-            lane_subs[i].append((s, len(sub_lo[s])))
-            sub_lo[s].append(slo)
-            sub_hi[s].append(shi)
-    n_per = np.array([len(x) for x in sub_lo], np.int64)
     holder._scans += int(n_scan_ops)
     tr = _tr(holder)
+    m = _metrics(holder)
+    live = hi_np > lo_np
+    comp = np.arange(n_shards)  # union-find over cross-shard-linked shards
+    with tr.span("router_pack", lanes=bsz) as pack_sp:
+        s0 = np.searchsorted(holder._splits, lo_np, side="right")
+        s1 = np.searchsorted(
+            holder._splits, np.maximum(hi_np - 1, lo_np), side="right"
+        )
+        multi = np.nonzero(live & (s0 < s1))[0]
+        single = np.nonzero(live & (s0 == s1))[0]
+        if multi.size == 0:
+            lane_of = single
+            sub_sid = s0[single]
+            sub_lo = lo_np[single]
+            sub_hi = hi_np[single]
+        else:
+            # Cross-shard lanes split at shard boundaries (host loop over
+            # just those lanes); a stable lane-major sort then interleaves
+            # them with the single-shard lanes, keeping each lane's
+            # sub-lanes contiguous and shard-ascending.
+            ln = [single]
+            sd = [s0[single]]
+            lo_l = [lo_np[single]]
+            hi_l = [hi_np[single]]
+            def _find(x):
+                while comp[x] != x:
+                    comp[x] = comp[comp[x]]
+                    x = comp[x]
+                return x
+            for i in multi.tolist():
+                for s in range(int(s0[i]), int(s1[i]) + 1):
+                    slo = max(int(lo_np[i]), holder._bounds[s])
+                    shi = min(int(hi_np[i]), holder._bounds[s + 1])
+                    if shi <= slo:
+                        continue
+                    ln.append(np.array([i]))
+                    sd.append(np.array([s]))
+                    lo_l.append(np.array([slo]))
+                    hi_l.append(np.array([shi]))
+                    # all of a lane's shards validate against ONE snapshot
+                    comp[_find(int(s0[i]))] = _find(s)
+            lane_of = np.concatenate(ln).astype(np.int64)
+            sub_sid = np.concatenate(sd).astype(np.int64)
+            sub_lo = np.concatenate(lo_l).astype(np.int64)
+            sub_hi = np.concatenate(hi_l).astype(np.int64)
+            order = np.argsort(lane_of, kind="stable")
+            lane_of = lane_of[order]
+            sub_sid = sub_sid[order]
+            sub_lo = sub_lo[order]
+            sub_hi = sub_hi[order]
+        n_sub = int(sub_sid.size)
+        n_per = np.bincount(sub_sid, minlength=n_shards).astype(np.int64)
+        if n_sub:
+            _note_pack(holder, pack_sp, _pow2(n_sub), n_sub)
     tr.shard_marks("scan.sublanes", n_per)
     _note_load(holder, n_per)
-    m = _metrics(holder)
+    if live.any():
+        _note_keys(holder, lo_np[live])
     if m is not None:
         for s in np.nonzero(n_per)[0]:
             m.inc_shard("scan_sublanes", int(n_per[s]), int(s))
         m.inc("scan_sublanes", int(n_per.sum()))
-    if int(n_per.sum()) == 0:
+    if n_sub == 0:
         return out_k, out_v, out_c, out_t
     # Shards linked by a cross-shard lane form one validation component:
     # all of a lane's sub-lanes must be accepted against ONE snapshot
     # (else the stitched row could mix states that never coexisted).
-    comp = np.arange(n_shards)
-
-    def _find(x):
+    def _root(x):
         while comp[x] != x:
             comp[x] = comp[comp[x]]
             x = comp[x]
         return x
 
-    for subs in lane_subs:
-        for s, _ in subs[1:]:
-            comp[_find(subs[0][0])] = _find(s)
-    groups = np.array([_find(s) for s in range(n_shards)])
-    w = _pow2(int(n_per.max()))
-    lo_sw = np.full((n_shards, w), int(EMPTY), np.int64)
-    hi_sw = np.full((n_shards, w), int(EMPTY), np.int64)
-    for s in range(n_shards):
-        lo_sw[s, : n_per[s]] = sub_lo[s]
-        hi_sw[s, : n_per[s]] = sub_hi[s]
-    g_k, g_v, g_c, g_t = run_scan_phase(
-        holder,
-        jnp.asarray(lo_sw, KEY_DTYPE),
-        jnp.asarray(hi_sw, KEY_DTYPE),
-        cap,
-        n_per,
-        max_retries,
-        groups,
+    groups = np.array([_root(s) for s in range(n_shards)])
+    buf_k, buf_v, buf_c, buf_t = run_scan_phase(
+        holder, sub_sid, sub_lo, sub_hi, cap, max_retries, groups
     )
+    if multi.size == 0:
+        # every lane is one sub-lane: the stitched output IS the buffer
+        out_k[lane_of] = buf_k
+        out_v[lane_of] = buf_v
+        out_c[lane_of] = buf_c
+        out_t[lane_of] = buf_t
+        return out_k, out_v, out_c, out_t
     with tr.span("router_stitch", lanes=bsz):
-        for i in range(bsz):
-            if not lane_subs[i]:
+        starts = np.searchsorted(lane_of, np.arange(bsz))
+        ends = np.searchsorted(lane_of, np.arange(bsz) + 1)
+        for i in np.unique(lane_of).tolist():
+            a, e = int(starts[i]), int(ends[i])
+            if e - a == 1:
+                out_k[i] = buf_k[a]
+                out_v[i] = buf_v[a]
+                out_c[i] = buf_c[a]
+                out_t[i] = buf_t[a]
                 continue
             parts_k, parts_v, truncated = [], [], False
-            for s, j in lane_subs[i]:  # shards ascending ⇒ keys ascending
-                c = int(g_c[s, j])
-                truncated = truncated or bool(g_t[s, j])
-                parts_k.append(g_k[s, j, :c])
-                parts_v.append(g_v[s, j, :c])
+            for j in range(a, e):  # shards ascending ⇒ keys ascending
+                c = int(buf_c[j])
+                truncated = truncated or bool(buf_t[j])
+                parts_k.append(buf_k[j, :c])
+                parts_v.append(buf_v[j, :c])
             cat_k = np.concatenate(parts_k)
             cat_v = np.concatenate(parts_v)
             n = min(cat_k.size, cap)
@@ -572,44 +632,63 @@ def scan_lanes(holder, lo_np, hi_np, cap, *, n_scan_ops, max_retries: int = 8):
 
 
 def run_scan_phase(
-    holder, lo_sw, hi_sw, cap, n_per_shard, max_retries: int = 8, groups=None
+    holder, sub_sid, sub_lo, sub_hi, cap, max_retries: int = 8, groups=None
 ):
-    """One vmapped gather over all shards + per-*component* version
+    """One FLAT ragged gather over all sub-lanes + per-*component* version
     validation: shards linked by a cross-shard lane (``groups``) accept
     or retry TOGETHER, so every lane's stitched row comes from one
     snapshot (the single-tree linearization guarantee); independent
     shards validate independently, which is the conflict-window shrink
-    sharding buys.  An accepted component's rows are frozen (its scans
-    linearized at that validation point); only failed components' lanes
-    retry — ``scan_retries`` accrues the retried lane count.  Raises
-    ``ScanConflictError`` after ``max_retries``; ``holder.scan_hook``
-    (modeling update rounds from other engine replicas) is called between
-    each gather and its validation."""
-    n_s, w = int(lo_sw.shape[0]), int(lo_sw.shape[1])
+    sharding buys.  The flat block packs every shard's sub-lanes side by
+    side at width ``pow2(n_sub)`` — device cost tracks the true lane
+    count, not ``S × pow2(max per-shard count)`` — and a retry re-packs
+    ONLY the pending components' lanes (an accepted component's rows are
+    frozen; its scans linearized at that validation point), so per-shard
+    validation's retry savings convert to wall-clock.  ``scan_retries``
+    accrues the retried lane count.  Raises ``ScanConflictError`` after
+    ``max_retries``; ``holder.scan_hook`` (modeling update rounds from
+    other engine replicas) is called between each gather and its
+    validation."""
+    n_s = holder.n_shards
+    sub_sid = np.asarray(sub_sid, np.int64)
+    sub_lo = np.asarray(sub_lo, np.int64)
+    sub_hi = np.asarray(sub_hi, np.int64)
+    n_sub = int(sub_sid.size)
     if groups is None:
         groups = np.arange(n_s)
-    buf_k = np.full((n_s, w, cap), int(EMPTY), np.int64)
-    buf_v = np.zeros((n_s, w, cap), np.int64)
-    buf_c = np.zeros((n_s, w), np.int32)
-    buf_t = np.zeros((n_s, w), bool)
-    n_per_shard = np.asarray(n_per_shard)
+    buf_k = np.full((n_sub, cap), int(EMPTY), np.int64)
+    buf_v = np.zeros((n_sub, cap), np.int64)
+    buf_c = np.zeros((n_sub,), np.int32)
+    buf_t = np.zeros((n_sub,), bool)
+    n_per_shard = np.bincount(sub_sid, minlength=n_s).astype(np.int64)
     pending = n_per_shard > 0  # lane-less shards are trivially done
+    cur = np.arange(n_sub)  # original sub-lane indices in the packed block
     retried = 0
     tr = _tr(holder)
     m = _metrics(holder)
     # a scan_hook writer may push a shard past max_keys_per_shard: the
     # split (which restacks to S+1 shards) must not fire under this
-    # loop's (S, w) lane routing — defer it to the next update round.
+    # loop's flat lane routing — defer it to the next round boundary.
     holder._scan_active += 1
     try:
-        with tr.span("scan", lanes=int(n_per_shard.sum()), shards=n_s) as scan_sp:
+        with tr.span("scan", lanes=n_sub, shards=n_s) as scan_sp:
             for _attempt in range(max_retries):
+                w = _pow2(cur.size)
+                sid_w = np.zeros(w, np.int64)
+                lo_w = np.full(w, int(EMPTY), np.int64)
+                hi_w = np.full(w, int(EMPTY), np.int64)
+                sid_w[: cur.size] = sub_sid[cur]
+                lo_w[: cur.size] = sub_lo[cur]
+                hi_w[: cur.size] = sub_hi[cur]
                 snap = holder.stacked
-                with tr.span("scan.gather", attempt=_attempt) as sp:
+                with tr.span("scan.gather", attempt=_attempt, width=w) as sp:
+                    sid_j = jnp.asarray(sid_w, jnp.int32)
+                    lo_j = jnp.asarray(lo_w, KEY_DTYPE)
+                    hi_j = jnp.asarray(hi_w, KEY_DTYPE)
                     out, touched = gather_until_frontier_fits(
                         holder,
-                        lambda fc: _v_scan(
-                            snap, holder.cfg, lo_sw, hi_sw, fc, cap,
+                        lambda fc: _phase_scan_flat(
+                            snap, holder.cfg, sid_j, lo_j, hi_j, fc, cap,
                             holder.narrow_scan, holder.narrow,
                         ),
                     )
@@ -619,10 +698,10 @@ def run_scan_phase(
                 with tr.span("scan.validate", attempt=_attempt):
                     snap_ver = np.asarray(snap.ver)
                     live_ver = np.asarray(holder.stacked.ver)
-                    touched_np = np.asarray(touched)
+                    touched_np = np.asarray(touched)  # (L, w, F) per-lane ids
                     shard_ok = np.zeros(n_s, bool)
                     for s in np.nonzero(pending)[0]:
-                        ids = np.unique(touched_np[s])
+                        ids = np.unique(touched_np[:, sid_w == s, :])
                         shard_ok[s] = np.array_equal(
                             snap_ver[s][ids], live_ver[s][ids]
                         )
@@ -645,20 +724,19 @@ def run_scan_phase(
                                 attempt=_attempt,
                             )
                 if accept.any():
-                    k_np = np.asarray(out.keys)
-                    v_np = np.asarray(out.vals)
-                    c_np = np.asarray(out.count)
-                    t_np = np.asarray(out.truncated)
-                    for s in np.nonzero(accept)[0]:
-                        buf_k[s] = k_np[s]
-                        buf_v[s] = v_np[s]
-                        buf_c[s] = c_np[s]
-                        buf_t[s] = t_np[s]
+                    take = accept[sub_sid[cur]]  # rows of accepted shards
+                    rows = np.nonzero(take)[0]
+                    buf_k[cur[rows]] = np.asarray(out.keys)[rows]
+                    buf_v[cur[rows]] = np.asarray(out.vals)[rows]
+                    buf_c[cur[rows]] = np.asarray(out.count)[rows]
+                    buf_t[cur[rows]] = np.asarray(out.truncated)[rows]
                     pending &= ~accept
                 if not pending.any():
                     holder._scan_retries += retried
                     scan_sp.note(retries=retried, attempts=_attempt + 1)
                     return buf_k, buf_v, buf_c, buf_t
+                # only pending components' sub-lanes re-gather
+                cur = cur[pending[sub_sid[cur]]]
             raise ScanConflictError(
                 f"scan phase: version validation failed {max_retries} "
                 f"times on shards {np.nonzero(pending)[0].tolist()}"
@@ -677,6 +755,10 @@ def execute_scan(holder, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOu
     k_, v_, c_, t_ = scan_lanes(
         holder, lo, hi, cap, n_scan_ops=int(lo.size), max_retries=max_retries
     )
+    # Scan rounds never run the shard-overflow split (pinned: splits defer
+    # to the next update round), but load rebalancing may act here — read
+    # skew is exactly what the hot-shard window observes on scan traffic.
+    holder._maybe_repartition()
     return ScanOutput(
         keys=jnp.asarray(k_),
         vals=jnp.asarray(v_),
@@ -761,10 +843,16 @@ def _occ_round(holder, ops_sw, keys_sw, vals_sw):
     are *not* sub-rounds it executes: its lanes are masked out, its
     ``subrounds`` counter stays put, and its durable/validation cost is
     zero (the vmap itself still spans all shards, as any SPMD program
-    must).  ``holder.subround_hook`` fires after every executed sub-round
-    — the durable layer's per-update flush+fence discipline."""
+    must).  Sub-round lane masking is RAGGED: each sub-round re-packs
+    only its live lanes (rank-r duplicates) into a block bucketed to
+    ``pow2(max per-shard live count)``, so tail sub-rounds — typically a
+    handful of duplicate keys — run at width 8 instead of the full round
+    width, and already-satisfied lanes never re-enter the search phase.
+    ``holder.subround_hook`` fires after every executed sub-round — the
+    durable layer's per-update flush+fence discipline."""
     on = np.asarray(ops_sw)
     kn = np.asarray(keys_sw)
+    vn = np.asarray(vals_sw)
     n_s, w = on.shape
     rank = np.stack([_duplicate_ranks(on[s], kn[s]) for s in range(n_s)])
     # per-shard sub-round budget: rank r of a real op executes in
@@ -774,21 +862,40 @@ def _occ_round(holder, ops_sw, keys_sw, vals_sw):
         live.any(axis=1), np.where(live, rank, 0).max(axis=1), -1
     )
     n_sub = int(rank.max()) + 1
-    results = jnp.full((n_s, w), NOTFOUND, VAL_DTYPE)
-    found = jnp.zeros((n_s, w), bool)
-    rank_j = jnp.asarray(rank)
+    results = np.full((n_s, w), int(NOTFOUND), np.int64)
+    found = np.zeros((n_s, w), bool)
     tr = _tr(holder)
     reg = _metrics(holder)
     for r in range(n_sub):
         active = shard_max >= r  # (S,) host bools: shard executes r
-        m = (rank_j == r) & (ops_sw != OP_NOP)
-        sub_ops = jnp.where(m, ops_sw, OP_NOP).astype(jnp.int32)
-        with tr.span("occ_subround", subround=r, active=int(active.sum())):
+        m = (rank == r) & live  # (S, w) this sub-round's live lanes
+        counts_r = m.sum(axis=1)
+        w_r = _pow2(int(counts_r.max()))
+        s_idx, pos = np.nonzero(m)  # row-major ⇒ s_idx sorted
+        starts = np.searchsorted(s_idx, np.arange(n_s))
+        slot = np.arange(s_idx.size) - starts[s_idx]
+        sub_ops = np.full((n_s, w_r), OP_NOP, np.int32)
+        sub_keys = np.zeros((n_s, w_r), np.int64)
+        sub_vals = np.zeros((n_s, w_r), np.int64)
+        sub_ops[s_idx, slot] = on[s_idx, pos]
+        sub_keys[s_idx, slot] = kn[s_idx, pos]
+        sub_vals[s_idx, slot] = vn[s_idx, pos]
+        with tr.span(
+            "occ_subround", subround=r, active=int(active.sum()), width=w_r
+        ) as sp:
+            if reg is not None and w_r:
+                waste = (n_s * w_r - int(s_idx.size)) / (n_s * w_r)
+                reg.set_gauge("router_pack_width", w_r)
+                reg.set_gauge("pad_waste_frac", waste)
+            sp.note(width=w_r, real=int(s_idx.size))
             sub_res, sub_found = _combine_apply(
-                holder, sub_ops, keys_sw, vals_sw
+                holder,
+                jnp.asarray(sub_ops),
+                jnp.asarray(sub_keys, KEY_DTYPE),
+                jnp.asarray(sub_vals, VAL_DTYPE),
             )
-        results = jnp.where(m, sub_res, results)
-        found = jnp.where(m, sub_found, found)
+        results[s_idx, pos] = np.asarray(sub_res)[s_idx, slot]
+        found[s_idx, pos] = np.asarray(sub_found)[s_idx, slot]
         if reg is not None:
             reg.inc("occ_subrounds", int(active.sum()))
         st = holder.stacked
@@ -799,7 +906,7 @@ def _occ_round(holder, ops_sw, keys_sw, vals_sw):
         )
         if holder.subround_hook is not None:
             holder.subround_hook()
-    return results, found
+    return jnp.asarray(results, VAL_DTYPE), jnp.asarray(found)
 
 
 def _drain_deferred(holder, ks, final_vals, arrival, deferred):
@@ -861,21 +968,27 @@ def _split_cascade(holder, ids_per_shard: List[np.ndarray]):
                 continue
             rd = _independent_by_parent_np(
                 parent[s], np.asarray(ready, np.int32)
-            )[: holder._wave_w]  # fixed wave width (no recompiles)
+            )[: holder._wave_w]  # per-wave node cap
             ready_rows.append(rd)
             blocked_rows.append(blocked)
         if not any(r.size for r in ready_rows):
             continue
         holder._ensure_capacity(2 * max(int(r.size) for r in ready_rows))
-        node_ids = np.zeros((n_s, holder._wave_w), np.int32)
-        active = np.zeros((n_s, holder._wave_w), bool)
+        # ragged wave width: typical waves touch a handful of nodes, so
+        # the vmapped kernel runs at width 8 instead of the full cap.
+        # Two buckets only ({8, cap}) — each wave kernel compiles at most
+        # twice, and big waves are rare enough that padding them is fine.
+        max_nodes = max(int(r.size) for r in ready_rows)
+        w_wave = 8 if max_nodes <= 8 else holder._wave_w
+        node_ids = np.zeros((n_s, w_wave), np.int32)
+        active = np.zeros((n_s, w_wave), bool)
         for s, rd in enumerate(ready_rows):
             node_ids[s, : rd.size] = rd
             active[s, : rd.size] = True
         tr = _tr(holder)
-        with tr.span("split_wave", wave=guard) as sp:
+        with tr.span("split_wave", wave=guard, width=w_wave) as sp:
             holder.stacked = _v_split(
-                holder.stacked, holder.cfg, holder._wave_w,
+                holder.stacked, holder.cfg, w_wave,
                 jnp.asarray(node_ids), jnp.asarray(active),
             )
             sp.fence(holder.stacked)
@@ -933,14 +1046,17 @@ def _fix_underfull_all(holder):
                 if (not is_leaf[s, r]) and int(size[s, r]) == 1:
                     want_shrink = True
         if any_wave:
-            node_ids = np.zeros((n_s, holder._wave_w), np.int32)
-            active = np.zeros((n_s, holder._wave_w), bool)
+            # ragged wave width, as in _split_cascade ({8, cap} buckets)
+            max_nodes = max(int(r.size) for r in sel_rows)
+            w_wave = 8 if max_nodes <= 8 else holder._wave_w
+            node_ids = np.zeros((n_s, w_wave), np.int32)
+            active = np.zeros((n_s, w_wave), bool)
             for s, sel in enumerate(sel_rows):
                 node_ids[s, : sel.size] = sel
                 active[s, : sel.size] = True
-            with tr.span("underfull_wave", wave=guard) as sp:
+            with tr.span("underfull_wave", wave=guard, width=w_wave) as sp:
                 holder.stacked = _v_underfull(
-                    holder.stacked, holder.cfg, holder._wave_w,
+                    holder.stacked, holder.cfg, w_wave,
                     jnp.asarray(node_ids), jnp.asarray(active),
                 )
                 sp.fence(holder.stacked)
@@ -998,9 +1114,15 @@ def execute_plan(holder, plan: RoundPlan) -> RoundOutput:
         ops_np = np.asarray(plan.ops)
         keys_np = np.asarray(plan.keys)
         vals_np = np.asarray(plan.vals)
-        is_point_j, is_range_j = elim.lane_masks(plan.ops)
-        is_point = np.asarray(is_point_j)
-        is_range = np.asarray(is_range_j)
+        # host mirror of elimination.lane_masks: classifying 256 lanes is
+        # a handful of numpy compares, not worth five op-by-op dispatches
+        # on the round's critical path.
+        is_range = ops_np == int(elim.OP_RANGE)
+        is_point = (
+            (ops_np == int(elim.OP_FIND))
+            | (ops_np == int(elim.OP_INSERT))
+            | (ops_np == int(elim.OP_DELETE))
+        )
 
         results = np.full((bsz,), int(NOTFOUND), np.int64)
         found = np.zeros((bsz,), bool)
@@ -1035,7 +1157,7 @@ def execute_plan(holder, plan: RoundPlan) -> RoundOutput:
         # --- point lanes: pack per shard (stable ⇒ arrival order kept).
         if plan.has_point:
             pl = np.nonzero(is_point)[0]
-            with tr.span("router_pack", lanes=int(pl.size)):
+            with tr.span("router_pack", lanes=int(pl.size)) as pack_sp:
                 shard = np.searchsorted(
                     holder._splits, keys_np[pl], side="right"
                 )
@@ -1050,8 +1172,10 @@ def execute_plan(holder, plan: RoundPlan) -> RoundOutput:
                 vals_sw[shard_sorted, slot_sorted] = vals_np[pl][order]
                 slot = np.empty(pl.size, np.int64)
                 slot[order] = slot_sorted
+                _note_pack(holder, pack_sp, n_shards * w, int(pl.size))
             tr.shard_marks("point_lanes", counts)
             _note_load(holder, counts)
+            _note_keys(holder, keys_np[pl])
             if reg is not None:
                 reg.inc("point_lanes", int(pl.size))
                 for s in np.nonzero(counts)[0]:
@@ -1098,7 +1222,7 @@ def execute_scan_delete(holder, lo, hi, cap: int = 128, max_retries: int = 8) ->
         del_keys = k_[k_ != int(EMPTY)]
         if del_keys.size:
             n_shards = holder.n_shards
-            with tr.span("router_pack", lanes=int(del_keys.size)):
+            with tr.span("router_pack", lanes=int(del_keys.size)) as pack_sp:
                 shard = np.searchsorted(holder._splits, del_keys, side="right")
                 counts = np.bincount(shard, minlength=n_shards)
                 w = _pow2(int(counts.max()))
@@ -1107,6 +1231,7 @@ def execute_scan_delete(holder, lo, hi, cap: int = 128, max_retries: int = 8) ->
                 shard_sorted, slot_sorted, order = _pack_slots(shard, n_shards)
                 ops_sw[shard_sorted, slot_sorted] = OP_DELETE
                 keys_sw[shard_sorted, slot_sorted] = del_keys[order]
+                _note_pack(holder, pack_sp, n_shards * w, int(del_keys.size))
             tr.shard_marks("point_lanes", counts)
             _note_load(holder, counts)
             if reg is not None:
@@ -1121,6 +1246,7 @@ def execute_scan_delete(holder, lo, hi, cap: int = 128, max_retries: int = 8) ->
                 jnp.zeros((n_shards, w), VAL_DTYPE),
             )
         holder._rounds += 1
+        holder._maybe_split_shards()
     return ScanOutput(
         keys=jnp.asarray(k_),
         vals=jnp.asarray(v_),

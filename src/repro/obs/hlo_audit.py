@@ -64,7 +64,7 @@ def audit_search_phases(ops: Iterable[str] = DEFAULT_OPS) -> Dict[str, Dict[str,
 
     Returns ``{program_name: {op: count}}`` for:
       * ``scan_descent``       — ``frontier_expand`` (tree_descend path)
-      * ``scan_phase.narrow``  — ``rounds._phase_scan`` narrow descent
+      * ``scan_phase.narrow``  — ``rounds._phase_scan_flat`` narrow descent
       * ``search.ref``         — ``rounds._phase_search_combine`` jnp oracle
       * ``search.narrow``      — same phase on the fused narrow path
     """
@@ -86,10 +86,13 @@ def audit_search_phases(ops: Iterable[str] = DEFAULT_OPS) -> Dict[str, Dict[str,
         jnp.asarray(rng.integers(0, 10**6, 256), jnp.int64),
         jnp.zeros((256,), jnp.int64),
     )
+    # the flat ragged scan phase runs on the STACKED state with per-lane
+    # shard ids (ABTree is the S=1 stack; both lanes expand in shard 0)
+    sid = jnp.zeros(2, jnp.int32)
     programs = {
         "scan_descent": fe.lower(t.state, t.cfg, lo, hi).as_text(),
-        "scan_phase.narrow": R._phase_scan.lower(
-            t.state, t.cfg, lo, hi, 16, 32, True, True
+        "scan_phase.narrow": R._phase_scan_flat.lower(
+            t.stacked, t.cfg, sid, lo, hi, 16, 32, True, True
         ).as_text(),
         "search.ref": R._phase_search_combine.lower(
             t.state, batch, t.cfg, False

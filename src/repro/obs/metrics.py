@@ -106,6 +106,15 @@ class MetricsRegistry:
             for s in sorted((s for s in per if s >= at), reverse=True):
                 per[s + 1] = per.pop(s)
 
+    def remove_shard(self, at: int) -> None:
+        """A cold-shard merge retired the shard at index ``at``: drop its
+        cells and shift every per-shard cell with index > ``at`` down by
+        one so attribution keeps following the surviving shards."""
+        for per in self._shard_counters.values():
+            per.pop(at, None)
+            for s in sorted(s for s in per if s > at):
+                per[s - 1] = per.pop(s)
+
     # -- snapshot --------------------------------------------------------------
 
     def add_collector(self, fn: Callable[[], dict]) -> None:

@@ -23,6 +23,7 @@ def render_report(doc: dict) -> str:
     spans = defaultdict(lambda: [0, 0.0])  # name -> [count, total_us]
     shard_lanes = defaultdict(lambda: defaultdict(int))  # name -> shard -> lanes
     shard_events = defaultdict(lambda: defaultdict(int))  # name -> shard -> count
+    packs = []  # (width, real, pad_waste) per router_pack span
     for ev in doc.get("traceEvents", []):
         ph = ev.get("ph")
         tid = int(ev.get("tid", 0))
@@ -30,6 +31,16 @@ def render_report(doc: dict) -> str:
             agg = spans[ev["name"]]
             agg[0] += 1
             agg[1] += float(ev.get("dur", 0.0))
+            if ev["name"] == "router_pack":
+                args = ev.get("args") or {}
+                if "width" in args:
+                    packs.append(
+                        (
+                            int(args["width"]),
+                            int(args.get("real", 0)),
+                            float(args.get("pad_waste", 0.0)),
+                        )
+                    )
         elif ph == "i" and tid >= 1:
             s = tid - 1
             shard_events[ev["name"]][s] += 1
@@ -58,6 +69,23 @@ def render_report(doc: dict) -> str:
             lines.append(row)
     else:
         lines.append("  (no per-shard events)")
+
+    # ragged router packing: how much padding did shipped lane blocks carry?
+    # (the gauges router_pack_width / pad_waste_frac hold the latest pack;
+    # this table aggregates every pack span the trace recorded.)
+    lines.append("")
+    lines.append("router pack stats (ragged batching)")
+    if packs:
+        n = len(packs)
+        mean_w = sum(p[0] for p in packs) / n
+        mean_r = sum(p[1] for p in packs) / n
+        mean_waste = sum(p[2] for p in packs) / n
+        lines.append(
+            f"  {'packs':>7} {'mean_width':>11} {'mean_real':>10} {'mean_pad_waste':>15}"
+        )
+        lines.append(f"  {n:>7} {mean_w:>11.1f} {mean_r:>10.1f} {mean_waste:>15.3f}")
+    else:
+        lines.append("  (no router_pack spans)")
     return "\n".join(lines)
 
 

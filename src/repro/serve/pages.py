@@ -97,6 +97,7 @@ class PrefixIndex:
         max_keys_per_shard: Optional[int] = None,
         durable_dir: Optional[str] = None,
         snapshot_every: int = 64,
+        auto_repartition: bool = False,
     ):
         cfg = TreeConfig(capacity=capacity, b=8, a=2)
         if durable_dir is not None:
@@ -116,12 +117,14 @@ class PrefixIndex:
                     snapshot_every=snapshot_every,
                     key_space=key_space if key_space is not None else (0, 1 << 63),
                     max_keys_per_shard=max_keys_per_shard,
+                    auto_repartition=auto_repartition,
                 )
         elif shards > 1:
             self.tree = ABForest(
                 n_shards=shards, cfg=cfg, mode=mode,
                 key_space=key_space if key_space is not None else (0, 1 << 63),
                 max_keys_per_shard=max_keys_per_shard,
+                auto_repartition=auto_repartition,
             )
         else:
             self.tree = ABTree(cfg, mode=mode)
@@ -183,11 +186,12 @@ class SessionIndex(PrefixIndex):
         max_keys_per_shard: Optional[int] = None,
         durable_dir: Optional[str] = None,
         snapshot_every: int = 64,
+        auto_repartition: bool = False,
     ):
         super().__init__(
             mode=mode, capacity=capacity, shards=shards, key_space=key_space,
             max_keys_per_shard=max_keys_per_shard, durable_dir=durable_dir,
-            snapshot_every=snapshot_every,
+            snapshot_every=snapshot_every, auto_repartition=auto_repartition,
         )
 
     def evict_range(self, lo: int, hi: int, cap: int = 256) -> List[int]:

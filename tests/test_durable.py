@@ -348,6 +348,89 @@ def test_forest_crash_mid_shard_split_recovers_committed_prefix(tmp_path):
     assert r2.forest.n_shards == r.forest.n_shards
 
 
+def _skewed_write_rounds(n_rounds=8, seed=31):
+    """Insert rounds with an 80/20 hot-prefix skew on a (0, 400) 2-shard
+    key space: enough sustained shard-0 load to trip a 64-lane hot window
+    into a boundary rebalance, while shard 1's 20% share stays above the
+    cold-merge threshold."""
+    rng = np.random.default_rng(seed)
+    rounds = []
+    for r in range(n_rounds):
+        keys = np.concatenate(
+            [rng.integers(0, 100, 38), rng.integers(200, 400, 10)]
+        ).astype(np.int64)
+        vals = rng.integers(0, 1000, 48).astype(np.int64)
+        rounds.append(([OP_INSERT] * 48, keys.tolist(), vals.tolist()))
+    return rounds
+
+
+def test_forest_crash_mid_repartition_recovers_committed_prefix(tmp_path):
+    """A crash injected while a load-aware boundary rebalance is moving
+    keys must recover the last committed ROUND boundary: nothing of the
+    repartitioning round (nor the half-swept range) is visible, and the
+    recovered forest keeps the PRE-move partition.  The crash discipline
+    is identical to mid-split — a repartition is journal re-keying plus
+    forced snapshots, never a commit of its own."""
+    chunks = _skewed_write_rounds()
+
+    # dry run: find the round whose rebalance fires first (during round r
+    # the commit counter stands at r + 1; the init snapshot is commit 0).
+    ref = DurableForest(
+        str(tmp_path / "rep_ref"), n_shards=2, cfg=CFG, key_space=(0, 400),
+        snapshot_every=10**9, auto_repartition=True,
+    )
+    ref.forest.hot_shard_window = 64
+    o_ref = DictOracle()
+    ref_prefixes = [o_ref.items()]
+    first_rep_round = None
+    for r_i, (ops, keys, vals) in enumerate(chunks):
+        ref.apply_round(ops, keys, vals)
+        o_ref.apply_round(ops, keys, vals)
+        ref_prefixes.append(o_ref.items())
+        reps = int(ref.forest.metrics.snapshot()["counters"].get("repartitions", 0))
+        if first_rep_round is None and reps >= 1:
+            first_rep_round = r_i
+    assert first_rep_round is not None, "workload never tripped a rebalance"
+    moved_splits = ref.forest.splits.tolist()
+    assert moved_splits != [200], "rebalance did not move the boundary"
+
+    crash = CrashPoint(step="mid_repartition", at_commit=first_rep_round + 1)
+    d = str(tmp_path / "rep_crash")
+    f = DurableForest(
+        d, n_shards=2, cfg=CFG, key_space=(0, 400),
+        snapshot_every=10**9, auto_repartition=True, crash=crash,
+    )
+    f.forest.hot_shard_window = 64
+    o = DictOracle()
+    prefixes = [o.items()]
+    crashed = False
+    for ops, keys, vals in chunks:
+        try:
+            f.apply_round(ops, keys, vals)
+            o.apply_round(ops, keys, vals)
+            prefixes.append(o.items())
+        except SimulatedCrash:
+            crashed = True
+            break
+    assert crashed, "mid-repartition crash did not fire"
+    r = recover_forest(d)
+    check_forest_invariants(r.forest)
+    # nothing of the repartitioning round committed: recovery = previous
+    # round's oracle prefix with the PRE-move partition.
+    assert r.items() == prefixes[-1]
+    assert r.forest.n_shards == 2
+    assert r.forest.splits.tolist() == [200]
+    # the recovered forest is operational: replaying the remaining rounds
+    # converges to the reference contents (the rebalance never changes
+    # contents, only the partition), and a re-recovery agrees.
+    for ops, keys, vals in chunks[first_rep_round:]:
+        r.apply_round(ops, keys, vals)
+    assert r.items() == ref_prefixes[-1]
+    check_forest_invariants(r.forest)
+    r2 = recover_forest(d)
+    assert r2.items() == ref_prefixes[-1]
+
+
 def test_forest_split_snapshots_only_affected_shards(tmp_path):
     """A shard split forces snapshots of exactly the two affected shards;
     untouched shards keep their segment chains (journals are keyed by

@@ -239,3 +239,66 @@ def test_hot_shard_hook_fires_under_skew():
     keys = rng.choice(4096, size=256, replace=False).astype(np.int64)  # uniform
     f2.apply_round(np.full(256, OP_INSERT, np.int32), keys, keys)
     assert not events, "balanced load must not fire the hook"
+
+
+# ---------------------------------------------------------------------------
+# ragged-router pack telemetry + repartition span
+# ---------------------------------------------------------------------------
+
+
+def test_pad_waste_drops_under_ragged_packing():
+    """The router's pow2-bucketed per-shard widths must ship materially
+    less padding than the full-batch-width packing they replaced: on a
+    uniform round the observed ``pack_pad_waste`` sits well below the
+    waste of padding every shard to the whole batch's pow2 width.  The
+    ``router_pack_width`` / ``pad_waste_frac`` gauges expose the last
+    pack's numbers."""
+    from repro.core.rounds import _pow2
+
+    f = ABForest(n_shards=4, cfg=CFG, key_space=(0, 4096))
+    rng = np.random.default_rng(9)
+    bsz = 64
+    for _ in range(3):
+        keys = rng.integers(0, 4096, bsz).astype(np.int64)
+        f.apply_round(np.full(bsz, OP_INSERT, np.int32), keys, keys)
+    h = f.metrics.histogram_summary("pack_pad_waste")
+    assert h["count"] >= 3
+    # full-width packing pads every shard to pow2(batch): 4·pow2(64) slots
+    # for 64 real lanes.
+    full_waste = (4 * _pow2(bsz) - bsz) / (4 * _pow2(bsz))
+    assert h["p50"] < full_waste - 0.15, (h, full_waste)
+    snap = f.metrics.snapshot()["gauges"]
+    assert snap["router_pack_width"] >= bsz  # S·w slots actually shipped
+    assert 0.0 <= snap["pad_waste_frac"] < full_waste
+
+
+def test_report_surfaces_pack_stats_and_repartition_span(tmp_path, capsys):
+    """``python -m repro.obs.report`` renders the router pack table (count,
+    mean width, mean pad waste) and lists the ``repartition`` span in the
+    phase breakdown once a load-aware rebalance has fired in the trace."""
+    from repro.obs import report
+
+    f = ABForest(
+        n_shards=2, cfg=CFG, key_space=(0, 400),
+        auto_repartition=True, hot_shard_window=64,
+    )
+    f.tracer = Tracer()
+    rng = np.random.default_rng(13)
+    seed = np.arange(0, 400, 2, dtype=np.int64)
+    f.apply_round(np.full(seed.size, OP_INSERT, np.int32), seed, seed)
+    for _ in range(4):  # 80/20 skew: trips the window into a rebalance
+        keys = np.concatenate(
+            [rng.integers(0, 100, 38), rng.integers(200, 400, 10)]
+        ).astype(np.int64)
+        f.apply_round(np.full(48, OP_FIND, np.int32), keys, np.zeros(48, np.int64))
+        if int(f.metrics.snapshot()["counters"].get("repartitions", 0)):
+            break
+    assert int(f.metrics.snapshot()["counters"].get("repartitions", 0)) >= 1
+    path = str(tmp_path / "trace_rep.json")
+    f.tracer.export(path)
+    assert report.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "repartition" in out  # the span rides the phase breakdown
+    assert "router pack stats" in out
+    assert "mean_pad_waste" in out
+    assert "(no router_pack spans)" not in out

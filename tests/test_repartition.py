@@ -1,0 +1,263 @@
+"""Load-aware repartitioning tests: the forest's partition may move under
+skew (boundary rebalance toward the hot prefix, cold-shard merge, and
+load-quantile overflow split points) but its CONTENTS must stay
+oracle-exact through every restack, with live traffic before, during and
+after.  Uniform traffic is pinned to never trip the detector — the
+partition only moves when the load says so."""
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; deterministic tests run without it
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    ABForest,
+    DictOracle,
+    OP_DELETE,
+    OP_FIND,
+    OP_INSERT,
+    OP_RANGE,
+    TreeConfig,
+    check_forest_invariants,
+)
+
+SMALL = TreeConfig(capacity=512, b=8, a=2, max_height=12)
+
+
+def _repartitions(f) -> int:
+    return int(f.metrics.snapshot()["counters"].get("repartitions", 0))
+
+
+def _seed(f, o, keys, vals=None):
+    keys = list(keys)
+    vals = [k * 3 for k in keys] if vals is None else list(vals)
+    f.apply_round([OP_INSERT] * len(keys), keys, vals)
+    o.apply_round([OP_INSERT] * len(keys), keys, vals)
+
+
+def _mixed_round(f, o, rng, lo, hi, bsz=32):
+    """One random mixed round (point + range lanes) checked op-for-op
+    against the oracle — the live-traffic probe used around restacks."""
+    ops = rng.choice(
+        [OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE], bsz, p=[0.3, 0.3, 0.2, 0.2]
+    ).astype(np.int32)
+    keys = rng.integers(lo, hi, bsz).astype(np.int64)
+    vals = rng.integers(0, 1000, bsz).astype(np.int64)
+    vals = np.where(ops == OP_RANGE, rng.integers(0, 24, bsz), vals)
+    out = f.apply_round(ops.tolist(), keys.tolist(), vals.tolist(), scan_cap=32)
+    exp_res, exp_found, _ = o.apply_mixed_round(
+        ops.tolist(), keys.tolist(), vals.tolist(), cap=32
+    )
+    got_found = np.asarray(out.found).tolist()
+    got_res = np.asarray(out.results).tolist()
+    for i, op in enumerate(ops):
+        assert got_found[i] == exp_found[i], (i, int(op))
+        if op == OP_RANGE or exp_found[i]:
+            assert got_res[i] == exp_res[i], (i, int(op))
+    assert f.items() == o.items()
+
+
+def test_boundary_rebalance_under_skew_matches_oracle():
+    """Sustained point-read skew at 2 shards moves the boundary toward the
+    hot prefix (the load-weighted quantile), and the forest stays
+    oracle-exact through the restack and under traffic after it."""
+    f = ABForest(
+        n_shards=2, cfg=SMALL, key_space=(0, 400),
+        auto_repartition=True, hot_shard_window=64,
+    )
+    o = DictOracle()
+    rng = np.random.default_rng(41)
+    _seed(f, o, range(0, 400, 2))
+    assert f.splits.tolist() == [200]
+
+    # 80/20 reads: shard 0's frac 0.79 clears the max(0.5, 1.5/2) = 0.75
+    # trip point, while shard 1's 0.21 share stays safely above
+    # cold_shard_frac — this must take the REBALANCE arm, not the merge.
+    for r in range(6):
+        keys = np.concatenate(
+            [rng.integers(0, 100, 38), rng.integers(200, 400, 10)]
+        ).astype(np.int64)
+        f.apply_round([OP_FIND] * 48, keys.tolist(), [0] * 48)
+        o.apply_round([OP_FIND] * 48, keys.tolist(), [0] * 48)
+        if _repartitions(f) >= 1:
+            break
+    assert _repartitions(f) >= 1, "hot window never tripped a rebalance"
+    assert f.n_shards == 2  # rebalance moves a boundary, never restacks S
+    new_split = int(f.splits[0])
+    assert new_split < 200, f"boundary did not move toward the hot prefix: {new_split}"
+    assert 0 < new_split <= 150, new_split  # lands toward the observed hot range
+    check_forest_invariants(f)
+    assert f.items() == o.items()
+
+    # live traffic across the moved boundary stays oracle-exact
+    for _ in range(3):
+        _mixed_round(f, o, rng, 0, 400)
+    check_forest_invariants(f)
+
+
+def test_cold_shard_merge_retires_shard_matches_oracle():
+    """Traffic that never touches one shard (window share ≤ cold_shard_frac)
+    retires it into its neighbor at the next hot-window fire: S shrinks by
+    one, the survivor owns the merged range, contents stay oracle-exact."""
+    f = ABForest(
+        n_shards=4, cfg=SMALL, key_space=(0, 400),
+        auto_repartition=True, hot_shard_window=64, cold_shard_frac=0.05,
+    )
+    o = DictOracle()
+    rng = np.random.default_rng(43)
+    _seed(f, o, range(0, 400, 2))
+    assert f.splits.tolist() == [100, 200, 300]
+
+    # 60/40 reads on shards 0/1, shard 3 starved: shard 0's frac ≥ 0.5
+    # trips the window and shard 3's zero share selects the merge arm.
+    for r in range(8):
+        k0 = rng.integers(0, 100, 30)
+        k1 = rng.integers(100, 200, 18)
+        keys = np.concatenate([k0, k1]).astype(np.int64)
+        f.apply_round([OP_FIND] * 48, keys.tolist(), [0] * 48)
+        o.apply_round([OP_FIND] * 48, keys.tolist(), [0] * 48)
+        if f.n_shards < 4:
+            break
+    assert f.n_shards == 3, "cold shard was never merged"
+    assert _repartitions(f) >= 1
+    assert len(f.splits) == 2
+    check_forest_invariants(f)
+    assert f.items() == o.items()
+
+    # the retired shard's range still serves traffic (from the survivor)
+    for _ in range(3):
+        _mixed_round(f, o, rng, 250, 400)
+    check_forest_invariants(f)
+
+
+def test_overflow_split_prefers_load_quantile():
+    """A shard-overflow split with a populated key sample picks the
+    load-weighted quantile as its split point — balancing observed traffic,
+    not key population — and stays oracle-exact through the restack."""
+    f = ABForest(
+        n_shards=2, cfg=SMALL, key_space=(0, 400),
+        max_keys_per_shard=130,
+        hot_shard_window=1 << 30,  # window never fires: isolate the split path
+    )
+    o = DictOracle()
+    rng = np.random.default_rng(47)
+    _seed(f, o, range(0, 400, 4))  # 50 keys per shard: no overflow yet
+
+    # reads concentrated in [0, 64): the sample's in-shard-0 median sits
+    # well below shard 0's population median (~100)
+    for _ in range(6):
+        keys = rng.integers(0, 64, 64).astype(np.int64)
+        f.apply_round([OP_FIND] * 64, keys.tolist(), [0] * 64)
+        o.apply_round([OP_FIND] * 64, keys.tolist(), [0] * 64)
+
+    # overflow shard 0 (range [0, 200)): 50 seeded + 100 fresh keys > 130,
+    # and either side of a load-median split stays under the cap (one split)
+    _seed(f, o, range(1, 200, 2))
+    assert f.n_shards == 3, "overflow did not split"
+    split_pt = int(f.splits[0])
+    assert split_pt < 100, (
+        f"split point {split_pt} tracks population, not load "
+        f"(load median ≈ 32, population median ≈ 100)"
+    )
+    check_forest_invariants(f)
+    assert f.items() == o.items()
+    for _ in range(3):
+        _mixed_round(f, o, rng, 0, 400)
+    check_forest_invariants(f)
+
+
+def test_uniform_traffic_never_repartitions():
+    """The skew detector's false-positive pin: uniform traffic across many
+    full windows trips nothing — no shard reaches 1.5x fair share, the
+    partition stays put and the repartition counter stays zero."""
+    f = ABForest(
+        n_shards=4, cfg=SMALL, key_space=(0, 400),
+        auto_repartition=True, hot_shard_window=64,
+    )
+    o = DictOracle()
+    rng = np.random.default_rng(53)
+    _seed(f, o, range(0, 400, 2))
+    splits0 = f.splits.tolist()
+    for _ in range(12):  # ~9 full windows of uniform reads
+        keys = rng.integers(0, 400, 48).astype(np.int64)
+        f.apply_round([OP_FIND] * 48, keys.tolist(), [0] * 48)
+    assert _repartitions(f) == 0
+    assert f.n_shards == 4
+    assert f.splits.tolist() == splits0
+    assert f.items() == o.items()
+
+
+def test_single_shard_never_repartitions():
+    """S=1 has no partition to move: total skew must be a no-op."""
+    f = ABForest(
+        n_shards=1, cfg=SMALL, key_space=(0, 400),
+        auto_repartition=True, hot_shard_window=64,
+    )
+    f.apply_round([OP_INSERT] * 32, list(range(32)), list(range(32)))
+    for _ in range(6):
+        f.apply_round([OP_FIND] * 48, [1] * 48, [0] * 48)
+    assert _repartitions(f) == 0
+    assert f.n_shards == 1
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_repartition_live_mixed_traffic_matches_oracle(n_shards):
+    """Deterministic soak: skewed mixed rounds (inserts/deletes/ranges over
+    a hot prefix) with auto-repartition on stay oracle-exact round for
+    round, whether or not a window fires mid-stream."""
+    f = ABForest(
+        n_shards=n_shards, cfg=SMALL, key_space=(0, 400),
+        auto_repartition=True, hot_shard_window=64,
+    )
+    o = DictOracle()
+    rng = np.random.default_rng(59 + n_shards)
+    _seed(f, o, range(0, 400, 2))
+    for r in range(10):
+        # hot prefix 3/4 of the time: windows fire mid-stream at some point
+        lo, hi = (0, 80) if r % 4 else (0, 400)
+        _mixed_round(f, o, rng, lo, hi, bsz=48)
+    check_forest_invariants(f)
+    assert f.items() == o.items()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=15,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    @given(
+        n_shards=st.sampled_from([1, 2, 3, 4]),
+        hot_lo=st.integers(min_value=0, max_value=300),
+        seed=st.integers(min_value=0, max_value=2**16),
+        rounds=st.integers(min_value=2, max_value=6),
+    )
+    def test_property_repartition_oracle_equivalence(n_shards, hot_lo, seed, rounds):
+        """For every shard count and any hot-range placement, skewed mixed
+        traffic with auto-repartition on is oracle-equivalent: whatever
+        boundary moves or merges the detector triggers, contents and
+        per-round results never diverge."""
+        f = ABForest(
+            n_shards=n_shards, cfg=SMALL, key_space=(0, 400),
+            auto_repartition=True, hot_shard_window=48,
+        )
+        o = DictOracle()
+        rng = np.random.default_rng(seed)
+        _seed(f, o, range(0, 400, 4))
+        hot_hi = min(hot_lo + 60, 400)
+        for _ in range(rounds):
+            _mixed_round(f, o, rng, hot_lo, hot_hi, bsz=48)
+        check_forest_invariants(f)
+        assert f.items() == o.items()
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_repartition_oracle_equivalence():
+        pass

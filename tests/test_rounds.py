@@ -332,19 +332,21 @@ def test_abtree_rounds_execute_through_s1_stacked_path(monkeypatch):
 
     combine_shapes = []
     scan_shapes = []
+    scan_sids = []
     orig_combine = R._v_search_combine
-    orig_scan = R._v_scan
+    orig_scan = R._phase_scan_flat
 
     def spy_combine(state, batch, cfg, narrow=False):
         combine_shapes.append(tuple(np.asarray(batch[0]).shape))
         return orig_combine(state, batch, cfg, narrow)
 
-    def spy_scan(state, cfg, lo, hi, fc, cap, narrow, narrow_descent=False):
+    def spy_scan(state, cfg, sid, lo, hi, fc, cap, narrow, narrow_descent=False):
         scan_shapes.append(tuple(np.asarray(lo).shape))
-        return orig_scan(state, cfg, lo, hi, fc, cap, narrow, narrow_descent)
+        scan_sids.append(np.asarray(sid))
+        return orig_scan(state, cfg, sid, lo, hi, fc, cap, narrow, narrow_descent)
 
     monkeypatch.setattr(R, "_v_search_combine", spy_combine)
-    monkeypatch.setattr(R, "_v_scan", spy_scan)
+    monkeypatch.setattr(R, "_phase_scan_flat", spy_scan)
 
     t = ABTree(SMALL)
     o = DictOracle()
@@ -353,4 +355,7 @@ def test_abtree_rounds_execute_through_s1_stacked_path(monkeypatch):
     vals = [30, 90, 20, 0, 0]
     _check_mixed_round(t, o, ops, keys, vals, cap=16)
     assert combine_shapes and all(s[0] == 1 and len(s) == 2 for s in combine_shapes)
-    assert scan_shapes and all(s[0] == 1 and len(s) == 2 for s in scan_shapes)
+    # the scan phase is flat/ragged: 1-D packed sub-lane blocks whose every
+    # live lane routes to the single shard (sid == 0 at S = 1)
+    assert scan_shapes and all(len(s) == 1 for s in scan_shapes)
+    assert all((sid == 0).all() for sid in scan_sids)

@@ -313,11 +313,12 @@ def test_narrow_scan_phase_trace_has_no_sort():
     t, _ = _grown_tree(n_keys=64)
     lo = jnp.asarray([0, 100], jnp.int64)
     hi = jnp.asarray([50, 10**6], jnp.int64)
-    txt_narrow = R._phase_scan.lower(
-        t.state, t.cfg, lo, hi, 8, 16, True, True
+    sid = jnp.zeros(2, jnp.int32)  # flat ragged phase: lanes carry shard ids
+    txt_narrow = R._phase_scan_flat.lower(
+        t.stacked, t.cfg, sid, lo, hi, 8, 16, True, True
     ).as_text()
-    txt_ref = R._phase_scan.lower(
-        t.state, t.cfg, lo, hi, 8, 16, False, False
+    txt_ref = R._phase_scan_flat.lower(
+        t.stacked, t.cfg, sid, lo, hi, 8, 16, False, False
     ).as_text()
     assert_no_sort(txt_narrow, "narrow scan phase")
     # descent contributes none — only the rank-select oracle's argsort
