@@ -18,7 +18,13 @@ Sweeps ``ABForest`` shard counts over three index workloads:
   forest.e.sK — YCSB-E fused mixed rounds (cross-shard range lanes split
     at shard boundaries, one vmapped round per batch).
 
-``python benchmarks/forest.py [--quick]``
+``python benchmarks/forest.py [--quick] [--trace PATH] [--audit PATH]``
+
+``--trace PATH`` installs a phase ``Tracer`` on every forest the sweep
+builds (via ``benchmarks.ycsb._instrument``) and writes Chrome
+trace-event JSON to PATH.  ``--audit PATH`` appends the flight-recorder
+leg: a fresh 4-shard YCSB-A run with the recorder installed, audit log
+written to PATH and replayed through the linearizability witness.
 """
 from __future__ import annotations
 
@@ -30,11 +36,30 @@ if __package__ in (None, ""):  # `python benchmarks/forest.py` (not -m)
     _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_ROOT, os.path.join(_ROOT, "src")]
 
+import benchmarks.ycsb as _ycsb
 from benchmarks.common import emit
 from benchmarks.ycsb import run_a_forest, run_e_forest
 
 
-def main(quick=False):
+def main(quick=False, trace=None, audit=None):
+    if trace:
+        from repro.obs.tracer import Tracer
+
+        _ycsb._TRACER = Tracer()
+    try:
+        _sections(quick=quick)
+        if audit:
+            _ycsb._run_audit(audit, workload="A", shards=4, quick=quick)
+    finally:
+        if trace:
+            from repro.obs.trace_export import write_chrome_trace
+
+            write_chrome_trace(trace, _ycsb._TRACER)
+            print(f"# wrote trace: {trace} ({len(_ycsb._TRACER.events)} events)")
+            _ycsb._TRACER = None
+
+
+def _sections(quick=False):
     sweep = (1, 2, 4) if quick else (1, 2, 4, 8)
 
     # --- uniform scaling leg: sharding must pay in wall-clock ----------
@@ -129,5 +154,21 @@ def main(quick=False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="record a phase trace of the whole sweep (every forest it "
+        "builds) and write Chrome trace-event JSON to PATH — render a "
+        "table with `python -m repro.obs.report PATH`",
+    )
+    ap.add_argument(
+        "--audit",
+        default=None,
+        metavar="PATH",
+        help="append the flight-recorder leg: a 4-shard YCSB-A run with "
+        "the recorder installed, audit log written to PATH and replayed "
+        "through the linearizability witness (non-zero exit on violation)",
+    )
     args = ap.parse_args()
-    main(quick=args.quick)
+    main(quick=args.quick, trace=args.trace, audit=args.audit)

@@ -38,6 +38,12 @@ the int64 jnp references — the A/B for the device-resident search path.
 ``--trace PATH`` installs a phase ``Tracer`` on every holder the section
 builds and writes Chrome trace-event JSON (Perfetto-loadable; or render a
 phase/shard table with ``python -m repro.obs.report PATH``).
+
+``--audit PATH`` re-runs the workload's forest leg with the flight
+recorder installed, writes the semantic audit log (JSONL) to PATH, and
+replays it through the linearizability witness
+(``python -m repro.obs.witness PATH``); workload A also gates the
+recorder's measured overhead at ≤ 5% ops/s vs a disabled-recorder twin.
 """
 from __future__ import annotations
 
@@ -67,11 +73,18 @@ from benchmarks.common import emit
 # set by main(trace=...): every holder the section builds gets this tracer
 # installed, so one --trace run captures all of the section's rounds.
 _TRACER = None
+# set by _run_audit: the audit leg's flight recorder.  Unlike the tracer
+# this is only ever installed for ONE holder at a time — the witness
+# replays the ring as a single sequential history, so interleaving rounds
+# from two different trees would be an (incorrectly) rejected history.
+_RECORDER = None
 
 
 def _instrument(holder):
     if _TRACER is not None:
         holder.tracer = _TRACER
+    if _RECORDER is not None:
+        holder.recorder = _RECORDER
     return holder
 
 
@@ -471,8 +484,106 @@ def _run_e(quick=False, scan_path="both", narrow=False):
             )
 
 
+def _recorder_overhead_ratio(shards, narrow=False, rounds=24):
+    """Paired in-bench recorder-overhead estimate on the YCSB-A round mix
+    (validated scan-reads + a hot-key writer block): one warmed forest,
+    each iteration runs the SAME batch recorder-off then recorder-on, and
+    the estimate is the median of the per-pair time ratios (on/off).
+    Pairing cancels the host drift that makes sequential whole-leg A/Bs a
+    coin flip — the same estimator ``_run_e_path`` uses for fused/split."""
+    from repro.obs.recorder import Recorder
+
+    key_range, batch, n_w = 4096, 256, 8
+    forest = ABForest(
+        n_shards=shards,
+        cfg=TPU8._replace(capacity=4 * key_range),
+        mode="elim",
+        key_space=(0, key_range),
+        narrow=narrow,
+    )
+    prefill_tree(forest, WorkloadConfig(key_range=key_range, seed=1))
+    rng = np.random.default_rng(7)
+    n_total = rounds + 8
+    reads = zipf_keys(rng, batch * n_total, key_range, 0.5)
+    writes = zipf_keys(rng, n_w * n_total, key_range, 1.2)
+    wvals = rng.integers(0, 1 << 30, n_w * n_total).astype(np.int64)
+    w_ops = np.concatenate(
+        [np.full(n_w, OP_DELETE, np.int32), np.full(n_w, OP_INSERT, np.int32)]
+    )
+
+    def one(r):
+        kr = reads[r * batch : (r + 1) * batch]
+        wk = writes[r * n_w : (r + 1) * n_w]
+        wv = wvals[r * n_w : (r + 1) * n_w]
+        forest.scan_round(kr, kr + 1, cap=1)
+        forest.apply_round(
+            w_ops,
+            np.concatenate([wk, wk]),
+            np.concatenate([np.zeros(n_w, np.int64), wv]),
+        )
+
+    for r in range(8):  # warm every width the mix touches
+        one(r)
+    on_rec = Recorder(capacity=1_000_000)
+    off_rec = Recorder(enabled=False)
+    dts = {False: [], True: []}
+    for r in range(8, n_total):
+        # off-then-on with identical inputs: delete+insert of the same hot
+        # keys nets to the same state, so the pair stays like-for-like
+        for enabled in (False, True):
+            forest.recorder = off_rec if not enabled else on_rec
+            t0 = time.perf_counter()
+            one(r)
+            dts[enabled].append(time.perf_counter() - t0)
+    return float(np.median(np.asarray(dts[True]) / np.asarray(dts[False])))
+
+
+def _run_audit(path, workload="A", shards=4, quick=False, narrow=False):
+    """``--audit PATH`` leg: re-run the workload's forest leg with a
+    high-capacity flight recorder installed from construction (the witness
+    replays from the EMPTY tree, so prefill must be on the ring too),
+    export the audit log to ``path``, and replay it through the
+    linearizability witness — a ``WitnessError`` fails the run non-zero.
+
+    Workload A additionally gates the recorder's cost at ≤ 5%: the paired
+    on/off estimator ``_recorder_overhead_ratio`` must report ≤ 1.05x."""
+    global _RECORDER
+    from repro.obs.recorder import Recorder
+    from repro.obs.witness import check_file
+
+    runner = run_a_forest if workload.upper() == "A" else run_e_forest
+    k = max(shards, 1)
+    rec = Recorder(capacity=1_000_000)
+    _RECORDER = rec
+    try:
+        runner(k, quick=quick, narrow=narrow)
+    finally:
+        _RECORDER = None
+    rec.export(path)
+    rep = check_file(path)  # raises WitnessError on an illegal history
+    gate = workload.upper() == "A"
+    ratio = _recorder_overhead_ratio(k, narrow=narrow) if gate else None
+    emit(
+        f"ycsb_audit.{workload.lower()}.s{k}{'.narrow' if narrow else ''}",
+        0.0,
+        f"witness_rounds={rep.rounds};lanes={rep.lanes};"
+        f"eliminated={rep.eliminated}"
+        + (f";recorder_overhead_x={ratio:.3f}" if gate else ""),
+        witness_rounds=rep.rounds,
+        witness_lanes=rep.lanes,
+        witness_eliminated=rep.eliminated,
+        **({"recorder_overhead_x": ratio} if gate else {}),
+    )
+    print(f"# wrote audit: {path} — {rep.summary()}")
+    if gate and ratio > 1.05:  # hard error: must survive python -O
+        raise RuntimeError(
+            f"recorder overhead gate: paired on/off round-time ratio "
+            f"{ratio:.3f}x above the 1.05x ceiling"
+        )
+
+
 def main(quick=False, workload="A", scan_path="both", shards=0, narrow=False,
-         trace=None, dist="zipf", repartition=False):
+         trace=None, dist="zipf", repartition=False, audit=None):
     global _TRACER
     if trace:
         from repro.obs.tracer import Tracer
@@ -492,6 +603,9 @@ def main(quick=False, workload="A", scan_path="both", shards=0, narrow=False,
                 _run_e(quick=quick, scan_path=scan_path, narrow=narrow)
         else:
             raise ValueError(f"unknown YCSB workload {workload!r} (A or E)")
+        if audit:
+            _run_audit(audit, workload=workload, shards=shards or 1,
+                       quick=quick, narrow=narrow)
     finally:
         if trace:
             from repro.obs.trace_export import write_chrome_trace
@@ -540,6 +654,16 @@ if __name__ == "__main__":
         "`python -m repro.obs.report PATH`",
     )
     ap.add_argument(
+        "--audit",
+        default=None,
+        metavar="PATH",
+        help="after the section, re-run the workload's forest leg with the "
+        "flight recorder installed, write the audit log (JSONL) to PATH, "
+        "and replay it through the linearizability witness — a witness "
+        "violation (or, on workload A, recorder overhead above 5% ops/s) "
+        "fails the run",
+    )
+    ap.add_argument(
         "--dist",
         default="zipf",
         choices=["zipf", "uniform"],
@@ -565,4 +689,5 @@ if __name__ == "__main__":
         trace=args.trace,
         dist=args.dist,
         repartition=args.repartition,
+        audit=args.audit,
     )

@@ -60,6 +60,7 @@ from repro.obs.metrics import (
     RegistryBackedCounters,
     engine_collector,
 )
+from repro.obs.recorder import Recorder
 from repro.obs.tracer import NULL_TRACER
 
 # ----------------------------------------------------------------------------
@@ -903,10 +904,12 @@ class ABTree(RegistryBackedCounters):
         # telemetry: metrics registry (the one store behind the legacy
         # ``_rounds``/``_scans``/``_scan_retries`` counter properties) and
         # the host-side phase tracer (NULL_TRACER = strict no-op; install a
-        # ``repro.obs.Tracer()`` to record spans).
+        # ``repro.obs.Tracer()`` to record spans).  The flight recorder is
+        # always on (bounded ring; ``Recorder(enabled=False)`` to opt out).
         self.metrics = MetricsRegistry()
         self.metrics.add_collector(engine_collector(self))
         self.tracer = NULL_TRACER
+        self.recorder = Recorder()
         self._rounds = 0
         self._scans = 0
         self._scan_retries = 0

@@ -180,6 +180,20 @@ class _DurableBase:
     def tracer(self, t):
         self._holder().tracer = t
 
+    @property
+    def recorder(self):
+        return self._holder().recorder
+
+    @recorder.setter
+    def recorder(self, r):
+        self._holder().recorder = r
+
+    def forensics_records(self):
+        """The audit records recovered from the committed forensics
+        sidecar (empty on a fresh journal): the last-K rounds of the
+        crashed execution's *committed* prefix, for the explain-report."""
+        return list(getattr(self, "_forensics", []))
+
     # -- journal lifecycle -----------------------------------------------------
 
     def _init_journal(self, directory: str, crash: Optional[CrashPoint],
@@ -198,6 +212,7 @@ class _DurableBase:
         self._shard_commits: Dict[str, int] = {u: -1 for u in uids}
         self._force_snapshot = set(uids)
         self._snap_capacity: Optional[int] = None
+        self._forensics: List[dict] = []
         # initial durable state: commit round 0 (empty snapshots, all shards)
         self._commit(force_snapshot=True)
 
@@ -265,6 +280,34 @@ class _DurableBase:
         self._snap_capacity = self._capacity()
         self.crash.maybe_fire("after_segment", idx)
 
+        # -- forensics sidecar: flush the recorder's ring next to the
+        # journal BEFORE the manifest, and commit the *reference* through
+        # the manifest's atomic rename — a crash anywhere in this commit
+        # leaves the previous manifest pointing at the previous sidecar,
+        # so the recovered sidecar always matches the committed round
+        # prefix (same link-and-persist argument as the node images).
+        audit_ref = getattr(self, "_last_audit", None)
+        rec = getattr(self._holder(), "recorder", None)
+        if rec is not None and rec.enabled:
+            audit_ref = f"audit_{idx:08d}.jsonl"
+            apath = os.path.join(self.dir, audit_ref)
+            tmp_a = apath + ".tmp"
+            header = json.dumps(
+                {
+                    "kind": "sidecar",
+                    "commit_idx": idx,
+                    "backend": self.backend,
+                    "rounds": int(self._holder()._rounds),
+                }
+            )
+            with open(tmp_a, "w") as f:
+                f.write(header + "\n")
+                for line in rec.dump_records():
+                    f.write(line + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp_a, apath)
+
         shard_entries = []
         for s, uid in enumerate(self._uids):
             root, height = self._shard_root_height(s)
@@ -289,6 +332,7 @@ class _DurableBase:
             "a": self._cfg().a,
             "max_height": self._cfg().max_height,
             "shards": shard_entries,
+            "audit": audit_ref,
             **self._manifest_extra(),
         }
         tmp = os.path.join(self.dir, "MANIFEST.tmp")
@@ -312,6 +356,12 @@ class _DurableBase:
         self.dstats.commits += 1
         reg.inc("commits")
         self._commit_idx += 1
+        self._last_audit = audit_ref
+        if rec is not None and rec.enabled:
+            # commit marker: links the audit stream to the journal's commit
+            # index (lands in the NEXT sidecar — this one is already
+            # durable, matching the committed prefix exactly).
+            rec.commit(idx, int(self._holder()._rounds))
         self._gc(manifest)
 
     def _write_shard_files(self, jobs):
@@ -355,8 +405,18 @@ class _DurableBase:
             if sh["snapshot"]:
                 referenced.add(sh["snapshot"])
             referenced.update(sh["segments"])
+        if manifest.get("audit"):
+            referenced.add(manifest["audit"])
         removed = 0
         for fname in os.listdir(self.dir):
+            if fname.endswith(".jsonl") and fname.startswith("audit_"):
+                if fname not in referenced:
+                    try:
+                        os.unlink(os.path.join(self.dir, fname))
+                        removed += 1
+                    except OSError:
+                        pass
+                continue
             if not fname.endswith(".npz"):
                 continue
             if ("_segment_" in fname or "_snapshot_" in fname) and (
@@ -688,6 +748,19 @@ def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
     out._shard_commits = {sh["uid"]: sh["commit"] for sh in manifest["shards"]}
     out._force_snapshot = set()
     out._snap_capacity = manifest["capacity"]
+    # crash forensics: load the committed audit sidecar so recovery can
+    # explain the committed round prefix (repro.obs.report / witness).
+    out._last_audit = manifest.get("audit")
+    out._forensics = []
+    if out._last_audit:
+        from repro.obs.recorder import Recorder
+
+        try:
+            out._forensics = Recorder.load(
+                os.path.join(directory, out._last_audit)
+            )
+        except OSError:
+            out._forensics = []  # sidecar lost: forensics degrade, state doesn't
 
 
 def recover(directory: str, crash: Optional[CrashPoint] = None):

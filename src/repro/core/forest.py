@@ -122,6 +122,7 @@ from repro.obs.metrics import (
     RegistryBackedCounters,
     engine_collector,
 )
+from repro.obs.recorder import Recorder
 from repro.obs.tracer import NULL_TRACER
 
 
@@ -195,9 +196,12 @@ class ABForest(RegistryBackedCounters):
         self.split_hook = None
         # telemetry: the registry is the one store behind the legacy
         # counter properties; the tracer defaults to the strict no-op.
+        # The flight recorder is always on (bounded ring; install
+        # ``Recorder(enabled=False)`` to opt out).
         self.metrics = MetricsRegistry()
         self.metrics.add_collector(engine_collector(self))
         self.tracer = NULL_TRACER
+        self.recorder = Recorder()
         # forest-level counters (device stats stay per shard; see stats()).
         self._rounds = 0
         self._scans = 0
@@ -296,6 +300,13 @@ class ABForest(RegistryBackedCounters):
                 self.hot_shard_hook(s, info)
             if self.auto_repartition:
                 self._repartition_pending = info
+                if self.recorder.enabled:
+                    self.recorder.transition(
+                        "repartition_pending",
+                        shard=s,
+                        frac=round(float(frac), 4),
+                        window_loads=[int(x) for x in win],
+                    )
 
     def _note_key_sample(self, keys):
         """Router callback: fold routed keys (point keys and scan lower
@@ -518,6 +529,11 @@ class ABForest(RegistryBackedCounters):
             self.metrics.inc("shard_splits", shard=s)
             self.metrics.insert_shard(s + 1)
             self._shard_load = np.zeros(self.n_shards, np.int64)
+            if self.recorder.enabled:
+                self.recorder.transition(
+                    "split", shard=s, split_key=int(m),
+                    n_shards=self.n_shards, moved=len(moved_k),
+                )
             if self.split_hook is not None:
                 self.split_hook(s)
             self._reinsert(moved_k, moved_v)
@@ -552,12 +568,29 @@ class ABForest(RegistryBackedCounters):
                 and self._merge_cold(c)
             ):
                 sp.note(action="merge", cold=c)
-                self.metrics.inc("repartitions", shard=s)
+                # the merge restacked the shards: the hot shard's cell is
+                # s - 1 when the retired shard sat below it.
+                self.metrics.inc("repartitions", shard=s if c > s else s - 1)
+                if self.recorder.enabled:
+                    self.recorder.transition(
+                        "repartition", action="merge", cold=c, hot_shard=s,
+                        n_shards=self.n_shards,
+                    )
             elif self._rebalance_boundary(s, win):
                 sp.note(action="rebalance")
                 self.metrics.inc("repartitions", shard=s)
+                if self.recorder.enabled:
+                    self.recorder.transition(
+                        "repartition", action="rebalance", hot_shard=s,
+                        n_shards=self.n_shards,
+                    )
             else:
                 sp.note(action="noop")
+                if self.recorder.enabled:
+                    self.recorder.transition(
+                        "repartition", action="noop", hot_shard=s,
+                        n_shards=self.n_shards,
+                    )
 
     def _rebalance_boundary(self, s: int, win: np.ndarray) -> bool:
         """Move the boundary between hot shard ``s`` and its colder
@@ -620,8 +653,13 @@ class ABForest(RegistryBackedCounters):
             self.n_shards -= 1
             self._splits = np.delete(self._splits, c - 1 if t == c - 1 else c)
             self._rebuild_bounds()
-            self.metrics.inc("shard_merges", shard=t if t < c else t - 1)
+            # re-key BEFORE attributing: remove_shard(c) pops cell c and
+            # shifts the cells above it down, so incrementing the survivor
+            # first would land on cell c when t == c + 1 (the survivor's
+            # post-restack index equals the retired index) and be orphaned
+            # by the pop.  Mirror of insert_shard's re-keying on splits.
             self.metrics.remove_shard(c)
+            self.metrics.inc("shard_merges", shard=t if t < c else t - 1)
             self._shard_load = np.zeros(self.n_shards, np.int64)
             if self.repartition_hook is not None:
                 self.repartition_hook("merge", c, t if t < c else t - 1)

@@ -75,6 +75,10 @@ Holder protocol (duck-typed; ``ABTree`` and ``ABForest`` both provide it):
   ``metrics`` / ``tracer``  telemetry (``repro.obs``): the registry backs
                             the legacy counters; the tracer wraps phase
                             launches host-side (NULL_TRACER = no-op)
+  ``recorder``              flight recorder (``repro.obs.recorder``): one
+                            semantic audit record per round, captured
+                            host-side at round boundaries (NULL_RECORDER
+                            = no-op)
   ``_note_shard_load(c)``   per-shard routed-lane counts → hot-shard
                             detection (no-op on ABTree)
 """
@@ -111,6 +115,7 @@ from repro.core.abtree import (
 )
 from repro.kernels.range_scan.ops import range_scan
 from repro.kernels.tree_descend.ops import descend_probe
+from repro.obs.recorder import NULL_RECORDER
 from repro.obs.tracer import NULL_TRACER
 
 # ----------------------------------------------------------------------------
@@ -128,6 +133,60 @@ def _tr(holder):
 def _metrics(holder):
     """The holder's metrics registry, or None for bare mock holders."""
     return getattr(holder, "metrics", None)
+
+
+def _rec(holder):
+    """The holder's installed flight recorder (NULL_RECORDER when
+    absent/None).  Like the tracer, the recorder is host-side only —
+    records are built from values the round already materialised on the
+    host, after the jitted phases ran, so recording cannot change HLO."""
+    r = getattr(holder, "recorder", None)
+    return NULL_RECORDER if r is None else r
+
+
+def _elim_note(ops_sw, ks, arrival, res) -> dict:
+    """Host summary of one combine's elimination decisions: per-shard
+    eliminated-op counts plus every multi-update key segment (the
+    annihilated insert/delete pairings) with its net physical action.
+    Built only when a recorder is enabled."""
+    ks_np = np.asarray(ks)  # (S, W) key-sorted; EMPTY on NOP lanes
+    arr_np = np.asarray(arrival)  # sorted pos -> packed lane slot
+    seg_np = np.asarray(res.seg_head)
+    ni = np.asarray(res.net_insert)
+    nd = np.asarray(res.net_delete)
+    no = np.asarray(res.net_overwrite)
+    nel = np.asarray(res.n_eliminated).reshape(-1)
+    ops_np = np.asarray(ops_sw)
+    segments = []
+    for s in range(ks_np.shape[0]):
+        ops_sorted = ops_np[s][arr_np[s]]
+        upd = (ops_sorted == int(elim.OP_INSERT)) | (ops_sorted == int(elim.OP_DELETE))
+        if int(upd.sum()) < 2:
+            continue
+        seg_id = np.cumsum(seg_np[s]) - 1
+        multi = np.nonzero(np.bincount(seg_id[upd]) >= 2)[0]
+        heads = np.nonzero(seg_np[s])[0]
+        for g in multi.tolist():
+            head = int(heads[g])
+            key = int(ks_np[s][head])
+            if key == int(EMPTY):
+                continue
+            in_seg = (seg_id == g) & upd
+            net = (
+                "insert" if ni[s][head]
+                else "delete" if nd[s][head]
+                else "overwrite" if no[s][head]
+                else "none"
+            )
+            segments.append(
+                {
+                    "shard": int(s),
+                    "key": key,
+                    "lanes": arr_np[s][in_seg].astype(np.int64).tolist(),
+                    "net": net,
+                }
+            )
+    return {"eliminated": nel.astype(np.int64).tolist(), "segments": segments}
 
 
 def _note_load(holder, counts):
@@ -734,6 +793,11 @@ def run_scan_phase(
                 if not pending.any():
                     holder._scan_retries += retried
                     scan_sp.note(retries=retried, attempts=_attempt + 1)
+                    rec = _rec(holder)
+                    if rec.enabled:
+                        rec.note_scan_phase(
+                            retries=retried, attempts=_attempt + 1
+                        )
                     return buf_k, buf_v, buf_c, buf_t
                 # only pending components' sub-lanes re-gather
                 cur = cur[pending[sub_sid[cur]]]
@@ -755,6 +819,24 @@ def execute_scan(holder, lo, hi, cap: int = 128, max_retries: int = 8) -> ScanOu
     k_, v_, c_, t_ = scan_lanes(
         holder, lo, hi, cap, n_scan_ops=int(lo.size), max_retries=max_retries
     )
+    rec = _rec(holder)
+    if rec.enabled:
+        rec.round(
+            round_no=holder._rounds,
+            mode=holder.mode,
+            n_shards=holder.n_shards,
+            ops=np.full((lo.size,), int(OP_RANGE), np.int32),
+            keys=lo,
+            vals=hi - lo,
+            results=c_.astype(np.int64),
+            found=c_ > 0,
+            scans={
+                i: list(zip(k_[i, : c_[i]].tolist(), v_[i, : c_[i]].tolist()))
+                for i in range(lo.size)
+            },
+            scan_cap=cap,
+            fused="scan",
+        )
     # Scan rounds never run the shard-overflow split (pinned: splits defer
     # to the next update round), but load rebalancing may act here — read
     # skew is exactly what the hot-shard window observes on scan traffic.
@@ -820,6 +902,9 @@ def _combine_apply(holder, ops_sw, keys_sw, vals_sw):
         )
         sp.fence(pack)
     ks, arrival, leaf_ids, slot, res, results, found = pack
+    rec = _rec(holder)
+    if rec.enabled:
+        rec.note_elim(_elim_note(ops_sw, ks, arrival, res))
     with tr.span("apply") as sp:
         holder.stacked, deferred = _v_apply(
             holder.stacked, holder.cfg, ks, arrival, leaf_ids, slot, res
@@ -906,6 +991,14 @@ def _occ_round(holder, ops_sw, keys_sw, vals_sw):
         )
         if holder.subround_hook is not None:
             holder.subround_hook()
+    rec = _rec(holder)
+    if rec.enabled:
+        rec.note_occ(
+            subrounds=n_sub,
+            active_per_subround=[
+                int((shard_max >= r).sum()) for r in range(n_sub)
+            ],
+        )
     return jnp.asarray(results, VAL_DTYPE), jnp.asarray(found)
 
 
@@ -1190,6 +1283,26 @@ def execute_plan(holder, plan: RoundPlan) -> RoundOutput:
             results[pl] = np.asarray(res_sw)[shard, slot]
             found[pl] = np.asarray(fnd_sw)[shard, slot]
 
+        rec = _rec(holder)
+        if rec.enabled:
+            scans_d = None
+            if scan_out is not None:
+                scans_d = {
+                    int(i): list(zip(k_[j, : c_[j]].tolist(), v_[j, : c_[j]].tolist()))
+                    for j, i in enumerate(rl.tolist())
+                }
+            rec.round(
+                round_no=holder._rounds,
+                mode=holder.mode,
+                n_shards=n_shards,
+                ops=ops_np,
+                keys=keys_np,
+                vals=vals_np,
+                results=results,
+                found=found,
+                scans=scans_d,
+                scan_cap=plan.scan_cap,
+            )
         holder._rounds += 1
         out = RoundOutput(
             results=jnp.asarray(results, VAL_DTYPE),
@@ -1214,6 +1327,8 @@ def execute_scan_delete(holder, lo, hi, cap: int = 128, max_retries: int = 8) ->
     assert lo.shape == hi.shape and lo.ndim == 1
     tr = _tr(holder)
     reg = _metrics(holder)
+    rec = _rec(holder)
+    del_res = del_fnd = None
     with tr.span("round", lanes=int(lo.size), fused="scan_delete"):
         k_, v_, c_, t_ = scan_lanes(
             holder, lo, hi, cap, n_scan_ops=int(lo.size),
@@ -1239,11 +1354,52 @@ def execute_scan_delete(holder, lo, hi, cap: int = 128, max_retries: int = 8) ->
                 for s in np.nonzero(counts)[0]:
                     reg.inc_shard("point_lanes", int(counts[s]), int(s))
             holder._ensure_capacity(w)
-            run_point_phases(
+            res_sw, fnd_sw = run_point_phases(
                 holder,
                 jnp.asarray(ops_sw),
                 jnp.asarray(keys_sw, KEY_DTYPE),
                 jnp.zeros((n_shards, w), VAL_DTYPE),
+            )
+            if rec.enabled:
+                slot = np.empty(del_keys.size, np.int64)
+                slot[order] = slot_sorted
+                del_res = np.asarray(res_sw)[shard, slot]
+                del_fnd = np.asarray(fnd_sw)[shard, slot]
+        if rec.enabled:
+            n_r = int(lo.size)
+            n_d = int(del_keys.size)
+            ops_rec = np.concatenate(
+                [
+                    np.full((n_r,), int(OP_RANGE), np.int64),
+                    np.full((n_d,), int(OP_DELETE), np.int64),
+                ]
+            )
+            keys_rec = np.concatenate([lo, del_keys.astype(np.int64)])
+            vals_rec = np.concatenate([hi - lo, np.zeros(n_d, np.int64)])
+            results_rec = np.concatenate(
+                [
+                    c_.astype(np.int64),
+                    del_res if del_res is not None else np.zeros(0, np.int64),
+                ]
+            )
+            found_rec = np.concatenate(
+                [c_ > 0, del_fnd if del_fnd is not None else np.zeros(0, bool)]
+            )
+            rec.round(
+                round_no=holder._rounds,
+                mode=holder.mode,
+                n_shards=holder.n_shards,
+                ops=ops_rec,
+                keys=keys_rec,
+                vals=vals_rec,
+                results=results_rec,
+                found=found_rec,
+                scans={
+                    i: list(zip(k_[i, : c_[i]].tolist(), v_[i, : c_[i]].tolist()))
+                    for i in range(n_r)
+                },
+                scan_cap=cap,
+                fused="scan_delete",
             )
         holder._rounds += 1
         holder._maybe_split_shards()

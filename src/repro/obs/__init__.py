@@ -1,6 +1,7 @@
-"""Round-engine telemetry: phase tracing, per-shard metrics, exporters.
+"""Round-engine telemetry: phase tracing, per-shard metrics, exporters,
+and the semantic flight recorder + linearizability witness.
 
-Three cooperating layers, all host-side (nothing here ever enters a jitted
+Cooperating layers, all host-side (nothing here ever enters a jitted
 program — the overhead guarantee the spy tests pin):
 
   * :mod:`repro.obs.tracer` — ``Tracer``: span timers around every phase of
@@ -14,10 +15,18 @@ program — the overhead guarantee the spy tests pin):
     ``snapshot()`` absorbing the engine's scattered counter surfaces
     (``_rounds`` / ``_scans`` / ``_scan_retries`` / ``DurableStats`` /
     device ``TreeStats``).
+  * :mod:`repro.obs.recorder` — ``Recorder``: always-on bounded ring of
+    semantic per-round audit records (lane ops/keys/results, elimination
+    pairings, occ sub-round structure, scan validation outcomes, forest
+    transitions).  Disabled it follows the tracer's exact no-op contract.
+  * :mod:`repro.obs.witness` — replays a recorded history through the
+    sequential ``DictOracle`` and verifies the engine's chosen
+    linearization is a legal sequential history (CLI:
+    ``python -m repro.obs.witness audit.jsonl``).
   * :mod:`repro.obs.trace_export` / :mod:`repro.obs.report` /
     :mod:`repro.obs.hlo_audit` — Chrome trace-event JSON (Perfetto-
-    loadable), the phase/shard breakdown CLI, and the reusable HLO
-    sort/gather audit.
+    loadable), the phase/shard breakdown + forensics CLI (``--json`` for
+    machines), and the reusable HLO sort/gather audit.
 
 See ``src/repro/obs/README.md`` for the contract and overhead guarantees.
 """
@@ -26,6 +35,7 @@ from repro.obs.metrics import (
     RegistryBackedCounters,
     engine_collector,
 )
+from repro.obs.recorder import NULL_RECORDER, Recorder
 from repro.obs.tracer import NULL_TRACER, Tracer
 
 __all__ = [
@@ -33,5 +43,7 @@ __all__ = [
     "RegistryBackedCounters",
     "Tracer",
     "NULL_TRACER",
+    "Recorder",
+    "NULL_RECORDER",
     "engine_collector",
 ]

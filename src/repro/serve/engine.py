@@ -132,6 +132,18 @@ class ServeEngine:
         self.index.tree.tracer = t
         self.sessions.tree.tracer = t
 
+    @property
+    def recorder(self):
+        """The prefix index's flight recorder (the audit-critical surface:
+        publish/lookup rounds).  Assigning installs one recorder on BOTH
+        index holders, mirroring the tracer's whole-stack convention."""
+        return self.index.tree.recorder
+
+    @recorder.setter
+    def recorder(self, r):
+        self.index.tree.recorder = r
+        self.sessions.tree.recorder = r
+
     def submit(self, req: Request):
         req.t_submit = time.time()
         self.waiting.append(req)
@@ -268,4 +280,5 @@ class ServeEngine:
         s["tick_latency"] = self.metrics.histogram_summary("tick_latency_s")
         s["metrics"] = self.metrics.snapshot()
         s["index_metrics"] = self.index.tree.metrics.snapshot()
+        s["recorder"] = self.recorder.snapshot()
         return s

@@ -28,6 +28,29 @@ from repro.core.oracle import tree_contents
 CFG = TreeConfig(capacity=512, b=8, a=2, max_height=12)
 
 
+def _assert_forensics_sidecar(r, expected_items, backend):
+    """Crash-forensics contract: the recovered journal carries the audit
+    sidecar of the committed manifest, the recorded history is
+    witness-legal, and replaying it through the oracle reproduces EXACTLY
+    the recovered contents — the sidecar reference rides the manifest's
+    atomic rename, so it can never describe an uncommitted prefix.  (Elim
+    mode only: occ's per-sub-round commits land mid-round, when the
+    in-flight round's record is not yet on the ring.)"""
+    from repro.obs.witness import check_history
+
+    recs = r.forensics_records()
+    assert recs, "recovered journal must carry a forensics sidecar"
+    head = recs[0]
+    assert head["kind"] == "sidecar" and head["backend"] == backend
+    assert head["rounds"] >= 1 and head["commit_idx"] >= 1
+    rep = check_history(recs)
+    assert rep.rounds >= 1
+    assert rep.state == expected_items, (
+        "sidecar replay does not reproduce the committed round prefix"
+    )
+    return head
+
+
 def _mk_rounds(n_rounds=6, bsz=32, seed=0):
     rng = np.random.default_rng(seed)
     rounds = []
@@ -49,6 +72,7 @@ def test_commit_recover_roundtrip(tmp_path):
     r = recover(d)
     check_invariants(r.tree.state, r.tree.cfg)
     assert tree_contents(r.tree.state, r.tree.cfg) == o.items()
+    _assert_forensics_sidecar(r, o.items(), "tree")
     # recovered tree remains fully operational
     r.apply_round([OP_INSERT], [999], [1])
     assert r.tree.find(999) == 1
@@ -94,6 +118,9 @@ def test_crash_injection_recovers_prefix(tmp_path, step, at_commit):
     assert got in acceptable, (
         f"recovered state is not a committed prefix (step={step})"
     )
+    # whichever manifest survived the crash, its audit sidecar replays to
+    # exactly the recovered contents
+    _assert_forensics_sidecar(r, got, "tree")
 
 
 def test_elimination_reduces_flushes(tmp_path):
@@ -283,6 +310,9 @@ def test_forest_crash_injection_recovers_prefix(tmp_path, step, shards):
     assert got in acceptable, (
         f"recovered state is not a committed prefix (step={step}, shards={shards})"
     )
+    # the committed manifest's audit sidecar replays to exactly the
+    # recovered contents, at every crash step and shard count
+    _assert_forensics_sidecar(r, got, "forest")
 
 
 def test_forest_crash_mid_shard_split_recovers_committed_prefix(tmp_path):
@@ -336,6 +366,9 @@ def test_forest_crash_mid_shard_split_recovers_committed_prefix(tmp_path):
     # oracle prefix, with the PRE-split shard layout.
     assert r.items() == prefixes[-1]
     assert r.forest.n_shards == 2
+    # the sidecar stops at the committed prefix too: no trace of the
+    # crashed round or the half-swept shard in the forensics replay
+    _assert_forensics_sidecar(r, prefixes[-1], "forest")
     # the recovered forest is operational and still re-partitions on
     # overflow (split machinery + journal re-keying survive recovery)
     for c in chunks:
@@ -420,6 +453,9 @@ def test_forest_crash_mid_repartition_recovers_committed_prefix(tmp_path):
     assert r.items() == prefixes[-1]
     assert r.forest.n_shards == 2
     assert r.forest.splits.tolist() == [200]
+    # forensics discipline holds mid-repartition as well: the sidecar
+    # replays to the committed prefix, with no half-moved range visible
+    _assert_forensics_sidecar(r, prefixes[-1], "forest")
     # the recovered forest is operational: replaying the remaining rounds
     # converges to the reference contents (the rebalance never changes
     # contents, only the partition), and a re-recovery agrees.

@@ -1,7 +1,8 @@
 """Observability subsystem: tracer overhead contract (no fences, no HLO
-delta when disabled), metrics-registry/legacy-counter equivalence (incl.
-the durable layer's ``DurableStats``), Chrome trace-event schema + report
-CLI, and the forest's hot-shard hook."""
+delta when disabled), flight-recorder overhead contract (host-side only,
+no HLO delta on/off), metrics-registry/legacy-counter equivalence (incl.
+the durable layer's ``DurableStats`` and merge re-keying), Chrome
+trace-event schema + report CLI, and the forest's hot-shard hook."""
 import numpy as np
 import pytest
 
@@ -75,6 +76,110 @@ def test_null_tracer_span_is_shared_noop():
 
 
 # ---------------------------------------------------------------------------
+# flight-recorder overhead contract
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_host_side_only_and_no_hlo_delta(monkeypatch):
+    """The recorder mirrors the tracer's overhead contract: it never
+    fences (host-side capture of values the engine already materialised),
+    disabling it turns every recording method into one attribute check,
+    and the jitted phases lower to byte-identical HLO with recording on
+    or off (the recorder never enters jit)."""
+    from repro.core import rounds as R
+    from repro.obs import NULL_RECORDER, Recorder
+
+    t = ABTree(CFG)
+    rng = np.random.default_rng(21)
+    st0 = t.state
+    batch = (
+        jnp.full((64,), OP_INSERT, jnp.int32),
+        jnp.asarray(rng.integers(0, 10**6, 64), jnp.int64),
+        jnp.zeros((64,), jnp.int64),
+    )
+    hlo_on = R._phase_search_combine.lower(st0, batch, t.cfg, False).as_text()
+
+    calls = []
+    real = jax.block_until_ready
+    monkeypatch.setattr(
+        "repro.obs.tracer.jax.block_until_ready",
+        lambda x: (calls.append(1), real(x))[1],
+    )
+    assert t.recorder.enabled, "holders construct an always-on recorder"
+    t.apply_round(*_insert_batch(rng))
+    t.scan_round([0], [10**6], cap=8)
+    assert t.recorder.records(), "always-on recorder must capture rounds"
+    assert calls == [], "the recorder must never fence"
+
+    t.recorder = Recorder(enabled=False)
+    t.apply_round(*_insert_batch(rng))
+    t.scan_round([0], [10**6], cap=8)
+    assert t.recorder.records() == []
+    assert t.recorder.snapshot()["events"] == 0
+    hlo_off = R._phase_search_combine.lower(st0, batch, t.cfg, False).as_text()
+    assert hlo_on == hlo_off, "recording must not change lowered HLO"
+
+
+def test_null_recorder_is_shared_noop():
+    from repro.obs import NULL_RECORDER
+
+    NULL_RECORDER.note_elim({"eliminated": [1]})
+    NULL_RECORDER.note_occ(subrounds=3)
+    NULL_RECORDER.note_scan_phase(retries=1, attempts=2)
+    NULL_RECORDER.round(
+        round_no=0, mode="elim", n_shards=1,
+        ops=[1], keys=[2], vals=[3], results=[0], found=[False],
+    )
+    NULL_RECORDER.transition("split", shard=0)
+    NULL_RECORDER.commit(0, 0)
+    assert NULL_RECORDER.records() == []
+    assert NULL_RECORDER.snapshot() == {
+        "enabled": False,
+        "capacity": NULL_RECORDER.capacity,
+        "events": 0,
+        "rounds": 0,
+        "seq": 0,
+    }
+
+
+def test_recorder_ring_is_bounded():
+    from repro.obs import Recorder
+
+    r = Recorder(capacity=4)
+    for i in range(10):
+        r.transition("split", shard=i)
+    recs = r.records()
+    assert len(recs) == 4  # ring drops the oldest
+    assert [x["shard"] for x in recs] == [6, 7, 8, 9]
+    assert r.snapshot()["seq"] == 10
+
+
+def test_recorder_in_serve_stats():
+    """``ServeEngine.stats()`` exposes the recorder snapshot, and the
+    setter installs one recorder across both index holders."""
+    from repro.configs import get_config
+    from repro.models import reduced
+    from repro.obs import Recorder
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine(
+        reduced(get_config("qwen2-0.5b"), n_layers=1),
+        max_batch=2,
+        s_max=64,
+        n_pages=64,
+    )
+    rec = Recorder()
+    eng.recorder = rec
+    assert eng.index.tree.recorder is rec
+    assert eng.sessions.tree.recorder is rec
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=2))
+    eng.run_until_done(max_ticks=20)
+    s = eng.stats()
+    assert s["recorder"]["enabled"] is True
+    assert s["recorder"]["rounds"] > 0  # lookup/publish rounds recorded
+
+
+# ---------------------------------------------------------------------------
 # metrics registry + legacy-counter equivalence
 # ---------------------------------------------------------------------------
 
@@ -114,6 +219,35 @@ def test_legacy_counters_are_registry_backed():
     snap = t.metrics.snapshot()
     assert snap["engine"]["rounds"] == 77
     assert "retries_per_op" in snap["derived"]
+
+
+def test_metrics_registry_remove_shard_rekeys_cells():
+    """``remove_shard`` drops the retired shard's cells and shifts the
+    cells above it down — attribution keeps following surviving shards."""
+    m = MetricsRegistry()
+    m.inc("x", 1, shard=0)
+    m.inc("x", 2, shard=1)
+    m.inc("x", 3, shard=2)
+    m.remove_shard(1)
+    assert m.per_shard("x", 2) == [1, 3]
+    assert m.value("x") == 6  # the global total keeps the retired cell
+
+
+def test_merge_cold_attributes_to_survivor_after_rekeying():
+    """Regression: ``_merge_cold`` must re-key the registry BEFORE
+    attributing the merge.  When the survivor is the retired shard's
+    upper neighbor its post-restack index EQUALS the retired index, so
+    incrementing first left the count on the cell ``remove_shard`` was
+    about to pop — the survivor read 0 merges."""
+    f = ABForest(n_shards=2, cfg=CFG, key_space=(0, 4096))
+    keys = np.arange(0, 4096, 16, dtype=np.int64)
+    f.apply_round(np.full(keys.size, OP_INSERT, np.int32), keys, keys)
+    n_before = len(f.items())
+    assert f._merge_cold(0)  # survivor t=1 restacks to index 0
+    assert f.n_shards == 1
+    assert len(f.items()) == n_before  # merge moved, never dropped, keys
+    assert f.metrics.value("shard_merges", shard=0) == 1
+    assert f.metrics.per_shard("shard_merges", 1) == [1]
 
 
 def test_forest_per_shard_lanes_sum_to_global():

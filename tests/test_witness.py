@@ -1,0 +1,173 @@
+"""Linearizability witness over flight-recorder histories: positive
+replay across modes x shard counts (mixed point/range rounds, fused
+scan+delete, elim-annihilated insert/delete pairs), and provable
+rejection of corrupted histories — a swapped elimination pair and a
+dropped delete both raise ``WitnessError`` / exit the CLI non-zero."""
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ABForest,
+    ABTree,
+    OP_DELETE,
+    OP_FIND,
+    OP_INSERT,
+    OP_RANGE,
+    TreeConfig,
+)
+from repro.obs.recorder import Recorder
+from repro.obs.witness import WitnessError, check_history, main
+
+CFG = TreeConfig(capacity=2048, b=8, a=2, max_height=12)
+KEY_RANGE = 4096
+
+
+def _holder(mode, shards):
+    if shards == 1:
+        h = ABTree(CFG, mode=mode)
+    else:
+        h = ABForest(
+            n_shards=shards, cfg=CFG, mode=mode, key_space=(0, KEY_RANGE)
+        )
+    h.recorder = Recorder(capacity=100_000)
+    return h
+
+
+def _mixed_history(mode="elim", shards=1, rounds=6, seed=0):
+    """Drive a holder through mixed rounds (duplicate keys so elimination
+    segments form, a few range lanes per round, a fused scan+delete and a
+    trailing scan round) and return the recorded history."""
+    h = _holder(mode, shards)
+    rng = np.random.default_rng(seed)
+    n = 64
+    for _ in range(rounds):
+        ops = rng.choice(
+            [OP_INSERT, OP_DELETE, OP_FIND], size=n, p=[0.5, 0.25, 0.25]
+        ).astype(np.int32)
+        # small key domain → duplicate keys → multi-op segments to combine
+        keys = rng.integers(0, KEY_RANGE, n).astype(np.int64)
+        vals = rng.integers(1, 1000, n).astype(np.int64)
+        ops[:3] = OP_RANGE
+        keys[:3] = rng.integers(0, KEY_RANGE - 64, 3)
+        vals[:3] = rng.integers(1, 64, 3)
+        h.apply_round(ops, keys, vals, scan_cap=16)
+    h.scan_delete_round([0], [32], cap=8)
+    h.scan_round([0], [KEY_RANGE], cap=32)
+    return h.recorder.records()
+
+
+@pytest.mark.parametrize("mode", ["elim", "occ"])
+@pytest.mark.parametrize("shards", [1, 4])
+def test_witness_validates_mixed_history(mode, shards):
+    recs = _mixed_history(mode=mode, shards=shards)
+    rep = check_history(recs)
+    assert rep.rounds >= 8  # mixed rounds + fused scan_delete + scan
+    assert rep.lanes > 0
+    assert rep.state, "history must leave live keys to have checked reads"
+
+
+def test_witness_audits_elim_reordered_pairs():
+    """Insert+delete of the same key in one round: the elimination
+    combiner annihilates the pair, and the witness must both accept the
+    engine's chosen intra-round order and count the audited pairs."""
+    t = _holder("elim", 1)
+    ops = np.array(
+        [OP_INSERT, OP_DELETE, OP_INSERT, OP_DELETE, OP_INSERT], np.int32
+    )
+    keys = np.array([5, 5, 9, 9, 123], np.int64)
+    vals = np.array([50, 0, 90, 0, 7], np.int64)
+    t.apply_round(ops, keys, vals)
+    t.apply_round(
+        np.full(3, OP_FIND, np.int32),
+        np.array([5, 9, 123], np.int64),
+        np.zeros(3, np.int64),
+    )
+    recs = t.recorder.records()
+    rounds = [r for r in recs if r["kind"] == "round"]
+    assert any(r.get("elim") for r in rounds), "elim note missing"
+    rep = check_history(recs)
+    assert rep.eliminated >= 2  # both same-key pairs annihilated
+    assert sorted(rep.state) == [123]  # 5 and 9 net to absent
+
+
+def _pair_history():
+    """One deterministic annihilated pair plus a later read of the key."""
+    t = _holder("elim", 1)
+    t.apply_round(
+        np.array([OP_INSERT, OP_DELETE, OP_INSERT], np.int32),
+        np.array([5, 5, 77], np.int64),
+        np.array([50, 0, 700], np.int64),
+    )
+    t.apply_round(
+        np.full(2, OP_FIND, np.int32),
+        np.array([5, 77], np.int64),
+        np.zeros(2, np.int64),
+    )
+    return t.recorder.records()
+
+
+def test_witness_rejects_swapped_elimination_pair():
+    """Corruption: hand the eliminated delete's answer to the insert lane
+    and vice versa.  The pair's recorded order (insert misses, delete hits
+    the value the insert published) is the only legal linearization — the
+    swap must be rejected."""
+    recs = _pair_history()
+    check_history(recs)  # sanity: the uncorrupted history is legal
+    bad = copy.deepcopy(recs)
+    rr = next(r for r in bad if r["kind"] == "round")
+    i, j = rr["ops"].index(OP_INSERT), rr["ops"].index(OP_DELETE)
+    assert rr["keys"][i] == rr["keys"][j] == 5
+    assert rr["found"][i] != rr["found"][j]  # pair really was ordered
+    rr["results"][i], rr["results"][j] = rr["results"][j], rr["results"][i]
+    rr["found"][i], rr["found"][j] = rr["found"][j], rr["found"][i]
+    with pytest.raises(WitnessError):
+        check_history(bad)
+
+
+def test_witness_rejects_dropped_delete():
+    """Corruption: drop a delete round from the history.  The later read
+    of the deleted key (recorded as a miss) is then impossible in the
+    replayed state, so the witness must reject."""
+    t = _holder("elim", 1)
+    t.apply_round(
+        np.full(2, OP_INSERT, np.int32),
+        np.array([11, 22], np.int64),
+        np.array([110, 220], np.int64),
+    )
+    t.apply_round(  # the record the corruption drops
+        np.array([OP_DELETE], np.int32),
+        np.array([11], np.int64),
+        np.zeros(1, np.int64),
+    )
+    t.apply_round(  # reads 11 as a miss — proves the delete happened
+        np.full(2, OP_FIND, np.int32),
+        np.array([11, 22], np.int64),
+        np.zeros(2, np.int64),
+    )
+    recs = t.recorder.records()
+    check_history(recs)  # sanity: the full history is legal
+    bad = [
+        r
+        for r in recs
+        if not (r["kind"] == "round" and OP_DELETE in r["ops"])
+    ]
+    assert len(bad) == len(recs) - 1
+    with pytest.raises(WitnessError):
+        check_history(bad)
+
+
+def test_witness_cli_exit_codes(tmp_path, capsys):
+    good, bad = _pair_history(), None
+    bad = copy.deepcopy(good)
+    rr = next(r for r in bad if r["kind"] == "round")
+    rr["found"] = [not f for f in rr["found"]]
+    p_good, p_bad = tmp_path / "good.jsonl", tmp_path / "bad.jsonl"
+    for p, recs in ((p_good, good), (p_bad, bad)):
+        p.write_text("".join(json.dumps(r) + "\n" for r in recs))
+    assert main([str(p_good)]) == 0
+    assert "witness OK" in capsys.readouterr().out
+    assert main([str(p_bad)]) == 1
+    assert "WITNESS FAILED" in capsys.readouterr().err
