@@ -11,6 +11,10 @@ counts, conflict retries, …) so the perf trajectory accumulates.
                   1 shard on retries/op)
   range_scan    — scan_round throughput + kernels/range_scan hot loop
   persistence   — Table 1 (durable overhead + flush traffic + GC churn)
+  fault_soak    — crash-under-load soak: YCSB-A through a firing
+                  FaultPlan (EIO / ENOSPC / torn / rename / kill ×
+                  seeds), recovery witnessed against the committed
+                  prefix + degraded-serving gate (tick never raises)
   serve_latency — p50/p99 ServeEngine.tick at N sessions, durable vs
                   volatile index backends (latency under load)
   elim_rate     — §4 mechanism (elimination fraction vs skew)
@@ -118,6 +122,7 @@ def main() -> None:
     from benchmarks import (
         elim_rate,
         embed_elim,
+        fault_soak,
         forest,
         kernels_bench,
         microbench,
@@ -134,6 +139,7 @@ def main() -> None:
         "forest": forest.main,
         "range_scan": range_scan.main,
         "persistence": persistence.main,
+        "fault_soak": fault_soak.main,
         "serve_latency": serve_latency.main,
         "elim_rate": elim_rate.main,
         "embed_elim": embed_elim.main,

@@ -29,11 +29,18 @@ from repro.core.forest import ABForest, check_forest_invariants  # noqa: E402
 from repro.core.elimination import eliminate_batch, EliminationResult  # noqa: E402
 from repro.core.oracle import DictOracle, check_invariants  # noqa: E402
 from repro.core.durable import (  # noqa: E402
-    CrashPoint,
     DurableABTree,
     DurableForest,
+    RecoveryError,
     recover,
     recover_forest,
+)
+from repro.core.faults import (  # noqa: E402
+    CrashPoint,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    SimulatedCrash,
 )
 
 __all__ = [
@@ -62,6 +69,11 @@ __all__ = [
     "DurableABTree",
     "DurableForest",
     "CrashPoint",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "SimulatedCrash",
+    "RecoveryError",
     "recover",
     "recover_forest",
 ]

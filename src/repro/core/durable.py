@@ -49,24 +49,70 @@ eliminated ops dirty no nodes, so fewer node images are flushed per round
 accounting).  Old journal files a committed manifest no longer references
 are garbage-collected after each commit (`gc_removed`).
 
-Crash injection: ``CrashPoint`` raises ``SimulatedCrash`` at a chosen step
-(after-segment / mid-manifest / after-manifest-before-dir-sync /
-mid-shard-split) so tests can assert recovery lands on the last committed
-round boundary.
+Failure model (hardening beyond the paper's fail-stop assumption):
+
+  threat                          defence
+  ----------------------------    ------------------------------------------
+  fail-stop crash at any step     atomic manifest rename (above); recovery
+                                  lands on the last committed round boundary
+  transient EIO / ENOSPC /        every commit I/O step retried with
+    rename failure                  backoff (``commit_retries`` counter);
+                                  ``SimulatedCrash`` is never retried
+  sick disk (persistent faults)   circuit breaker: after ``degrade_after``
+                                  consecutive failed commits the holder
+                                  enters DEGRADED VOLATILE MODE — serving
+                                  continues, commits are suspended
+                                  (``commits_suspended``), every
+                                  ``reattach_every``-th commit probes the
+                                  disk with a full-snapshot commit and
+                                  re-attaches on success
+                                  (``durability_degraded`` /
+                                  ``durability_reattached`` counters +
+                                  recorder transitions)
+  torn/short journal write        CRC32 of every journal file and sidecar
+    (lying volatile cache)          in the manifest (``file_crcs``);
+                                  recovery truncates each shard's replay at
+                                  the first invalid record and QUARANTINES
+                                  bad files under ``quarantine/``
+                                  (``segments_quarantined``)
+  bit flips / torn manifest       manifest self-checksum; an invalid or
+                                  unreadable generation falls back to
+                                  ``MANIFEST.prev`` (a hardlink of the
+                                  previous committed manifest taken just
+                                  before each rename — O(1), no extra
+                                  fsync), whose files GC retains for one
+                                  extra generation
+  no consistent cut anywhere      ``RecoveryError`` (never silent garbage)
+
+Fault injection: ``CrashPoint`` (fail-stop at a protocol step) and the
+``FaultPlan`` failpoint registry (transient EIO/ENOSPC/torn/rename/latency
+faults at every I/O site, seeded + deterministic) both live in
+``repro.core.faults``; the ``crash=`` / ``faults=`` constructor arguments
+accept either.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import time
+import zlib
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.abtree import ABTree, RoundOutput, ScanOutput, TreeConfig, TreeState, make_tree
+from repro.core.faults import (  # noqa: F401  (re-exported for back-compat)
+    CrashPoint,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    SimulatedCrash,
+    as_fault_plan,
+)
 from repro.core.forest import ABForest, _stack_states
 
 _PERSISTED_FIELDS = ("keys", "vals", "children", "is_leaf", "level")
@@ -76,34 +122,77 @@ _PERSISTED_FIELDS = ("keys", "vals", "children", "is_leaf", "level")
 #   recovery walk), ver (reset), rec_* (reset), alloc (recomputed), dirty,
 #   stats.
 
-_MANIFEST_VERSION = 2
+_MANIFEST_VERSION = 3  # v3: file_crcs + checksum + per-file root/height
 
 
-class SimulatedCrash(RuntimeError):
-    pass
+class RecoveryError(RuntimeError):
+    """No manifest generation yields a consistent committed prefix."""
 
 
-@dataclass
-class CrashPoint:
-    """Injects a crash at the named step of the given commit index.
+class _GenerationInvalid(Exception):
+    """This manifest generation cannot produce a committed prefix
+    (internal: recovery falls back to the previous generation)."""
 
-    Steps: ``after_segment`` (shard files flushed, manifest not yet
-    written), ``mid_manifest`` (torn manifest tmp), ``before_dirsync``
-    (manifest renamed, directory not yet synced), ``mid_split`` (a shard
-    split restacked the forest; nothing of the surrounding round has
-    committed — ``at_commit`` is the NEXT commit index at that moment),
-    ``mid_repartition`` (a load-aware boundary rebalance or cold-shard
-    merge just re-keyed the journals; same NEXT-commit-index convention
-    as ``mid_split``)."""
 
-    step: str = ""  # "after_segment" | "mid_manifest" | "before_dirsync"
-    #              | "mid_split" | "mid_repartition"
-    at_commit: int = -1  # commit index at which to fire (-1 = never)
-    _count: int = field(default=0, repr=False)
+def _resolve_faults(crash, faults) -> FaultPlan:
+    """Merge the legacy ``crash=`` argument and the new ``faults=`` one
+    into a single FaultPlan (either may be a CrashPoint or a FaultPlan)."""
+    if faults is None:
+        return as_fault_plan(crash)
+    plan = as_fault_plan(faults)
+    if crash is not None:
+        if isinstance(crash, CrashPoint):
+            plan.add_crash(crash)
+        else:
+            for c in as_fault_plan(crash).crashes:
+                plan.add_crash(c)
+    return plan
 
-    def maybe_fire(self, step: str, commit_idx: int):
-        if self.step == step and self.at_commit == commit_idx:
-            raise SimulatedCrash(f"simulated crash at {step} (commit {commit_idx})")
+
+def _manifest_checksum(manifest: dict) -> int:
+    """CRC32 over the canonical JSON of the manifest minus its checksum
+    field — recomputable bit-exactly from the parsed manifest."""
+    body = {k: v for k, v in manifest.items() if k != "checksum"}
+    return zlib.crc32(json.dumps(body, sort_keys=True).encode()) & 0xFFFFFFFF
+
+
+def _load_manifest(directory: str, name: str) -> Optional[dict]:
+    """Parse + checksum-verify one manifest generation; None if missing,
+    unparseable, or corrupt (v2 manifests have no checksum and are
+    trusted, as before)."""
+    try:
+        with open(os.path.join(directory, name)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+        return None
+    if "checksum" in manifest and _manifest_checksum(manifest) != manifest["checksum"]:
+        return None
+    return manifest
+
+
+def _file_commit_idx(fname: str) -> int:
+    """Commit index encoded in a journal file name
+    (``{uid}_{snapshot|segment}_{idx:08d}.npz``)."""
+    return int(fname.rsplit("_", 1)[1].split(".")[0])
+
+
+def _file_valid(path: str, crc: Optional[int]) -> bool:
+    """Is this journal file's on-disk content intact?  With a recorded
+    CRC (v3 manifests) the check is exact; without one (legacy v2) a
+    load attempt still catches torn/truncated zip archives."""
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return False
+    if crc is not None:
+        return (zlib.crc32(data) & 0xFFFFFFFF) == crc
+    try:
+        with np.load(io.BytesIO(data)) as z:
+            z.files
+        return True
+    except Exception:
+        return False
 
 
 def _fsync_dir(path: str):
@@ -121,6 +210,9 @@ class DurableStats:
     fsyncs: int = 0
     nodes_flushed: int = 0
     gc_removed: int = 0  # journal files unlinked after losing all references
+    commit_retries: int = 0  # commit attempts that failed with an I/O error
+    commits_suspended: int = 0  # commits skipped while in degraded mode
+    gc_skipped: int = 0  # GC unlinks skipped (file already gone / busy)
 
 
 class _DurableBase:
@@ -194,13 +286,80 @@ class _DurableBase:
         crashed execution's *committed* prefix, for the explain-report."""
         return list(getattr(self, "_forensics", []))
 
+    # -- fault / degradation surface -------------------------------------------
+
+    @property
+    def crash(self) -> FaultPlan:
+        """Back-compat alias: the fault plan (still has ``maybe_fire``)."""
+        return self.faults
+
+    @crash.setter
+    def crash(self, value):
+        self.faults = as_fault_plan(value)
+        self.faults.on_inject = self._on_fault_injected
+
+    @property
+    def degraded(self) -> bool:
+        """True while the durability circuit breaker is open: serving
+        continues on the volatile holder, commits are suspended."""
+        return self._degraded
+
+    def durability_status(self) -> dict:
+        return {
+            "degraded": self._degraded,
+            "consecutive_failures": self._consec_failures,
+            "commit_retries": self.dstats.commit_retries,
+            "commits_suspended": self.dstats.commits_suspended,
+            "faults_injected": self.faults.injected,
+            "quarantined": list(self._quarantined),
+        }
+
+    def _init_fault_state(
+        self,
+        faults: FaultPlan,
+        commit_retries: int,
+        commit_backoff_s: float,
+        degrade_after: int,
+        reattach_every: int,
+    ):
+        self.faults = faults
+        self.faults.on_inject = self._on_fault_injected
+        self.commit_retries = commit_retries
+        self.commit_backoff_s = commit_backoff_s
+        self.degrade_after = degrade_after
+        self.reattach_every = max(1, reattach_every)
+        self._degraded = False
+        self._consec_failures = 0
+        self._degraded_skipped = 0
+        self._file_crcs: Dict[str, int] = {}
+        self._quarantined: List[str] = []
+        self._manifest_good = True  # on-disk MANIFEST == our generation?
+
+    def _on_fault_injected(self, site: str, kind: str):
+        # May run on a flush-pool thread: counter inc + one deque append,
+        # both safe under the GIL.
+        self.metrics.inc("fault_injected")
+        rec = getattr(self._holder(), "recorder", None)
+        if rec is not None and rec.enabled:
+            rec.fault(site, kind)
+
     # -- journal lifecycle -----------------------------------------------------
 
-    def _init_journal(self, directory: str, crash: Optional[CrashPoint],
-                      snapshot_every: int):
+    def _init_journal(
+        self,
+        directory: str,
+        faults: FaultPlan,
+        snapshot_every: int,
+        commit_retries: int = 2,
+        commit_backoff_s: float = 0.002,
+        degrade_after: int = 3,
+        reattach_every: int = 4,
+    ):
         os.makedirs(directory, exist_ok=True)
         self.dir = directory
-        self.crash = crash or CrashPoint()
+        self._init_fault_state(
+            faults, commit_retries, commit_backoff_s, degrade_after, reattach_every
+        )
         self.snapshot_every = snapshot_every
         self.dstats = DurableStats()
         self._commit_idx = 0
@@ -232,14 +391,91 @@ class _DurableBase:
             # through the same engine): those intermediate states are not
             # round boundaries and must never become the durable prefix.
             return
-        idx = self._commit_idx
-        tr = self.tracer
         reg = self.metrics
-        # a pool growth invalidates segment node indexing → force snapshots
-        grown = self._snap_capacity != self._capacity()
+        if self._degraded:
+            # circuit breaker open: serving continues on the volatile
+            # holder; every reattach_every-th commit probes the disk with
+            # a single full-snapshot attempt (dirty tracking was reset by
+            # the failed commits, so only a snapshot is sound anyway).
+            self._degraded_skipped += 1
+            self.dstats.commits_suspended += 1
+            reg.inc("commits_suspended")
+            if self._degraded_skipped % self.reattach_every:
+                return
+            force_snapshot, max_attempts = True, 1
+        else:
+            max_attempts = 1 + max(0, self.commit_retries)
+        t_start = time.perf_counter()
+        idx = self._commit_idx
         dirty = self._take_dirty_all()
         shard_arrays = self._persisted_host_arrays()
-        jobs = []  # (shard, uid, fname, node_ids, arrays)
+        manifest = None
+        for attempt in range(max_attempts):
+            try:
+                manifest = self._commit_once(
+                    idx, force_snapshot, dirty, shard_arrays, attempt
+                )
+                break
+            except OSError:
+                # transient fault (injected or real). SimulatedCrash is a
+                # RuntimeError and deliberately NOT caught: fail-stop means
+                # dead, and recovery happens from disk.
+                self.dstats.commit_retries += 1
+                reg.inc("commit_retries")
+                if attempt + 1 < max_attempts and self.commit_backoff_s > 0:
+                    time.sleep(self.commit_backoff_s * (2**attempt))
+        rec = getattr(self._holder(), "recorder", None)
+        if manifest is None:
+            # this commit's dirty set is lost (taken above) — make the next
+            # successful commit a full snapshot of every shard so no round
+            # can slip out of the journal.
+            self._force_snapshot.update(self._uids)
+            self._consec_failures += 1
+            if not self._degraded and self._consec_failures >= self.degrade_after:
+                self._degraded = True
+                self._degraded_skipped = 0
+                reg.inc("durability_degraded")
+                if rec is not None and rec.enabled:
+                    rec.transition(
+                        "durability",
+                        state="degraded",
+                        commit=idx,
+                        failures=self._consec_failures,
+                    )
+            return
+        was_degraded = self._degraded
+        self._degraded = False
+        self._consec_failures = 0
+        self._commit_idx = idx + 1
+        self.dstats.commits += 1
+        reg.inc("commits")
+        if was_degraded:
+            reg.inc("durability_reattached")
+            if rec is not None and rec.enabled:
+                rec.transition("durability", state="reattached", commit=idx)
+        self._last_audit = manifest.get("audit")
+        if rec is not None and rec.enabled:
+            # commit marker: links the audit stream to the journal's commit
+            # index (lands in the NEXT sidecar — this one is already
+            # durable, matching the committed prefix exactly).
+            rec.commit(idx, int(self._holder()._rounds))
+        reg.observe("commit_latency_s", time.perf_counter() - t_start)
+        self._gc(manifest)
+
+    def _commit_once(self, idx: int, force_snapshot: bool, dirty,
+                     shard_arrays, attempt: int) -> dict:
+        """One attempt at the full link-and-persist sequence.  All journal
+        bookkeeping is computed into candidates and installed on ``self``
+        only after the rename + directory sync land, so a failed attempt
+        (raise anywhere) leaves the in-memory generation exactly as
+        committed — a retry rebuilds the identical candidates."""
+        tr = self.tracer
+        reg = self.metrics
+        plan = self.faults
+        # a pool growth invalidates segment node indexing → force snapshots
+        grown = self._snap_capacity != self._capacity()
+        jobs = []  # (shard, uid, fname, node_ids, arrays, root, height)
+        roots = [self._shard_root_height(s) for s in range(self._n_shards())]
         for s in range(self._n_shards()):
             uid = self._uids[s]
             snap = (
@@ -251,16 +487,22 @@ class _DurableBase:
             )
             if snap:
                 jobs.append((s, uid, f"{uid}_snapshot_{idx:08d}.npz", None,
-                             shard_arrays[s]))
+                             shard_arrays[s], *roots[s]))
             elif dirty[s].size:
                 arrs = {f: a[dirty[s]] for f, a in shard_arrays[s].items()}
                 jobs.append(
-                    (s, uid, f"{uid}_segment_{idx:08d}.npz", dirty[s], arrs)
+                    (s, uid, f"{uid}_segment_{idx:08d}.npz", dirty[s], arrs,
+                     *roots[s])
                 )
             # untouched shard: its journal lane is quiet this commit
         with tr.span("journal_flush", commit=idx, files=len(jobs)):
-            written = self._write_shard_files(jobs)
-        for (s, uid, fname, node_ids, _), (nbytes, nnodes, dt_w) in zip(
+            written = self._write_shard_files(jobs, idx, attempt)
+        # candidate bookkeeping — installed only after the commit point
+        snapshots = dict(self._snapshots)
+        segments = {u: list(v) for u, v in self._segments.items()}
+        shard_commits = dict(self._shard_commits)
+        file_crcs = dict(self._file_crcs)
+        for (s, uid, fname, node_ids, _, _, _), (nbytes, nnodes, dt_w, crc) in zip(
             jobs, written
         ):
             self.dstats.flush_bytes += nbytes
@@ -271,14 +513,13 @@ class _DurableBase:
             reg.inc("nodes_flushed", nnodes, shard=s)
             reg.observe("fsync_latency_s", dt_w)
             if node_ids is None:
-                self._snapshots[uid] = fname
-                self._segments[uid] = []
+                snapshots[uid] = fname
+                segments[uid] = []
             else:
-                self._segments[uid].append(fname)
-            self._shard_commits[uid] = idx
-        self._force_snapshot.clear()
-        self._snap_capacity = self._capacity()
-        self.crash.maybe_fire("after_segment", idx)
+                segments[uid].append(fname)
+            shard_commits[uid] = idx
+            file_crcs[fname] = crc
+        plan.maybe_fire("after_segment", idx)
 
         # -- forensics sidecar: flush the recorder's ring next to the
         # journal BEFORE the manifest, and commit the *reference* through
@@ -300,27 +541,35 @@ class _DurableBase:
                     "rounds": int(self._holder()._rounds),
                 }
             )
-            with open(tmp_a, "w") as f:
-                f.write(header + "\n")
-                for line in rec.dump_records():
-                    f.write(line + "\n")
+            data_a = ("\n".join([header, *rec.dump_records()]) + "\n").encode()
+            file_crcs[audit_ref] = zlib.crc32(data_a) & 0xFFFFFFFF
+            torn = plan.fail("sidecar_write", commit=idx, attempt=attempt)
+            if torn is not None:
+                data_a = data_a[: max(1, int(len(data_a) * torn))]
+            with open(tmp_a, "wb") as f:
+                f.write(data_a)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp_a, apath)
 
         shard_entries = []
+        referenced = set()
         for s, uid in enumerate(self._uids):
-            root, height = self._shard_root_height(s)
             shard_entries.append(
                 {
                     "uid": uid,
-                    "snapshot": self._snapshots[uid],
-                    "segments": self._segments[uid],
-                    "root": root,
-                    "height": height,
-                    "commit": self._shard_commits[uid],
+                    "snapshot": snapshots[uid],
+                    "segments": segments[uid],
+                    "root": roots[s][0],
+                    "height": roots[s][1],
+                    "commit": shard_commits[uid],
                 }
             )
+            if snapshots[uid]:
+                referenced.add(snapshots[uid])
+            referenced.update(segments[uid])
+        if audit_ref:
+            referenced.add(audit_ref)
         manifest = {
             "version": _MANIFEST_VERSION,
             "backend": self.backend,
@@ -333,103 +582,183 @@ class _DurableBase:
             "max_height": self._cfg().max_height,
             "shards": shard_entries,
             "audit": audit_ref,
+            "file_crcs": {f: c for f, c in file_crcs.items() if f in referenced},
             **self._manifest_extra(),
         }
+        manifest["checksum"] = _manifest_checksum(manifest)
         tmp = os.path.join(self.dir, "MANIFEST.tmp")
+        mpath = os.path.join(self.dir, "MANIFEST")
         payload = json.dumps(manifest)
         with tr.span("manifest_commit", commit=idx):
+            plan.fail("manifest_write", commit=idx, attempt=attempt)
             t0 = time.perf_counter()
             with open(tmp, "w") as f:
                 f.write(payload[: len(payload) // 2])
                 f.flush()
-                self.crash.maybe_fire("mid_manifest", idx)
+                plan.maybe_fire("mid_manifest", idx)
                 f.write(payload[len(payload) // 2 :])
                 f.flush()
+                plan.fail("manifest_fsync", commit=idx, attempt=attempt)
                 os.fsync(f.fileno())
             self.dstats.fsyncs += 1
             reg.observe("fsync_latency_s", time.perf_counter() - t0)
-            os.replace(tmp, os.path.join(self.dir, "MANIFEST"))  # the "link" step
-            self.crash.maybe_fire("before_dirsync", idx)
+            # one-generation retention: hardlink the committed manifest to
+            # MANIFEST.prev before the rename replaces it — O(1), no data
+            # write, no extra fsync (the clean-path fsync count is gated).
+            # Skipped when the on-disk MANIFEST is not our generation
+            # (recovery fell back / truncated), so a known-good .prev is
+            # never replaced by the corrupt manifest we recovered around.
+            if self._manifest_good and os.path.exists(mpath):
+                prev = mpath + ".prev"
+                try:
+                    os.unlink(prev)
+                except FileNotFoundError:
+                    pass
+                os.link(mpath, prev)
+            plan.fail("manifest_rename", commit=idx, attempt=attempt)
+            os.replace(tmp, mpath)  # the "link" step — THE commit point
+            plan.maybe_fire("before_dirsync", idx)
+            plan.fail("dir_fsync", commit=idx, attempt=attempt)
+            t1 = time.perf_counter()
             _fsync_dir(self.dir)  # the "persist" step
+            reg.observe("fsync_latency_s", time.perf_counter() - t1)
         self.dstats.fsyncs += 1
         reg.inc("fsyncs", 2)  # manifest file + directory entry
-        self.dstats.commits += 1
-        reg.inc("commits")
-        self._commit_idx += 1
-        self._last_audit = audit_ref
-        if rec is not None and rec.enabled:
-            # commit marker: links the audit stream to the journal's commit
-            # index (lands in the NEXT sidecar — this one is already
-            # durable, matching the committed prefix exactly).
-            rec.commit(idx, int(self._holder()._rounds))
-        self._gc(manifest)
+        # the commit point landed: install the candidate bookkeeping
+        self._snapshots = snapshots
+        self._segments = segments
+        self._shard_commits = shard_commits
+        self._file_crcs = {f: c for f, c in file_crcs.items() if f in referenced}
+        self._force_snapshot.clear()
+        self._snap_capacity = self._capacity()
+        self._manifest_good = True
+        return manifest
 
-    def _write_shard_files(self, jobs):
+    def _write_shard_files(self, jobs, idx: int, attempt: int):
         """Write + fsync every shard's journal file for this commit —
         the parallel fsync lanes (one thread per shard file; a single
         file is written inline)."""
         if len(jobs) <= 1:
-            return [self._write_npz(f, ids, a) for _, _, f, ids, a in jobs]
+            return [
+                self._write_npz(f, ids, a, r, h, s, idx, attempt)
+                for s, _, f, ids, a, r, h in jobs
+            ]
+        # explicit submit + gather (NOT ex.map): map's result iterator
+        # cancels still-pending futures when one write raises, which would
+        # make the set of I/O sites actually hit — and therefore fault
+        # accounting under injection — depend on thread scheduling.  Every
+        # submitted write runs to completion; the first error is re-raised
+        # only after all lanes have settled.
         with ThreadPoolExecutor(max_workers=min(len(jobs), 8)) as ex:
-            return list(
-                ex.map(lambda j: self._write_npz(j[2], j[3], j[4]), jobs)
-            )
+            futs = [
+                ex.submit(
+                    self._write_npz, f, ids, a, r, h, s, idx, attempt
+                )
+                for s, _, f, ids, a, r, h in jobs
+            ]
+            results, first_err = [], None
+            for fut in futs:
+                try:
+                    results.append(fut.result())
+                except (OSError, SimulatedCrash) as e:
+                    if first_err is None:
+                        first_err = e
+            if first_err is not None:
+                raise first_err
+            return results
 
-    def _write_npz(self, fname: str, node_ids, arrs):
+    def _write_npz(self, fname: str, node_ids, arrs, root: int, height: int,
+                   shard: int, commit: int, attempt: int):
         path = os.path.join(self.dir, fname)
         tmp = path + ".tmp"
         save = dict(arrs)
         if node_ids is not None:
             save["node_ids"] = node_ids
+        # flush_bytes counts node-image payload only (deterministic across
+        # runs; zip framing and the root/height scalars are excluded)
+        nbytes = sum(a.nbytes for a in save.values())
+        # root/height ride in every journal file so a truncated replay can
+        # land on the root of ITS cut, not the manifest's newer one
+        save["root"] = np.int32(root)
+        save["height"] = np.int32(height)
         t0 = time.perf_counter()
+        buf = io.BytesIO()
+        np.savez(buf, **save)
+        data = buf.getvalue()
+        crc = zlib.crc32(data) & 0xFFFFFFFF  # CRC of the INTENDED bytes
+        torn = self.faults.fail(
+            "segment_write", commit=commit, shard=shard, attempt=attempt
+        )
+        if torn is not None:
+            # silent short write: fsync will "succeed" but the tail never
+            # reached disk — only the manifest CRC can catch this later
+            data = data[: max(1, int(len(data) * torn))]
         with open(tmp, "wb") as f:
-            np.savez(f, **save)
+            f.write(data)
             f.flush()
+            self.faults.fail(
+                "segment_fsync", commit=commit, shard=shard, attempt=attempt
+            )
             os.fsync(f.fileno())  # the paper's clwb+sfence of new nodes
         os.replace(tmp, path)
         dt = time.perf_counter() - t0
-        nbytes = sum(a.nbytes for a in save.values())
         nnodes = (
             int(node_ids.size) if node_ids is not None else int(arrs["keys"].shape[0])
         )
-        return nbytes, nnodes, dt
+        return nbytes, nnodes, dt, crc
 
-    def _gc(self, manifest: dict):
-        """Unlink journal files the committed manifest no longer references
-        (a snapshot supersedes the shard's previous snapshot + segments;
-        a GC'd shard uid loses its whole chain).  Runs strictly after the
-        directory sync, so a crash can never resurrect a collected file
-        into the durable prefix."""
-        referenced = set()
+    @staticmethod
+    def _manifest_refs(manifest: dict) -> set:
+        refs = set()
         for sh in manifest["shards"]:
             if sh["snapshot"]:
-                referenced.add(sh["snapshot"])
-            referenced.update(sh["segments"])
+                refs.add(sh["snapshot"])
+            refs.update(sh["segments"])
         if manifest.get("audit"):
-            referenced.add(manifest["audit"])
-        removed = 0
-        for fname in os.listdir(self.dir):
-            if fname.endswith(".jsonl") and fname.startswith("audit_"):
-                if fname not in referenced:
-                    try:
-                        os.unlink(os.path.join(self.dir, fname))
-                        removed += 1
-                    except OSError:
-                        pass
+            refs.add(manifest["audit"])
+        return refs
+
+    def _gc(self, manifest: dict):
+        """Unlink journal files neither the committed manifest nor the
+        retained ``MANIFEST.prev`` generation references (a snapshot
+        supersedes the shard's previous snapshot + segments; a GC'd shard
+        uid loses its whole chain; prev-generation files survive exactly
+        one extra commit so the fallback manifest stays replayable).  Runs
+        strictly after the directory sync, so a crash can never resurrect
+        a collected file into the durable prefix.  Tolerant of concurrent
+        or missing files: a lost unlink is counted (``gc_skipped``), never
+        raised — a crashed-then-recovered directory with partial GC must
+        not fail the next commit."""
+        referenced = self._manifest_refs(manifest)
+        prev = _load_manifest(self.dir, "MANIFEST.prev")
+        if prev is not None:
+            referenced |= self._manifest_refs(prev)
+        removed = skipped = 0
+        try:
+            entries = os.listdir(self.dir)
+        except OSError:
+            entries = []
+            skipped += 1
+        for fname in entries:
+            is_audit = fname.endswith(".jsonl") and fname.startswith("audit_")
+            is_journal = fname.endswith(".npz") and (
+                "_segment_" in fname or "_snapshot_" in fname
+            )
+            if not (is_audit or is_journal) or fname in referenced:
                 continue
-            if not fname.endswith(".npz"):
-                continue
-            if ("_segment_" in fname or "_snapshot_" in fname) and (
-                fname not in referenced
-            ):
-                try:
-                    os.unlink(os.path.join(self.dir, fname))
-                    removed += 1
-                except OSError:
-                    pass
+            try:
+                os.unlink(os.path.join(self.dir, fname))
+                removed += 1
+            except FileNotFoundError:
+                skipped += 1  # already gone (recovered-over directory)
+            except OSError:
+                skipped += 1  # busy / transient — retried next commit
         self.dstats.gc_removed += removed
         if removed:
             self.metrics.inc("gc_removed", removed)
+        if skipped:
+            self.dstats.gc_skipped += skipped
+            self.metrics.inc("gc_skipped", skipped)
 
     def _durable_stats_dict(self) -> Dict[str, int]:
         return dict(
@@ -438,6 +767,9 @@ class _DurableBase:
             fsyncs=self.dstats.fsyncs,
             nodes_flushed=self.dstats.nodes_flushed,
             gc_removed=self.dstats.gc_removed,
+            commit_retries=self.dstats.commit_retries,
+            commits_suspended=self.dstats.commits_suspended,
+            gc_skipped=self.dstats.gc_skipped,
         )
 
 
@@ -452,14 +784,28 @@ class DurableABTree(_DurableBase):
         directory: str,
         cfg: TreeConfig = TreeConfig(),
         mode: str = "elim",
-        crash: Optional[CrashPoint] = None,
+        crash=None,
         snapshot_every: int = 64,
+        *,
+        faults=None,
+        commit_retries: int = 2,
+        commit_backoff_s: float = 0.002,
+        degrade_after: int = 3,
+        reattach_every: int = 4,
     ):
         self.tree = ABTree(cfg, mode=mode)
         if mode == "occ":
             # p-OCC: per-update flush discipline → per-sub-round commits
             self.tree.subround_hook = self._commit
-        self._init_journal(directory, crash, snapshot_every)
+        self._init_journal(
+            directory,
+            _resolve_faults(crash, faults),
+            snapshot_every,
+            commit_retries,
+            commit_backoff_s,
+            degrade_after,
+            reattach_every,
+        )
 
     # -- backend surface -------------------------------------------------------
 
@@ -522,7 +868,7 @@ class DurableForest(_DurableBase):
         n_shards: int = 1,
         cfg: TreeConfig = TreeConfig(),
         mode: str = "elim",
-        crash: Optional[CrashPoint] = None,
+        crash=None,
         snapshot_every: int = 64,
         *,
         splits=None,
@@ -531,6 +877,11 @@ class DurableForest(_DurableBase):
         narrow_scan: bool = False,
         narrow: bool = False,
         auto_repartition: bool = False,
+        faults=None,
+        commit_retries: int = 2,
+        commit_backoff_s: float = 0.002,
+        degrade_after: int = 3,
+        reattach_every: int = 4,
     ):
         self.forest = ABForest(
             n_shards=n_shards,
@@ -544,7 +895,15 @@ class DurableForest(_DurableBase):
             auto_repartition=auto_repartition,
         )
         self._wire_hooks()
-        self._init_journal(directory, crash, snapshot_every)
+        self._init_journal(
+            directory,
+            _resolve_faults(crash, faults),
+            snapshot_every,
+            commit_retries,
+            commit_backoff_s,
+            degrade_after,
+            reattach_every,
+        )
 
     def _wire_hooks(self):
         if self.forest.mode == "occ":
@@ -667,21 +1026,108 @@ class DurableForest(_DurableBase):
 # ----------------------------------------------------------------------------
 
 
-def _load_shard_arrays(directory: str, shard_entry: dict) -> Dict[str, np.ndarray]:
-    """Replay one shard's journal: snapshot, then segments in commit order."""
+def _validate_chain(directory: str, sh: dict, crcs: Dict[str, int]) -> dict:
+    """Validate one shard's journal chain against the manifest CRCs and
+    build its replay plan, truncated at the first torn/invalid record.
+    Segments past the first invalid one are unreachable (replay cannot
+    cross the gap) and are marked for quarantine.  An invalid snapshot
+    sinks the whole generation — there is nothing to replay onto."""
+    snap = sh["snapshot"]
+    if not snap or not _file_valid(os.path.join(directory, snap), crcs.get(snap)):
+        raise _GenerationInvalid(f"shard {sh['uid']}: snapshot {snap!r} invalid")
+    valid: List[str] = []
+    invalid: List[str] = []
+    for i, seg in enumerate(sh["segments"]):
+        if _file_valid(os.path.join(directory, seg), crcs.get(seg)):
+            valid.append(seg)
+        else:
+            invalid = sh["segments"][i:]
+            break
+    return {
+        "entry": sh,
+        "snapshot": snap,
+        "snap_commit": _file_commit_idx(snap),
+        "valid": valid,
+        "invalid": invalid,
+        "truncated": bool(invalid),
+        "max_commit": _file_commit_idx(valid[-1]) if valid else _file_commit_idx(snap),
+    }
+
+
+def _plan_generation(directory: str, manifest: dict):
+    """Validate a whole manifest generation and compute the CONSISTENT CUT:
+    the highest commit index C such that every shard's state at C is
+    reproducible from its validated chain.  A shard truncated at commit c
+    caps C at c; every other shard is then rolled back to C by dropping
+    its (valid) segments past C — sound because a shard with no journal
+    file in (c', C] was untouched there, so its replay-to-c' state IS its
+    state at C.  A shard whose snapshot postdates C cannot be rolled back
+    below it, which sinks the generation (fall back to MANIFEST.prev);
+    snapshots forced at splits/repartitions guarantee a cut never lands
+    inside a structural change, so the manifest's split points stay valid
+    for any accepted cut."""
+    crcs = manifest.get("file_crcs", {})
+    plans = [_validate_chain(directory, sh, crcs) for sh in manifest["shards"]]
+    cut = manifest["commit"]
+    for p in plans:
+        if p["truncated"]:
+            cut = min(cut, p["max_commit"])
+    for p in plans:
+        if p["snap_commit"] > cut:
+            raise _GenerationInvalid(
+                f"shard {p['entry']['uid']}: snapshot commit "
+                f"{p['snap_commit']} is past the consistent cut {cut}"
+            )
+        p["replay"] = [s for s in p["valid"] if _file_commit_idx(s) <= cut]
+        p["commit"] = (
+            _file_commit_idx(p["replay"][-1]) if p["replay"] else p["snap_commit"]
+        )
+    return cut, plans
+
+
+def _load_shard_plan(directory: str, plan: dict):
+    """Replay one shard's validated chain: snapshot, then surviving
+    segments in commit order.  Root/height come from the LAST APPLIED
+    file (journaled per-file since manifest v3), so a truncated replay
+    lands on the root of its cut, not the manifest's newer one; legacy
+    journals fall back to the manifest values."""
 
     def load(fname):
         with np.load(os.path.join(directory, fname)) as z:
             return {k: z[k] for k in z.files}
 
-    snap = load(shard_entry["snapshot"])
+    snap = load(plan["snapshot"])
     arrs = {f: snap[f].copy() for f in _PERSISTED_FIELDS}
-    for seg in shard_entry["segments"]:
+    root = int(snap["root"]) if "root" in snap else None
+    height = int(snap["height"]) if "height" in snap else None
+    for seg in plan["replay"]:
         z = load(seg)
         ids = z["node_ids"]
         for f in _PERSISTED_FIELDS:
             arrs[f][ids] = z[f]
-    return arrs
+        if "root" in z:
+            root, height = int(z["root"]), int(z["height"])
+    if root is None:
+        root, height = plan["entry"]["root"], plan["entry"]["height"]
+    return arrs, root, height
+
+
+def _quarantine(directory: str, fnames: List[str]) -> List[str]:
+    """Move invalid journal files into ``<dir>/quarantine/`` — preserved
+    as forensic evidence (and CI artifacts), never silently deleted, and
+    out of the way of future same-name journal writes."""
+    if not fnames:
+        return []
+    qdir = os.path.join(directory, "quarantine")
+    os.makedirs(qdir, exist_ok=True)
+    moved = []
+    for fname in fnames:
+        try:
+            os.replace(os.path.join(directory, fname), os.path.join(qdir, fname))
+            moved.append(os.path.join("quarantine", fname))
+        except OSError:
+            pass  # already gone — nothing left to preserve
+    return moved
 
 
 def _rebuild_state(arrs: Dict[str, np.ndarray], root: int, height: int,
@@ -733,21 +1179,36 @@ def _rebuild_state(arrs: Dict[str, np.ndarray], root: int, height: int,
 
 
 def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
-                     crash: Optional[CrashPoint]):
+                     shard_plans: List[dict], faults: FaultPlan, full: bool,
+                     commit_retries: int, commit_backoff_s: float,
+                     degrade_after: int, reattach_every: int):
     """Restore the journal bookkeeping of a recovered durable instance so
-    it resumes committing where the crashed one left off."""
+    it resumes committing where the crashed one left off — with the
+    chains truncated to the consistent cut, invalid files quarantined,
+    and (unless the recovery was full-fidelity) a forced full snapshot at
+    the next commit plus ``_manifest_good = False`` so the corrupt
+    on-disk MANIFEST is never hardlinked over a good ``MANIFEST.prev``."""
     out.dir = directory
-    out.crash = crash or CrashPoint()
+    out._init_fault_state(
+        faults, commit_retries, commit_backoff_s, degrade_after, reattach_every
+    )
     out.snapshot_every = manifest["snapshot_every"]
     out.dstats = DurableStats()
     out._commit_idx = manifest["commit"] + 1
-    out._uids = [sh["uid"] for sh in manifest["shards"]]
+    out._uids = [p["entry"]["uid"] for p in shard_plans]
     out._next_uid = max(int(u[1:]) for u in out._uids) + 1
-    out._snapshots = {sh["uid"]: sh["snapshot"] for sh in manifest["shards"]}
-    out._segments = {sh["uid"]: list(sh["segments"]) for sh in manifest["shards"]}
-    out._shard_commits = {sh["uid"]: sh["commit"] for sh in manifest["shards"]}
-    out._force_snapshot = set()
+    out._snapshots = {p["entry"]["uid"]: p["snapshot"] for p in shard_plans}
+    out._segments = {p["entry"]["uid"]: list(p["replay"]) for p in shard_plans}
+    out._shard_commits = {p["entry"]["uid"]: p["commit"] for p in shard_plans}
+    out._force_snapshot = set() if full else set(out._uids)
+    out._manifest_good = full
     out._snap_capacity = manifest["capacity"]
+    crcs = manifest.get("file_crcs", {})
+    surviving = set(out._snapshots.values())
+    for segs in out._segments.values():
+        surviving.update(segs)
+    out._file_crcs = {f: crcs[f] for f in surviving if f in crcs}
+    bad = [f for p in shard_plans for f in p["invalid"]]
     # crash forensics: load the committed audit sidecar so recovery can
     # explain the committed round prefix (repro.obs.report / witness).
     out._last_audit = manifest.get("audit")
@@ -755,27 +1216,32 @@ def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
     if out._last_audit:
         from repro.obs.recorder import Recorder
 
-        try:
-            out._forensics = Recorder.load(
-                os.path.join(directory, out._last_audit)
-            )
-        except OSError:
-            out._forensics = []  # sidecar lost: forensics degrade, state doesn't
+        apath = os.path.join(directory, out._last_audit)
+        acrc = crcs.get(out._last_audit)
+        intact = True
+        if acrc is not None:
+            try:
+                with open(apath, "rb") as f:
+                    intact = (zlib.crc32(f.read()) & 0xFFFFFFFF) == acrc
+            except OSError:
+                intact = False
+        if intact:
+            try:
+                out._forensics = Recorder.load(apath)
+            except (OSError, ValueError):
+                out._forensics = []  # sidecar lost: forensics degrade, state doesn't
+        else:
+            bad.append(out._last_audit)  # torn sidecar: quarantine it too
+            out._file_crcs.pop(out._last_audit, None)
+    out._quarantined = _quarantine(directory, bad)
+    if out._quarantined:
+        out.metrics.inc("segments_quarantined", len(out._quarantined))
 
 
-def recover(directory: str, crash: Optional[CrashPoint] = None):
-    """Recovery procedure (paper §5): load the last *committed* manifest,
-    replay each shard's node images, rebuild volatile fields (size recount,
-    versions and records reset, allocation recomputed by reachability), and
-    restack the shards at the recorded split points.  Returns a
-    ``DurableABTree`` or ``DurableForest`` according to what was journaled;
-    the recovered instance is fully operational — occ mode re-installs the
-    per-sub-round commit hook and ``snapshot_every`` is restored from the
-    manifest."""
-    mpath = os.path.join(directory, "MANIFEST")
-    with open(mpath) as f:
-        manifest = json.load(f)  # a torn manifest never commits (rename is atomic)
-
+def _build_recovered(directory: str, manifest: dict, shard_plans: List[dict],
+                     full: bool, faults: FaultPlan, commit_retries: int,
+                     commit_backoff_s: float, degrade_after: int,
+                     reattach_every: int):
     cfg = TreeConfig(
         capacity=manifest["capacity"],
         b=manifest["b"],
@@ -784,11 +1250,12 @@ def recover(directory: str, crash: Optional[CrashPoint] = None):
     )
     mode = manifest["mode"]
     states = [
-        _rebuild_state(
-            _load_shard_arrays(directory, sh), sh["root"], sh["height"], cfg
+        _rebuild_state(arrs, root, height, cfg)
+        for arrs, root, height in (
+            _load_shard_plan(directory, p) for p in shard_plans
         )
-        for sh in manifest["shards"]
     ]
+    knobs = (commit_retries, commit_backoff_s, degrade_after, reattach_every)
 
     if manifest["backend"] == "forest":
         out = DurableForest.__new__(DurableForest)
@@ -804,23 +1271,68 @@ def recover(directory: str, crash: Optional[CrashPoint] = None):
         )
         forest.state = _stack_states(states)
         out.forest = forest
-        _restore_journal(out, directory, manifest, crash)
+        _restore_journal(out, directory, manifest, shard_plans, faults, full, *knobs)
         out._wire_hooks()
         return out
 
     out = DurableABTree.__new__(DurableABTree)
     out.tree = ABTree(cfg, mode=mode)
     out.tree.state = states[0]
-    _restore_journal(out, directory, manifest, crash)
+    _restore_journal(out, directory, manifest, shard_plans, faults, full, *knobs)
     if mode == "occ":
         # a recovered p-OCC tree keeps per-sub-round durability
         out.tree.subround_hook = out._commit
     return out
 
 
-def recover_forest(directory: str, crash: Optional[CrashPoint] = None) -> DurableForest:
+def recover(directory: str, crash=None, *, faults=None, commit_retries: int = 2,
+            commit_backoff_s: float = 0.002, degrade_after: int = 3,
+            reattach_every: int = 4):
+    """Recovery procedure (paper §5, corruption-hardened): walk the
+    generation ladder — the committed MANIFEST first, then the retained
+    ``MANIFEST.prev`` — and for the first checksum-valid manifest whose
+    files admit a consistent cut, replay each shard's node images
+    (truncating at the first torn/invalid record, quarantining bad
+    files), rebuild volatile fields (size recount, versions and records
+    reset, allocation recomputed by reachability), and restack the shards
+    at the recorded split points.  Returns a ``DurableABTree`` or
+    ``DurableForest`` according to what was journaled; the recovered
+    instance is fully operational — occ mode re-installs the per-sub-round
+    commit hook and ``snapshot_every`` is restored from the manifest.
+    Raises ``RecoveryError`` if no generation yields a committed prefix
+    (``FileNotFoundError`` if no manifest was ever committed)."""
+    plan = _resolve_faults(crash, faults)
+    failures = []
+    for name in ("MANIFEST", "MANIFEST.prev"):
+        manifest = _load_manifest(directory, name)
+        if manifest is None:
+            failures.append(f"{name}: missing or corrupt")
+            continue
+        try:
+            cut, shard_plans = _plan_generation(directory, manifest)
+        except _GenerationInvalid as e:
+            failures.append(f"{name}: {e}")
+            continue
+        full = (
+            name == "MANIFEST"
+            and cut == manifest["commit"]
+            and not any(p["truncated"] for p in shard_plans)
+        )
+        return _build_recovered(
+            directory, manifest, shard_plans, full, plan,
+            commit_retries, commit_backoff_s, degrade_after, reattach_every,
+        )
+    if not os.path.exists(os.path.join(directory, "MANIFEST")):
+        raise FileNotFoundError(f"no MANIFEST in {directory!r}")
+    raise RecoveryError(
+        f"no manifest generation in {directory!r} yields a committed prefix: "
+        + "; ".join(failures)
+    )
+
+
+def recover_forest(directory: str, crash=None, **kwargs) -> DurableForest:
     """Typed convenience wrapper: recover a ``DurableForest`` journal."""
-    out = recover(directory, crash)
+    out = recover(directory, crash, **kwargs)
     assert isinstance(out, DurableForest), (
         f"journal at {directory!r} is backend {out.backend!r}, not a forest"
     )

@@ -40,6 +40,9 @@ Record schema (one JSON object per line in the exported ``.jsonl``; see
 
   ``{"kind": "commit", "seq": int, "commit_idx": int, "rounds": int}``
 
+  ``{"kind": "fault", "seq": int, "site": str, "fault": "eio"|"enospc"|
+    "torn"|"rename_fail"|"latency"|"crash"}``
+
 ``seq`` is the recorder's own monotone event counter; round records also
 carry the holder's round number as ``round``.
 """
@@ -181,6 +184,18 @@ class Recorder:
         if not self.enabled:
             return
         rec = {"kind": "commit", "commit_idx": int(commit_idx), "rounds": int(rounds)}
+        for k, v in fields.items():
+            rec[k] = v
+        self._push(rec)
+
+    def fault(self, site: str, kind: str, **fields) -> None:
+        """One injected (or detected) durability fault at a commit I/O
+        site — interleaves with round/commit records so forensics show
+        exactly which commit attempt the fault hit.  May be called from a
+        flush-pool thread: one deque append, safe under the GIL."""
+        if not self.enabled:
+            return
+        rec = {"kind": "fault", "site": site, "fault": kind}
         for k, v in fields.items():
             rec[k] = v
         self._push(rec)

@@ -150,6 +150,7 @@ def forensics_summary(records) -> dict:
         "scan_retries": 0,
         "occ_subrounds": 0,
         "transitions": defaultdict(int),
+        "faults": defaultdict(int),
         "commits": 0,
         "first_round": None,
         "last_round": None,
@@ -183,10 +184,15 @@ def forensics_summary(records) -> dict:
             name = rec.get("event", "?")
             if rec.get("action"):
                 name = f"{name}:{rec['action']}"
+            if rec.get("state"):  # durability degraded / reattached
+                name = f"{name}:{rec['state']}"
             out["transitions"][name] += 1
+        elif kind == "fault":
+            out["faults"][f"{rec.get('site', '?')}:{rec.get('fault', '?')}"] += 1
         elif kind == "commit":
             out["commits"] += 1
     out["transitions"] = dict(out["transitions"])
+    out["faults"] = dict(out["faults"])
     out["modes"] = dict(out["modes"])
     return out
 
@@ -219,6 +225,10 @@ def render_forensics(records) -> str:
     if s["transitions"]:
         lines.append("  structural transitions:")
         for name, n in sorted(s["transitions"].items()):
+            lines.append(f"    {name:<28} {n}")
+    if s["faults"]:
+        lines.append("  injected faults:")
+        for name, n in sorted(s["faults"].items()):
             lines.append(f"    {name:<28} {n}")
     if s["modes"]:
         modes = ", ".join(f"{m}×{n}" for m, n in sorted(s["modes"].items()))

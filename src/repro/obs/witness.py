@@ -59,11 +59,17 @@ class WitnessError(AssertionError):
 class WitnessReport:
     """Outcome of a successful replay."""
 
-    def __init__(self, rounds: int, lanes: int, eliminated: int, state: dict):
+    def __init__(self, rounds: int, lanes: int, eliminated: int, state: dict,
+                 prefix_states=None):
         self.rounds = rounds  # round records replayed
         self.lanes = lanes  # non-NOP lanes verified
         self.eliminated = eliminated  # elim-annihilated update ops audited
         self.state = state  # oracle contents after the full history
+        # with collect_prefixes: oracle contents after each round prefix
+        # (prefix_states[r] = state after the first r rounds; [0] = empty).
+        # The fault-soak's recovery check: a recovered tree's contents must
+        # equal SOME committed prefix state of the witnessed history.
+        self.prefix_states = prefix_states
 
     def summary(self) -> str:
         return (
@@ -138,18 +144,25 @@ def _check_elim_notes(rec: dict, idx: int) -> int:
     return total
 
 
-def check_history(records: Sequence[dict]) -> WitnessReport:
+def check_history(records: Sequence[dict], *,
+                  collect_prefixes: bool = False) -> WitnessReport:
     """Replay every round record through the oracle; raise
-    :class:`WitnessError` on the first illegal transition."""
+    :class:`WitnessError` on the first illegal transition.  With
+    ``collect_prefixes`` the report also carries the oracle state after
+    every round prefix — the committed-prefix candidates a crash-recovered
+    tree must land on (``benchmarks/fault_soak.py``)."""
     oracle = DictOracle()
     rounds = lanes = eliminated = 0
+    prefixes = [dict(oracle.items())] if collect_prefixes else None
     for idx, rec in enumerate(records):
         if rec.get("kind") != "round":
             continue
         lanes += _check_round(oracle, rec, idx)
         eliminated += _check_elim_notes(rec, idx)
         rounds += 1
-    return WitnessReport(rounds, lanes, eliminated, oracle.items())
+        if collect_prefixes:
+            prefixes.append(dict(oracle.items()))
+    return WitnessReport(rounds, lanes, eliminated, oracle.items(), prefixes)
 
 
 def check_file(path: str) -> WitnessReport:

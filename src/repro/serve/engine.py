@@ -60,6 +60,7 @@ class ServeEngine:
         index_mode: str = "elim",
         index_shards: int = 1,
         index_durable_dir: Optional[str] = None,
+        index_faults=None,
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -76,7 +77,11 @@ class ServeEngine:
         # sessions are bounded by the page pool, so n_pages is the scale).
         # index_durable_dir journals both indexes as DurableForests (one
         # journal lane per shard): a restarted engine pointing at the same
-        # directory recovers its prefix cache warm.
+        # directory recovers its prefix cache warm.  index_faults (a
+        # FaultPlan / CrashPoint) is installed on both journals; the
+        # durable layer's retry + circuit breaker guarantee tick() never
+        # raises on a sick disk — it degrades to volatile serving instead
+        # (visible via stats()["durability"]).
         self.index = PrefixIndex(
             mode=index_mode,
             shards=index_shards,
@@ -84,6 +89,7 @@ class ServeEngine:
                 None if index_durable_dir is None
                 else os.path.join(index_durable_dir, "prefix")
             ),
+            faults=index_faults,
         )
         self.sessions = SessionIndex(
             mode=index_mode,
@@ -96,6 +102,7 @@ class ServeEngine:
                 None if index_durable_dir is None
                 else os.path.join(index_durable_dir, "sessions")
             ),
+            faults=index_faults,
         )
         # engine-level telemetry: tick latency + scheduler counters live in
         # the engine's own registry; the index holders keep theirs (round
@@ -281,4 +288,19 @@ class ServeEngine:
         s["metrics"] = self.metrics.snapshot()
         s["index_metrics"] = self.index.tree.metrics.snapshot()
         s["recorder"] = self.recorder.snapshot()
+        # durability degradation surface: present only when the indexes are
+        # journaled; "degraded" is True if EITHER index's circuit breaker
+        # is open (serving continues volatile, commits suspended).
+        holders = [
+            ("prefix", self.index.tree),
+            ("sessions", self.sessions.tree),
+        ]
+        durable = {
+            name: h.durability_status()
+            for name, h in holders
+            if hasattr(h, "durability_status")
+        }
+        if durable:
+            durable["degraded"] = any(v["degraded"] for v in durable.values())
+            s["durability"] = durable
         return s

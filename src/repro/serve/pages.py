@@ -98,11 +98,14 @@ class PrefixIndex:
         durable_dir: Optional[str] = None,
         snapshot_every: int = 64,
         auto_repartition: bool = False,
+        faults=None,
     ):
         cfg = TreeConfig(capacity=capacity, b=8, a=2)
         if durable_dir is not None:
             if os.path.exists(os.path.join(durable_dir, "MANIFEST")):
-                self.tree = recover_forest(durable_dir)  # warm restart
+                # warm restart; ``faults`` (a FaultPlan / CrashPoint) is
+                # installed on the recovered journal for fault-soak runs
+                self.tree = recover_forest(durable_dir, faults=faults)
                 # shard count / splits legitimately come from the manifest
                 # (the forest may have re-partitioned); a mode switch would
                 # silently change the durability discipline — refuse it.
@@ -118,6 +121,7 @@ class PrefixIndex:
                     key_space=key_space if key_space is not None else (0, 1 << 63),
                     max_keys_per_shard=max_keys_per_shard,
                     auto_repartition=auto_repartition,
+                    faults=faults,
                 )
         elif shards > 1:
             self.tree = ABForest(
@@ -187,11 +191,13 @@ class SessionIndex(PrefixIndex):
         durable_dir: Optional[str] = None,
         snapshot_every: int = 64,
         auto_repartition: bool = False,
+        faults=None,
     ):
         super().__init__(
             mode=mode, capacity=capacity, shards=shards, key_space=key_space,
             max_keys_per_shard=max_keys_per_shard, durable_dir=durable_dir,
             snapshot_every=snapshot_every, auto_repartition=auto_repartition,
+            faults=faults,
         )
 
     def evict_range(self, lo: int, hi: int, cap: int = 256) -> List[int]:

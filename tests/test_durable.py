@@ -537,3 +537,21 @@ def test_durable_session_index_warm_restart(tmp_path):
     si2 = SessionIndex(mode="elim", shards=2, key_space=(0, 256), durable_dir=d)
     assert si2.lookup_batch([119, 120, 139]) == [None, 20, 39]
     assert si2.tree.n_shards == 2
+
+
+def test_latency_histograms_cover_every_fsync_site(tmp_path):
+    """``fsync_latency_s`` must observe ALL THREE fsync sites — each
+    journal file, the manifest, and the directory entry — not just the
+    parallel journal lanes (the old under-report), and ``commit_latency_s``
+    must observe one whole-commit duration per successful commit."""
+    t = DurableABTree(str(tmp_path / "t"), CFG, mode="elim", snapshot_every=100)
+    for ops, keys, vals in _mk_rounds(5, seed=21):
+        t.apply_round(ops, keys, vals)
+    commits = t.dstats.commits
+    fs = t.metrics.histogram_summary("fsync_latency_s")
+    cl = t.metrics.histogram_summary("commit_latency_s")
+    # single tree ⇒ exactly 3 fsyncs per commit (1 journal file + manifest
+    # + directory), and the stats counter agrees with the histogram.
+    assert fs["count"] == 3 * commits == t.dstats.fsyncs
+    assert cl["count"] == commits
+    assert cl["p50"] >= fs["p50"] > 0.0

@@ -1,0 +1,399 @@
+"""Failpoint-registry tests: deterministic fault schedules, transient-fault
+retry, the durability circuit breaker (degraded volatile mode + reattach),
+corruption-hardened recovery (CRC truncation + quarantine, torn snapshots
+sinking a generation), GC fault tolerance, and the disabled-plan purity
+contract (no HLO or commit-path delta).  The hypothesis property test
+truncates a journal segment at arbitrary byte offsets and asserts recovery
+always lands on an oracle-verified committed round prefix."""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; deterministic tests run without it
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    DictOracle,
+    DurableABTree,
+    DurableForest,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    OP_DELETE,
+    OP_INSERT,
+    RecoveryError,
+    TreeConfig,
+    recover,
+    recover_forest,
+)
+from repro.core.oracle import tree_contents
+
+CFG = TreeConfig(capacity=512, b=8, a=2, max_height=12)
+
+
+def _mk_rounds(n_rounds=6, bsz=32, seed=0):
+    rng = np.random.default_rng(seed)
+    rounds = []
+    for _ in range(n_rounds):
+        ops = rng.choice([OP_INSERT, OP_DELETE], bsz).tolist()
+        keys = rng.integers(0, 64, bsz).tolist()
+        vals = rng.integers(0, 1000, bsz).tolist()
+        rounds.append((ops, keys, vals))
+    return rounds
+
+
+def _run_with_oracle(t, rounds):
+    """Apply ``rounds``; return the oracle prefix states ([0] = empty)."""
+    o = DictOracle()
+    prefixes = [o.items()]
+    for ops, keys, vals in rounds:
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+        prefixes.append(o.items())
+    return prefixes
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_fault_schedule_is_deterministic():
+    """Fire decisions are a pure function of (seed, site, commit, shard,
+    attempt) — two identical plans produce the identical schedule, hit in
+    any order."""
+    def schedule(plan):
+        out = []
+        for commit in range(20):
+            for shard in (0, 1):
+                for attempt in (0, 1):
+                    try:
+                        r = plan.fail(
+                            "segment_fsync", commit=commit, shard=shard,
+                            attempt=attempt,
+                        )
+                        out.append(("ok", r))
+                    except InjectedFault as e:
+                        out.append(("fault", e.kind))
+        return out
+
+    mk = lambda: FaultPlan(seed=42).add(
+        FaultSpec(site="segment_fsync", kind="eio", p=0.3)
+    )
+    assert schedule(mk()) == schedule(mk())
+    assert schedule(mk()) != schedule(
+        FaultPlan(seed=43).add(FaultSpec(site="segment_fsync", kind="eio", p=0.3))
+    )
+
+
+def test_fault_spec_windows_and_budget():
+    plan = FaultPlan(seed=0).add(
+        FaultSpec(site="manifest_rename", kind="rename_fail", commits=(3, 5))
+    )
+    for commit in (0, 2, 5, 9):
+        assert plan.fail("manifest_rename", commit=commit) is None
+        assert plan.fail("segment_write", commit=4) is None  # wrong site
+    for commit in (3, 4):
+        with pytest.raises(InjectedFault):
+            plan.fail("manifest_rename", commit=commit)
+    budget = FaultPlan(seed=0).add(
+        FaultSpec(site="dir_fsync", kind="eio", times=2)
+    )
+    fired = 0
+    for commit in range(10):
+        try:
+            budget.fail("dir_fsync", commit=commit)
+        except InjectedFault:
+            fired += 1
+    assert fired == 2  # transient: clears once the budget is spent
+
+
+# ---------------------------------------------------------------------------
+# Retry + circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_transient_eio_retries_then_succeeds(tmp_path):
+    d = str(tmp_path / "t")
+    plan = FaultPlan(seed=1).add(
+        FaultSpec(site="segment_fsync", kind="eio", times=2)
+    )
+    t = DurableABTree(d, CFG, mode="elim", faults=plan, commit_backoff_s=0.0)
+    prefixes = _run_with_oracle(t, _mk_rounds())
+    s = t.durability_status()
+    assert s["commit_retries"] >= 2 and not s["degraded"]
+    assert t.metrics.value("fault_injected") == 2
+    assert t.metrics.value("commit_retries") == s["commit_retries"]
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == prefixes[-1]
+
+
+def test_persistent_failure_degrades_then_reattaches(tmp_path):
+    """A sick disk must never surface through apply_round: commits are
+    retried, then abandoned, then suspended (degraded VOLATILE mode); a
+    healed disk reattaches on the next probe and re-journals everything."""
+    d = str(tmp_path / "t")
+    plan = FaultPlan(seed=2).add(
+        FaultSpec(site="manifest_rename", kind="rename_fail")  # p=1: always
+    )
+    t = DurableABTree(
+        d, CFG, mode="elim", faults=plan, commit_retries=1,
+        commit_backoff_s=0.0, degrade_after=2, reattach_every=2,
+    )
+    rounds = _mk_rounds(8, seed=3)
+    prefixes = _run_with_oracle(t, rounds)  # raises nothing, by contract
+    s = t.durability_status()
+    assert s["degraded"] and s["commits_suspended"] >= 1
+    assert t.metrics.value("durability_degraded") == 1
+    # while degraded nothing committed: recovery sees no manifest at all
+    # (every rename failed → the empty prefix) or an old prefix — never a
+    # partial round.
+    try:
+        assert tree_contents(recover(d).tree.state, CFG) in prefixes
+    except FileNotFoundError:
+        pass  # nothing ever committed — the empty prefix
+
+    plan.clear()  # the disk healed
+    more = _mk_rounds(4, seed=4)
+    o = DictOracle()
+    o.d = dict(prefixes[-1])
+    for ops, keys, vals in more:
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    s2 = t.durability_status()
+    assert not s2["degraded"], "reattach probe must close the breaker"
+    assert t.metrics.value("durability_reattached") == 1
+    # the reattach snapshot re-journals the degraded-era rounds too
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == o.items()
+    # the breaker transition trail is on the flight recorder
+    kinds = [rec.get("state") for rec in r.forensics_records()
+             if rec.get("kind") == "transition" and rec.get("event") == "durability"]
+    assert "degraded" in kinds and "reattached" in kinds
+
+
+def test_degraded_forest_serves_and_recovers_prefix(tmp_path):
+    d = str(tmp_path / "f")
+    # commits 0-1 land, then the disk goes permanently sick — so recovery
+    # has a real (non-empty) committed prefix to fall back on.
+    plan = FaultPlan(seed=5).add(
+        FaultSpec(site="manifest_fsync", kind="eio", commits=(2, 10**9))
+    )
+    f = DurableForest(
+        d, n_shards=2, cfg=CFG, mode="elim", key_space=(0, 64), faults=plan,
+        commit_retries=1, commit_backoff_s=0.0, degrade_after=2,
+    )
+    prefixes = _run_with_oracle(f, _mk_rounds(6, seed=6))
+    assert f.durability_status()["degraded"]
+    assert f.items() == prefixes[-1], "degraded mode must keep serving"
+    assert recover_forest(d).items() in prefixes
+
+
+# ---------------------------------------------------------------------------
+# Corruption-hardened recovery
+# ---------------------------------------------------------------------------
+
+
+def test_torn_segment_truncates_and_quarantines(tmp_path):
+    """A torn segment write (fsync lied) is caught by the per-file CRC at
+    recovery: replay truncates at the torn record, later segments are
+    unreachable, and both move to quarantine/ instead of being trusted."""
+    d = str(tmp_path / "t")
+    plan = FaultPlan(seed=7).add(
+        FaultSpec(site="segment_write", kind="torn", commits=(3, 4),
+                  torn_frac=0.5)
+    )
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=100, faults=plan)
+    prefixes = _run_with_oracle(t, _mk_rounds(6, seed=8))
+    r = recover(d)
+    got = tree_contents(r.tree.state, r.tree.cfg)
+    assert got == prefixes[2], "cut must land just before the torn commit"
+    assert r._quarantined and all(q.startswith("quarantine/") for q in r._quarantined)
+    assert r.metrics.value("segments_quarantined") == len(r._quarantined)
+    assert os.path.isdir(os.path.join(d, "quarantine"))
+    # the recovered journal keeps working past the cut
+    r.apply_round([OP_INSERT], [999], [123])
+    assert recover(d).tree.find(999) == 123
+
+
+def test_corrupt_snapshot_sinks_both_generations(tmp_path):
+    """A bad SNAPSHOT has no earlier file to truncate to — the generation
+    is unrecoverable; when both retained manifests reference it, recovery
+    refuses loudly (RecoveryError) rather than fabricating state."""
+    d = str(tmp_path / "t")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=100)
+    _run_with_oracle(t, _mk_rounds(4, seed=9))
+    snaps = [f for f in os.listdir(d) if "_snapshot_" in f]
+    assert snaps
+    for f in snaps:  # corrupt every snapshot both generations could use
+        p = os.path.join(d, f)
+        blob = bytearray(open(p, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        open(p, "wb").write(bytes(blob))
+    with pytest.raises(RecoveryError):
+        recover(d)
+
+
+def test_manifest_checksum_rejects_bitflip_falls_back_to_prev(tmp_path):
+    d = str(tmp_path / "t")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=100)
+    prefixes = _run_with_oracle(t, _mk_rounds(5, seed=10))
+    mpath = os.path.join(d, "MANIFEST")
+    man = json.load(open(mpath))
+    man["shards"][0]["commit"] += 1  # tamper without refreshing checksum
+    json.dump(man, open(mpath, "w"))
+    r = recover(d)  # MANIFEST rejected by checksum → MANIFEST.prev
+    got = tree_contents(r.tree.state, r.tree.cfg)
+    assert got == prefixes[-2]
+
+
+def test_gc_skips_missing_files_without_raising(tmp_path, monkeypatch):
+    d = str(tmp_path / "t")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=2)
+    real_unlink, dropped = os.unlink, []
+
+    def flaky_unlink(path):
+        if "_segment_" in os.path.basename(path) and not dropped:
+            dropped.append(path)
+            raise FileNotFoundError(path)  # vanished under concurrent GC
+        return real_unlink(path)
+
+    monkeypatch.setattr("repro.core.durable.os.unlink", flaky_unlink)
+    prefixes = _run_with_oracle(t, _mk_rounds(10, seed=11))
+    assert dropped, "snapshot churn must have attempted a GC unlink"
+    assert t.dstats.gc_skipped >= 1
+    assert t.metrics.value("gc_skipped") == t.dstats.gc_skipped
+    assert tree_contents(recover(d).tree.state, CFG) == prefixes[-1]
+
+
+# ---------------------------------------------------------------------------
+# Disabled-plan purity
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_faultplan_changes_nothing(tmp_path):
+    """An installed-but-empty FaultPlan is free: identical commit protocol
+    (commit/fsync/byte counts), identical recovered contents, and — since
+    the plan is host-side only — byte-identical lowered HLO."""
+    import jax.numpy as jnp
+
+    from repro.core import rounds as R
+
+    rounds = _mk_rounds(5, seed=12)
+    stats = {}
+    for name, faults in (("off", None), ("on", FaultPlan(seed=0))):
+        d = str(tmp_path / name)
+        t = DurableABTree(d, CFG, mode="elim", snapshot_every=3, faults=faults)
+        st0 = t.tree.state
+        batch = (
+            jnp.full((32,), OP_INSERT, jnp.int32),
+            jnp.asarray(np.arange(32), jnp.int64),
+            jnp.zeros((32,), jnp.int64),
+        )
+        hlo = R._phase_search_combine.lower(st0, batch, t.tree.cfg, False).as_text()
+        _run_with_oracle(t, rounds)
+        s = t.stats()
+        stats[name] = (
+            {k: s[k] for k in ("commits", "fsyncs", "flush_bytes", "nodes_flushed")},
+            tree_contents(recover(d).tree.state, CFG),
+            hlo,
+        )
+    assert stats["off"] == stats["on"]
+
+
+# ---------------------------------------------------------------------------
+# Property: truncation at ANY byte offset recovers a committed prefix
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def seeded_journal(tmp_path_factory):
+    """One committed journal + its oracle prefix states, built once; the
+    property tests mutilate throwaway copies of it."""
+    d = str(tmp_path_factory.mktemp("faults") / "journal")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=100)
+    prefixes = _run_with_oracle(t, _mk_rounds(6, bsz=24, seed=13))
+    segs = sorted(f for f in os.listdir(d) if "_segment_" in f)
+    assert len(segs) >= 5
+    return d, prefixes, segs
+
+
+def _recovered_is_witnessed_prefix(d, prefixes):
+    from repro.obs.witness import check_history
+
+    r = recover(d)
+    got = tree_contents(r.tree.state, r.tree.cfg)
+    assert got in prefixes, "recovery must land on a committed round prefix"
+    rep = check_history(r.forensics_records(), collect_prefixes=True)
+    if rep.prefix_states is not None and rep.rounds:
+        assert got in rep.prefix_states, (
+            "recovered contents must match a witnessed sidecar prefix"
+        )
+    return prefixes.index(got)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(seg_idx=st.integers(0, 4), cut=st.integers(0, 2**16))
+    def test_property_truncated_segment_recovers_committed_prefix(
+        seeded_journal, tmp_path_factory, seg_idx, cut
+    ):
+        src, prefixes, segs = seeded_journal
+        d = str(tmp_path_factory.mktemp("trunc") / "j")
+        shutil.copytree(src, d)
+        victim = os.path.join(d, segs[seg_idx])
+        size = os.path.getsize(victim)
+        with open(victim, "r+b") as f:
+            f.truncate(cut % size)  # every offset, including 0
+        n = _recovered_is_witnessed_prefix(d, prefixes)
+        # the cut can never EXCEED the victim's commit: segments after the
+        # first invalid record are unreachable by definition.
+        assert n <= seg_idx + 1
+        shutil.rmtree(d, ignore_errors=True)
+
+    @settings(
+        max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(seg_idx=st.integers(0, 4), pos=st.integers(0, 2**16),
+           flip=st.integers(1, 255))
+    def test_property_bitflip_detected_by_crc(
+        seeded_journal, tmp_path_factory, seg_idx, pos, flip
+    ):
+        """ANY single corrupted byte in a referenced segment must be
+        detected (per-file CRC32) and truncated away — never replayed."""
+        src, prefixes, segs = seeded_journal
+        d = str(tmp_path_factory.mktemp("flip") / "j")
+        shutil.copytree(src, d)
+        victim = os.path.join(d, segs[seg_idx])
+        size = os.path.getsize(victim)
+        with open(victim, "r+b") as f:
+            f.seek(pos % size)
+            b = f.read(1)
+            f.seek(pos % size)
+            f.write(bytes([b[0] ^ flip]))
+        n = _recovered_is_witnessed_prefix(d, prefixes)
+        assert n <= seg_idx + 1
+        shutil.rmtree(d, ignore_errors=True)
+
+else:  # pragma: no cover
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_truncated_segment_recovers_committed_prefix():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_bitflip_detected_by_crc():
+        pass
