@@ -98,6 +98,93 @@ def main(quick=False):
                 f"occ={bytes_per_op['occ']:.1f})"
             )
 
+    # Snapshot-churn leg, delta vs full: with ``incremental_snapshots`` the
+    # periodic snapshot writes only the rows dirtied since the last FULL
+    # image (a ``_delta_`` file that replaces the segment chain) instead of
+    # re-serializing every node.  HARD gate: the delta path must flush
+    # strictly fewer bytes/op than the full-snapshot path on the identical
+    # stream — otherwise incremental snapshots are dead weight.
+    churn_bytes_per_op = {}
+    for variant, incremental in (("full", False), ("delta", True)):
+        d = tempfile.mkdtemp(prefix=f"ptree_churn_{variant}_")
+        dur = DurableForest(
+            d, n_shards=2, cfg=tree_cfg, mode="elim",
+            key_space=(0, key_range), snapshot_every=4,
+            incremental_snapshots=incremental,
+        )
+        prefill_tree(dur.forest, cfg)
+        dur._commit(force_snapshot=True)
+        dur.dstats = DurableStats()
+        t_churn = _run(dur, stream)
+        s = dur.stats()
+        churn_bytes_per_op[variant] = s["flush_bytes"] / n_ops
+        emit(
+            f"persistence.snapshot_churn.{variant}.s2",
+            t_churn / n_ops * 1e6,
+            f"flush_bytes_per_op={s['flush_bytes'] / n_ops:.1f};"
+            f"commits={s['commits']};fsyncs={s['fsyncs']}",
+            ops_per_s=n_ops / t_churn,
+            flush_bytes=s["flush_bytes"],
+            flush_bytes_per_op=s["flush_bytes"] / n_ops,
+            commits=s["commits"],
+            fsyncs=s["fsyncs"],
+        )
+        shutil.rmtree(d, ignore_errors=True)
+    if churn_bytes_per_op["delta"] >= churn_bytes_per_op["full"]:
+        raise RuntimeError(
+            f"persistence.snapshot_churn: delta snapshots must flush fewer "
+            f"bytes/op than full snapshots "
+            f"(delta={churn_bytes_per_op['delta']:.1f}, "
+            f"full={churn_bytes_per_op['full']:.1f})"
+        )
+
+    # Group-commit leg: G rounds per manifest rename (count-based
+    # boundaries — the wall-clock bound is pinned huge so the commit
+    # schedule is deterministic and exact-gated).  HARD gate: grouping must
+    # strictly reduce both commits and fsyncs vs the serial journal on the
+    # identical stream.
+    group_counts = {}
+    for variant, G in (("serial", 1), ("g4", 4)):
+        d = tempfile.mkdtemp(prefix=f"ptree_grp_{variant}_")
+        dur = DurableForest(
+            d, n_shards=2, cfg=tree_cfg, mode="elim",
+            key_space=(0, key_range), snapshot_every=10**9,
+            group_commit_every=G, group_commit_max_wait_s=1e9,
+            commit_async=(G > 1),
+        )
+        prefill_tree(dur.forest, cfg)
+        dur._commit(force_snapshot=True)
+        dur.drain()
+        dur.dstats = DurableStats()
+        t0 = time.perf_counter()
+        for r in stream[WARM:]:
+            dur.apply_round(*r)
+        dur.drain()  # the persist fence is part of the measured cost
+        t_grp = time.perf_counter() - t0
+        s = dur.stats()
+        group_counts[variant] = (s["commits"], s["fsyncs"])
+        rpc = dur.metrics.histogram_summary("rounds_per_commit")
+        emit(
+            f"persistence.group_commit.{variant}.s2",
+            t_grp / n_ops * 1e6,
+            f"commits={s['commits']};fsyncs={s['fsyncs']};"
+            f"rounds_per_commit_max={rpc['max']:.0f}",
+            ops_per_s=n_ops / t_grp,
+            commits=s["commits"],
+            fsyncs=s["fsyncs"],
+            flush_bytes=s["flush_bytes"],
+            rounds_per_commit_max=rpc["max"],
+        )
+        shutil.rmtree(d, ignore_errors=True)
+    if not (
+        group_counts["g4"][0] < group_counts["serial"][0]
+        and group_counts["g4"][1] < group_counts["serial"][1]
+    ):
+        raise RuntimeError(
+            f"persistence.group_commit: grouping must reduce commits AND "
+            f"fsyncs (serial={group_counts['serial']}, g4={group_counts['g4']})"
+        )
+
     # GC churn leg: frequent snapshots supersede earlier journal files, so
     # the post-commit GC must actually collect them (gc_removed > 0 —
     # guards against the journal directory growing without bound; the

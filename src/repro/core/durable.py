@@ -17,16 +17,42 @@ The protocol maps 1:1 — per shard:
   ----------------------------    ------------------------------------------
   flush new nodes (clwb+sfence)   write round segment file + fsync
                                   (per SHARD: one journal lane per shard,
-                                  fsyncs issued in parallel; an untouched
-                                  shard flushes nothing)
+                                  fsyncs issued in parallel on a PERSISTENT
+                                  flush pool; an untouched shard flushes
+                                  nothing)
+  batch stores before the fence   GROUP COMMIT: with ``group_commit_every``
+                                  > 1, rounds are *absorbed* (dirty bitmaps
+                                  accumulate, zero I/O) until the group
+                                  boundary — ``group_commit_every`` rounds
+                                  or ``group_commit_max_wait_s`` of age —
+                                  then ONE commit flushes the union of the
+                                  group's dirty rows and ONE rename
+                                  linearizes the whole group
   write marked pointer            write MANIFEST.tmp naming every shard's
                                   snapshot + segment chain and its commit
                                   index (ONE vector commit for all shards)
   flush pointer, unmark           fsync tmp, os.replace → MANIFEST, fsync dir
-  recovery: walk from root,       recovery: load last committed manifest,
-    rebuild size/ver/locks          replay each shard's segments, rebuild
-                                    size/ver/dirty, restack the shards and
-                                    restore the split points
+                                  (with ``commit_async=True`` the whole
+                                  boundary commit runs on a background
+                                  thread — the caller only captures host
+                                  state; structural hooks and the next
+                                  boundary JOIN the in-flight commit first,
+                                  so journal bookkeeping stays
+                                  single-writer)
+  snapshot only live rows         INCREMENTAL SNAPSHOTS: a periodic
+                                  "snapshot" writes only the rows dirtied
+                                  since the shard's last FULL snapshot (a
+                                  ``_delta_`` file that *replaces* the
+                                  segment chain — replay = full snapshot +
+                                  delta + later segments); a full snapshot
+                                  is forced every ``full_snapshot_every``
+                                  deltas, on pool growth, on splits/
+                                  repartitions, and after recovery
+  recovery: walk from root,       recovery: walk the manifest generation
+    rebuild size/ver/locks          ladder (``manifest_retain`` retained
+                                    generations), replay each shard's
+                                    chain, rebuild size/ver/dirty, restack
+                                    the shards and restore the split points
 
 The commit point (durable linearization point) is the atomic rename: a round
 is in the abstract *persistent* dictionary iff its manifest committed —
@@ -76,12 +102,22 @@ Failure model (hardening beyond the paper's fail-stop assumption):
                                   bad files under ``quarantine/``
                                   (``segments_quarantined``)
   bit flips / torn manifest       manifest self-checksum; an invalid or
-                                  unreadable generation falls back to
-                                  ``MANIFEST.prev`` (a hardlink of the
-                                  previous committed manifest taken just
-                                  before each rename — O(1), no extra
-                                  fsync), whose files GC retains for one
-                                  extra generation
+                                  unreadable generation falls back down the
+                                  retention ring — ``MANIFEST.prev``,
+                                  ``MANIFEST.prev2``, … (``manifest_retain``
+                                  generations kept as renames + one
+                                  hardlink per commit — O(1) data, no extra
+                                  fsync), whose files GC retains while any
+                                  retained generation references them; a
+                                  torn SNAPSHOT or DELTA now has
+                                  ``manifest_retain - 1`` older generations
+                                  to land on instead of being
+                                  unrecoverable-by-design
+  crash with rounds absorbed      rounds absorbed into a pending group took
+    but no boundary commit          zero I/O — recovery lands on the last
+                                  COMPLETE group boundary (the previous
+                                  manifest); the ``mid_group`` crash step
+                                  models exactly this window
   no consistent cut anywhere      ``RecoveryError`` (never silent garbage)
 
 Fault injection: ``CrashPoint`` (fail-stop at a protocol step) and the
@@ -172,7 +208,7 @@ def _load_manifest(directory: str, name: str) -> Optional[dict]:
 
 def _file_commit_idx(fname: str) -> int:
     """Commit index encoded in a journal file name
-    (``{uid}_{snapshot|segment}_{idx:08d}.npz``)."""
+    (``{uid}_{snapshot|segment|delta}_{idx:08d}.npz``)."""
     return int(fname.rsplit("_", 1)[1].split(".")[0])
 
 
@@ -312,6 +348,18 @@ class _DurableBase:
             "commits_suspended": self.dstats.commits_suspended,
             "faults_injected": self.faults.injected,
             "quarantined": list(self._quarantined),
+            # group-commit surface: a stalled group is observable as
+            # pending rounds that never drain / an age that keeps growing
+            "group_commit_every": self.group_commit_every,
+            "pending_rounds": self._group_rounds,
+            "pending_age_s": (
+                time.perf_counter() - self._group_start
+                if self._group_start is not None
+                else 0.0
+            ),
+            "rounds_per_commit": self.metrics.histogram_summary(
+                "rounds_per_commit"
+            ),
         }
 
     def _init_fault_state(
@@ -343,6 +391,33 @@ class _DurableBase:
         if rec is not None and rec.enabled:
             rec.fault(site, kind)
 
+    def _init_commit_state(
+        self,
+        group_commit_every: int,
+        group_commit_max_wait_s: float,
+        commit_async: bool,
+        incremental_snapshots: bool,
+        full_snapshot_every: int,
+        manifest_retain: int,
+    ):
+        """Group-commit / async-commit / delta-snapshot knobs and their
+        runtime state (shared by fresh and recovered instances)."""
+        self.group_commit_every = max(1, group_commit_every)
+        self.group_commit_max_wait_s = group_commit_max_wait_s
+        self.commit_async = commit_async
+        self.incremental_snapshots = incremental_snapshots
+        self.full_snapshot_every = max(1, full_snapshot_every)
+        self.manifest_retain = max(1, manifest_retain)
+        self._group_rounds = 0  # rounds absorbed since the last boundary
+        self._group_start: Optional[float] = None
+        self._commit_future = None  # in-flight async boundary commit
+        self._flush_pool: Optional[ThreadPoolExecutor] = None
+        self._commit_pool: Optional[ThreadPoolExecutor] = None
+        # per-uid delta-chain bookkeeping: rows dirtied since the shard's
+        # last FULL snapshot, and how many deltas that full has absorbed
+        self._delta_rows: Dict[str, np.ndarray] = {}
+        self._delta_count: Dict[str, int] = {}
+
     # -- journal lifecycle -----------------------------------------------------
 
     def _init_journal(
@@ -354,11 +429,21 @@ class _DurableBase:
         commit_backoff_s: float = 0.002,
         degrade_after: int = 3,
         reattach_every: int = 4,
+        group_commit_every: int = 1,
+        group_commit_max_wait_s: float = 0.05,
+        commit_async: bool = False,
+        incremental_snapshots: bool = True,
+        full_snapshot_every: int = 8,
+        manifest_retain: int = 3,
     ):
         os.makedirs(directory, exist_ok=True)
         self.dir = directory
         self._init_fault_state(
             faults, commit_retries, commit_backoff_s, degrade_after, reattach_every
+        )
+        self._init_commit_state(
+            group_commit_every, group_commit_max_wait_s, commit_async,
+            incremental_snapshots, full_snapshot_every, manifest_retain,
         )
         self.snapshot_every = snapshot_every
         self.dstats = DurableStats()
@@ -381,6 +466,8 @@ class _DurableBase:
         self._snapshots[uid] = None
         self._segments[uid] = []
         self._shard_commits[uid] = -1
+        self._delta_rows[uid] = np.empty(0, np.int32)
+        self._delta_count[uid] = 0
         return uid
 
     # -- commit protocol (link-and-persist) ------------------------------------
@@ -391,6 +478,36 @@ class _DurableBase:
             # through the same engine): those intermediate states are not
             # round boundaries and must never become the durable prefix.
             return
+        reg = self.metrics
+        # -- group-commit gate: absorb this round into the pending group
+        # (dirty bitmaps keep accumulating in the holder — zero I/O) and
+        # return unless a boundary condition fires: the group filled, aged
+        # past the deadline, needs a forced snapshot, or the breaker is
+        # open (degraded bookkeeping must stay per-round).
+        self._group_rounds += 1
+        now = time.perf_counter()
+        if self._group_start is None:
+            self._group_start = now
+        if (
+            not force_snapshot
+            and not self._degraded
+            and self.group_commit_every > 1
+            and self._group_rounds < self.group_commit_every
+            and now - self._group_start < self.group_commit_max_wait_s
+        ):
+            # the only crash window with rounds pending and no I/O started:
+            # dying here loses exactly the absorbed rounds — recovery lands
+            # on the last complete group boundary (the previous manifest).
+            self.faults.maybe_fire("mid_group", self._commit_idx)
+            reg.set_gauge("group_pending_rounds", self._group_rounds)
+            reg.set_gauge("group_pending_age_s", now - self._group_start)
+            return
+        self._commit_group(force_snapshot)
+
+    def _commit_group(self, force_snapshot: bool = False):
+        """Commit the pending group: capture host state synchronously, then
+        run the link-and-persist sequence (inline, or on the background
+        commit thread with ``commit_async``)."""
         reg = self.metrics
         if self._degraded:
             # circuit breaker open: serving continues on the volatile
@@ -405,16 +522,87 @@ class _DurableBase:
             force_snapshot, max_attempts = True, 1
         else:
             max_attempts = 1 + max(0, self.commit_retries)
-        t_start = time.perf_counter()
-        idx = self._commit_idx
-        dirty = self._take_dirty_all()
-        shard_arrays = self._persisted_host_arrays()
-        manifest = None
-        for attempt in range(max_attempts):
-            try:
-                manifest = self._commit_once(
-                    idx, force_snapshot, dirty, shard_arrays, attempt
+        # serialize with a still-flying async boundary: journal bookkeeping
+        # is single-writer, so the previous commit must land first.
+        self._join_commit()
+        absorbed = self._group_rounds
+        self._group_rounds = 0
+        self._group_start = None
+        reg.set_gauge("group_pending_rounds", 0)
+        reg.set_gauge("group_pending_age_s", 0.0)
+        # -- synchronous capture: everything the commit reads from the
+        # LIVE holder (which keeps mutating under async commits) is pinned
+        # here; jnp arrays are immutable, so the host views stay valid.
+        cap = {
+            "idx": self._commit_idx,
+            "force_snapshot": force_snapshot,
+            "dirty": self._take_dirty_all(),
+            "shard_arrays": self._persisted_host_arrays(),
+            "roots": [
+                self._shard_root_height(s) for s in range(self._n_shards())
+            ],
+            "capacity": self._capacity(),
+            "mode": self._mode(),
+            "extra": self._manifest_extra(),
+            "absorbed": absorbed,
+            "max_attempts": max_attempts,
+            "was_degraded": self._degraded,
+            "t_start": time.perf_counter(),
+            "sidecar": None,
+        }
+        rec = getattr(self._holder(), "recorder", None)
+        if rec is not None and rec.enabled:
+            # the sidecar must describe the COMMITTED prefix, not whatever
+            # rounds run while an async commit is in flight — capture the
+            # ring now, at the group boundary.
+            cap["sidecar"] = (int(self._holder()._rounds), rec.dump_records())
+        if self.commit_async and not self._degraded:
+            if self._commit_pool is None:
+                self._commit_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="durable-commit"
                 )
+            self._commit_future = self._commit_pool.submit(
+                self._commit_finish, cap
+            )
+        else:
+            self._commit_finish(cap)
+
+    def _join_commit(self):
+        """Wait for the in-flight async boundary commit (if any).  Called
+        before the next boundary, before structural hooks re-key the
+        journal, and from ``drain()``.  A ``SimulatedCrash`` raised on the
+        commit thread re-raises here (fail-stop is fail-stop)."""
+        fut, self._commit_future = self._commit_future, None
+        if fut is not None:
+            fut.result()
+
+    def drain(self):
+        """Make every applied round durable NOW: flush the pending group
+        (if any) and join the in-flight async commit.  The group-commit
+        analogue of the paper's explicit persist fence."""
+        if self._group_rounds:
+            self._commit_group()
+        self._join_commit()
+
+    def close(self):
+        """Drain and shut down the persistent flush/commit pools."""
+        self.drain()
+        for pool in (self._flush_pool, self._commit_pool):
+            if pool is not None:
+                pool.shutdown(wait=True)
+        self._flush_pool = self._commit_pool = None
+
+    def _commit_finish(self, cap: dict):
+        """Retry loop + breaker bookkeeping around ``_commit_once`` —
+        everything downstream of the synchronous capture.  Runs inline, or
+        on the commit thread (``commit_async``); I/O errors never escape
+        (the breaker absorbs them), only ``SimulatedCrash`` does."""
+        reg = self.metrics
+        idx = cap["idx"]
+        manifest = None
+        for attempt in range(cap["max_attempts"]):
+            try:
+                manifest = self._commit_once(cap, attempt)
                 break
             except OSError:
                 # transient fault (injected or real). SimulatedCrash is a
@@ -422,13 +610,13 @@ class _DurableBase:
                 # dead, and recovery happens from disk.
                 self.dstats.commit_retries += 1
                 reg.inc("commit_retries")
-                if attempt + 1 < max_attempts and self.commit_backoff_s > 0:
+                if attempt + 1 < cap["max_attempts"] and self.commit_backoff_s > 0:
                     time.sleep(self.commit_backoff_s * (2**attempt))
         rec = getattr(self._holder(), "recorder", None)
         if manifest is None:
-            # this commit's dirty set is lost (taken above) — make the next
-            # successful commit a full snapshot of every shard so no round
-            # can slip out of the journal.
+            # this commit's dirty set is lost (taken at capture) — make the
+            # next successful commit a full snapshot of every shard so no
+            # round can slip out of the journal.
             self._force_snapshot.update(self._uids)
             self._consec_failures += 1
             if not self._degraded and self._consec_failures >= self.degrade_after:
@@ -443,12 +631,13 @@ class _DurableBase:
                         failures=self._consec_failures,
                     )
             return
-        was_degraded = self._degraded
+        was_degraded = cap["was_degraded"]
         self._degraded = False
         self._consec_failures = 0
         self._commit_idx = idx + 1
         self.dstats.commits += 1
         reg.inc("commits")
+        reg.observe("rounds_per_commit", cap["absorbed"])
         if was_degraded:
             reg.inc("durability_reattached")
             if rec is not None and rec.enabled:
@@ -458,12 +647,18 @@ class _DurableBase:
             # commit marker: links the audit stream to the journal's commit
             # index (lands in the NEXT sidecar — this one is already
             # durable, matching the committed prefix exactly).
-            rec.commit(idx, int(self._holder()._rounds))
-        reg.observe("commit_latency_s", time.perf_counter() - t_start)
+            rounds = (
+                cap["sidecar"][0]
+                if cap["sidecar"] is not None
+                else int(self._holder()._rounds)
+            )
+            rec.commit(idx, rounds, rounds_absorbed=cap["absorbed"])
+        reg.observe("commit_latency_s", time.perf_counter() - cap["t_start"])
         self._gc(manifest)
 
-    def _commit_once(self, idx: int, force_snapshot: bool, dirty,
-                     shard_arrays, attempt: int) -> dict:
+    _EMPTY_IDS = np.empty(0, np.int32)
+
+    def _commit_once(self, cap: dict, attempt: int) -> dict:
         """One attempt at the full link-and-persist sequence.  All journal
         bookkeeping is computed into candidates and installed on ``self``
         only after the rename + directory sync land, so a failed attempt
@@ -472,28 +667,51 @@ class _DurableBase:
         tr = self.tracer
         reg = self.metrics
         plan = self.faults
+        idx = cap["idx"]
+        dirty, shard_arrays, roots = cap["dirty"], cap["shard_arrays"], cap["roots"]
         # a pool growth invalidates segment node indexing → force snapshots
-        grown = self._snap_capacity != self._capacity()
-        jobs = []  # (shard, uid, fname, node_ids, arrays, root, height)
-        roots = [self._shard_root_height(s) for s in range(self._n_shards())]
+        grown = self._snap_capacity != cap["capacity"]
+        periodic = idx % self.snapshot_every == 0
+        jobs = []  # (kind, shard, uid, fname, node_ids, arrays, root, height)
         for s in range(self._n_shards()):
             uid = self._uids[s]
-            snap = (
-                force_snapshot
+            full = (
+                cap["force_snapshot"]
                 or grown
-                or (idx % self.snapshot_every == 0)
                 or uid in self._force_snapshot
                 or self._snapshots[uid] is None
-            )
-            if snap:
-                jobs.append((s, uid, f"{uid}_snapshot_{idx:08d}.npz", None,
-                             shard_arrays[s], *roots[s]))
-            elif dirty[s].size:
-                arrs = {f: a[dirty[s]] for f, a in shard_arrays[s].items()}
-                jobs.append(
-                    (s, uid, f"{uid}_segment_{idx:08d}.npz", dirty[s], arrs,
-                     *roots[s])
+                or (
+                    periodic
+                    and (
+                        not self.incremental_snapshots
+                        or self._delta_count.get(uid, 0)
+                        >= self.full_snapshot_every
+                    )
                 )
+            )
+            if full:
+                jobs.append(("snap", s, uid, f"{uid}_snapshot_{idx:08d}.npz",
+                             None, shard_arrays[s], *roots[s]))
+                continue
+            if periodic and self.incremental_snapshots:
+                # incremental snapshot: every row dirtied since the shard's
+                # last FULL snapshot, in one ``_delta_`` file that REPLACES
+                # the segment chain (replay = full + delta + later segs)
+                rows = np.union1d(
+                    self._delta_rows.get(uid, self._EMPTY_IDS), dirty[s]
+                ).astype(np.int32)
+                if rows.size:
+                    arrs = {f: a[rows] for f, a in shard_arrays[s].items()}
+                    jobs.append(("delta", s, uid,
+                                 f"{uid}_delta_{idx:08d}.npz", rows, arrs,
+                                 *roots[s]))
+                # rows empty → untouched since its last full snapshot:
+                # nothing to consolidate, the lane stays quiet
+                continue
+            if dirty[s].size:
+                arrs = {f: a[dirty[s]] for f, a in shard_arrays[s].items()}
+                jobs.append(("seg", s, uid, f"{uid}_segment_{idx:08d}.npz",
+                             dirty[s], arrs, *roots[s]))
             # untouched shard: its journal lane is quiet this commit
         with tr.span("journal_flush", commit=idx, files=len(jobs)):
             written = self._write_shard_files(jobs, idx, attempt)
@@ -502,7 +720,9 @@ class _DurableBase:
         segments = {u: list(v) for u, v in self._segments.items()}
         shard_commits = dict(self._shard_commits)
         file_crcs = dict(self._file_crcs)
-        for (s, uid, fname, node_ids, _, _, _), (nbytes, nnodes, dt_w, crc) in zip(
+        delta_rows = dict(self._delta_rows)
+        delta_count = dict(self._delta_count)
+        for (kind, s, uid, fname, node_ids, _, _, _), (nbytes, nnodes, dt_w, crc) in zip(
             jobs, written
         ):
             self.dstats.flush_bytes += nbytes
@@ -512,11 +732,22 @@ class _DurableBase:
             reg.inc("fsyncs", shard=s)
             reg.inc("nodes_flushed", nnodes, shard=s)
             reg.observe("fsync_latency_s", dt_w)
-            if node_ids is None:
+            if kind == "snap":
                 snapshots[uid] = fname
                 segments[uid] = []
+                delta_rows[uid] = self._EMPTY_IDS
+                delta_count[uid] = 0
+                reg.inc("full_snapshots")
+            elif kind == "delta":
+                segments[uid] = [fname]  # supersedes the chain (and GC's it)
+                delta_rows[uid] = node_ids
+                delta_count[uid] = delta_count.get(uid, 0) + 1
+                reg.inc("delta_snapshots")
             else:
                 segments[uid].append(fname)
+                delta_rows[uid] = np.union1d(
+                    delta_rows.get(uid, self._EMPTY_IDS), node_ids
+                ).astype(np.int32)
             shard_commits[uid] = idx
             file_crcs[fname] = crc
         plan.maybe_fire("after_segment", idx)
@@ -528,8 +759,8 @@ class _DurableBase:
         # so the recovered sidecar always matches the committed round
         # prefix (same link-and-persist argument as the node images).
         audit_ref = getattr(self, "_last_audit", None)
-        rec = getattr(self._holder(), "recorder", None)
-        if rec is not None and rec.enabled:
+        if cap["sidecar"] is not None:
+            rounds, records = cap["sidecar"]
             audit_ref = f"audit_{idx:08d}.jsonl"
             apath = os.path.join(self.dir, audit_ref)
             tmp_a = apath + ".tmp"
@@ -538,10 +769,10 @@ class _DurableBase:
                     "kind": "sidecar",
                     "commit_idx": idx,
                     "backend": self.backend,
-                    "rounds": int(self._holder()._rounds),
+                    "rounds": rounds,
                 }
             )
-            data_a = ("\n".join([header, *rec.dump_records()]) + "\n").encode()
+            data_a = ("\n".join([header, *records]) + "\n").encode()
             file_crcs[audit_ref] = zlib.crc32(data_a) & 0xFFFFFFFF
             torn = plan.fail("sidecar_write", commit=idx, attempt=attempt)
             if torn is not None:
@@ -574,16 +805,16 @@ class _DurableBase:
             "version": _MANIFEST_VERSION,
             "backend": self.backend,
             "commit": idx,
-            "mode": self._mode(),
+            "mode": cap["mode"],
             "snapshot_every": self.snapshot_every,
-            "capacity": self._capacity(),
+            "capacity": cap["capacity"],
             "b": self._cfg().b,
             "a": self._cfg().a,
             "max_height": self._cfg().max_height,
             "shards": shard_entries,
             "audit": audit_ref,
             "file_crcs": {f: c for f, c in file_crcs.items() if f in referenced},
-            **self._manifest_extra(),
+            **cap["extra"],
         }
         manifest["checksum"] = _manifest_checksum(manifest)
         tmp = os.path.join(self.dir, "MANIFEST.tmp")
@@ -602,19 +833,28 @@ class _DurableBase:
                 os.fsync(f.fileno())
             self.dstats.fsyncs += 1
             reg.observe("fsync_latency_s", time.perf_counter() - t0)
-            # one-generation retention: hardlink the committed manifest to
-            # MANIFEST.prev before the rename replaces it — O(1), no data
-            # write, no extra fsync (the clean-path fsync count is gated).
-            # Skipped when the on-disk MANIFEST is not our generation
-            # (recovery fell back / truncated), so a known-good .prev is
-            # never replaced by the corrupt manifest we recovered around.
+            # retention ring: rotate MANIFEST.prev → .prev2 → … and
+            # hardlink the committed manifest to MANIFEST.prev before the
+            # rename replaces it, keeping ``manifest_retain`` generations —
+            # renames + one link, no data writes, no extra fsync (the
+            # clean-path fsync count is gated).  Skipped entirely when the
+            # on-disk MANIFEST is not our generation (recovery fell back /
+            # truncated), so a known-good ring is never rotated under the
+            # corrupt manifest we recovered around.
             if self._manifest_good and os.path.exists(mpath):
-                prev = mpath + ".prev"
-                try:
-                    os.unlink(prev)
-                except FileNotFoundError:
-                    pass
-                os.link(mpath, prev)
+                for k in range(self.manifest_retain - 1, 1, -1):
+                    src = mpath + (".prev" if k == 2 else f".prev{k - 1}")
+                    try:
+                        os.replace(src, mpath + f".prev{k}")
+                    except FileNotFoundError:
+                        pass
+                if self.manifest_retain > 1:
+                    prev = mpath + ".prev"
+                    try:
+                        os.unlink(prev)
+                    except FileNotFoundError:
+                        pass
+                    os.link(mpath, prev)
             plan.fail("manifest_rename", commit=idx, attempt=attempt)
             os.replace(tmp, mpath)  # the "link" step — THE commit point
             plan.maybe_fire("before_dirsync", idx)
@@ -629,19 +869,32 @@ class _DurableBase:
         self._segments = segments
         self._shard_commits = shard_commits
         self._file_crcs = {f: c for f, c in file_crcs.items() if f in referenced}
+        self._delta_rows = delta_rows
+        self._delta_count = delta_count
         self._force_snapshot.clear()
-        self._snap_capacity = self._capacity()
+        self._snap_capacity = cap["capacity"]
         self._manifest_good = True
         return manifest
+
+    def _pool(self) -> ThreadPoolExecutor:
+        """The persistent flush pool — created once, reused by every commit
+        (spinning a pool up per commit cost ~ a fsync on fast disks)."""
+        if self._flush_pool is None:
+            self._flush_pool = ThreadPoolExecutor(
+                max_workers=8, thread_name_prefix="durable-flush"
+            )
+        return self._flush_pool
 
     def _write_shard_files(self, jobs, idx: int, attempt: int):
         """Write + fsync every shard's journal file for this commit —
         the parallel fsync lanes (one thread per shard file; a single
-        file is written inline)."""
+        file is written inline).  Every future is gathered before this
+        returns, so per-file fsync/flush accounting attributes to exactly
+        one commit even though the pool outlives it."""
         if len(jobs) <= 1:
             return [
                 self._write_npz(f, ids, a, r, h, s, idx, attempt)
-                for s, _, f, ids, a, r, h in jobs
+                for _, s, _, f, ids, a, r, h in jobs
             ]
         # explicit submit + gather (NOT ex.map): map's result iterator
         # cancels still-pending futures when one write raises, which would
@@ -649,23 +902,21 @@ class _DurableBase:
         # accounting under injection — depend on thread scheduling.  Every
         # submitted write runs to completion; the first error is re-raised
         # only after all lanes have settled.
-        with ThreadPoolExecutor(max_workers=min(len(jobs), 8)) as ex:
-            futs = [
-                ex.submit(
-                    self._write_npz, f, ids, a, r, h, s, idx, attempt
-                )
-                for s, _, f, ids, a, r, h in jobs
-            ]
-            results, first_err = [], None
-            for fut in futs:
-                try:
-                    results.append(fut.result())
-                except (OSError, SimulatedCrash) as e:
-                    if first_err is None:
-                        first_err = e
-            if first_err is not None:
-                raise first_err
-            return results
+        ex = self._pool()
+        futs = [
+            ex.submit(self._write_npz, f, ids, a, r, h, s, idx, attempt)
+            for _, s, _, f, ids, a, r, h in jobs
+        ]
+        results, first_err = [], None
+        for fut in futs:
+            try:
+                results.append(fut.result())
+            except (OSError, SimulatedCrash) as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+        return results
 
     def _write_npz(self, fname: str, node_ids, arrs, root: int, height: int,
                    shard: int, commit: int, attempt: int):
@@ -719,30 +970,34 @@ class _DurableBase:
         return refs
 
     def _gc(self, manifest: dict):
-        """Unlink journal files neither the committed manifest nor the
-        retained ``MANIFEST.prev`` generation references (a snapshot
-        supersedes the shard's previous snapshot + segments; a GC'd shard
-        uid loses its whole chain; prev-generation files survive exactly
-        one extra commit so the fallback manifest stays replayable).  Runs
-        strictly after the directory sync, so a crash can never resurrect
-        a collected file into the durable prefix.  Tolerant of concurrent
-        or missing files: a lost unlink is counted (``gc_skipped``), never
-        raised — a crashed-then-recovered directory with partial GC must
-        not fail the next commit."""
+        """Unlink journal files no RETAINED manifest generation references
+        (a snapshot/delta supersedes the shard's previous chain; a GC'd
+        shard uid loses its whole chain; prev-generation files survive
+        until their generation rotates off the retention ring, so every
+        fallback manifest stays replayable).  Runs strictly after the
+        directory sync, so a crash can never resurrect a collected file
+        into the durable prefix.  Tolerant of concurrent or missing files:
+        a lost unlink is counted (``gc_skipped``), never raised — a
+        crashed-then-recovered directory with partial GC must not fail the
+        next commit."""
         referenced = self._manifest_refs(manifest)
-        prev = _load_manifest(self.dir, "MANIFEST.prev")
-        if prev is not None:
-            referenced |= self._manifest_refs(prev)
         removed = skipped = 0
         try:
             entries = os.listdir(self.dir)
         except OSError:
             entries = []
             skipped += 1
+        for name in entries:
+            if name.startswith("MANIFEST.prev"):
+                prev = _load_manifest(self.dir, name)
+                if prev is not None:
+                    referenced |= self._manifest_refs(prev)
         for fname in entries:
             is_audit = fname.endswith(".jsonl") and fname.startswith("audit_")
             is_journal = fname.endswith(".npz") and (
-                "_segment_" in fname or "_snapshot_" in fname
+                "_segment_" in fname
+                or "_snapshot_" in fname
+                or "_delta_" in fname
             )
             if not (is_audit or is_journal) or fname in referenced:
                 continue
@@ -792,10 +1047,18 @@ class DurableABTree(_DurableBase):
         commit_backoff_s: float = 0.002,
         degrade_after: int = 3,
         reattach_every: int = 4,
+        group_commit_every: int = 1,
+        group_commit_max_wait_s: float = 0.05,
+        commit_async: bool = False,
+        incremental_snapshots: bool = True,
+        full_snapshot_every: int = 8,
+        manifest_retain: int = 3,
     ):
         self.tree = ABTree(cfg, mode=mode)
         if mode == "occ":
             # p-OCC: per-update flush discipline → per-sub-round commits
+            # (with group commit, sub-rounds are absorbed at group
+            # granularity — the group boundary is the persist fence)
             self.tree.subround_hook = self._commit
         self._init_journal(
             directory,
@@ -805,6 +1068,12 @@ class DurableABTree(_DurableBase):
             commit_backoff_s,
             degrade_after,
             reattach_every,
+            group_commit_every,
+            group_commit_max_wait_s,
+            commit_async,
+            incremental_snapshots,
+            full_snapshot_every,
+            manifest_retain,
         )
 
     # -- backend surface -------------------------------------------------------
@@ -882,6 +1151,12 @@ class DurableForest(_DurableBase):
         commit_backoff_s: float = 0.002,
         degrade_after: int = 3,
         reattach_every: int = 4,
+        group_commit_every: int = 1,
+        group_commit_max_wait_s: float = 0.05,
+        commit_async: bool = False,
+        incremental_snapshots: bool = True,
+        full_snapshot_every: int = 8,
+        manifest_retain: int = 3,
     ):
         self.forest = ABForest(
             n_shards=n_shards,
@@ -903,6 +1178,12 @@ class DurableForest(_DurableBase):
             commit_backoff_s,
             degrade_after,
             reattach_every,
+            group_commit_every,
+            group_commit_max_wait_s,
+            commit_async,
+            incremental_snapshots,
+            full_snapshot_every,
+            manifest_retain,
         )
 
     def _wire_hooks(self):
@@ -917,7 +1198,9 @@ class DurableForest(_DurableBase):
         gets a new uid, and both affected shards are marked for a forced
         snapshot at the next commit (shard ``s`` halved its contents; the
         new shard has no journal yet).  Every other uid's chain is
-        untouched."""
+        untouched.  An in-flight async commit reads the journal keying —
+        it must land before the restack mutates it."""
+        self._join_commit()
         self._uids.insert(s + 1, self._new_shard_uid())
         self._force_snapshot.add(self._uids[s])
         self.crash.maybe_fire("mid_split", self._commit_idx)
@@ -930,11 +1213,14 @@ class DurableForest(_DurableBase):
         retires the dead shard's uid (its chain is garbage after the
         restack) and forces the survivor's snapshot.  Either way the
         next manifest commit records the new split points."""
+        self._join_commit()
         if kind == "merge":
             dead = self._uids.pop(a)
             self._snapshots.pop(dead, None)
             self._segments.pop(dead, None)
             self._shard_commits.pop(dead, None)
+            self._delta_rows.pop(dead, None)
+            self._delta_count.pop(dead, None)
             self._force_snapshot.discard(dead)
             self._force_snapshot.add(self._uids[b])
         else:
@@ -1041,6 +1327,16 @@ def _validate_chain(directory: str, sh: dict, crcs: Dict[str, int]) -> dict:
         if _file_valid(os.path.join(directory, seg), crcs.get(seg)):
             valid.append(seg)
         else:
+            if "_delta_" in seg:
+                # an invalid DELTA sinks the generation: its rows
+                # consolidated (and GC'd) the shard's earlier segments, so
+                # truncating at it would silently roll the shard — and the
+                # global cut — back to its last full snapshot; an older
+                # retained generation still references the
+                # pre-consolidation chain and recovers a better prefix.
+                raise _GenerationInvalid(
+                    f"shard {sh['uid']}: delta {seg!r} invalid"
+                )
             invalid = sh["segments"][i:]
             break
     return {
@@ -1077,6 +1373,16 @@ def _plan_generation(directory: str, manifest: dict):
             raise _GenerationInvalid(
                 f"shard {p['entry']['uid']}: snapshot commit "
                 f"{p['snap_commit']} is past the consistent cut {cut}"
+            )
+        if any(
+            "_delta_" in s for s in p["valid"] if _file_commit_idx(s) > cut
+        ):
+            # a delta past the cut covers commits ≤ cut whose segments it
+            # consolidated away — dropping it would NOT reproduce the
+            # shard's state at the cut (unlike a plain segment, which only
+            # carries its own commit)
+            raise _GenerationInvalid(
+                f"shard {p['entry']['uid']}: delta past the consistent cut {cut}"
             )
         p["replay"] = [s for s in p["valid"] if _file_commit_idx(s) <= cut]
         p["commit"] = (
@@ -1181,7 +1487,8 @@ def _rebuild_state(arrs: Dict[str, np.ndarray], root: int, height: int,
 def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
                      shard_plans: List[dict], faults: FaultPlan, full: bool,
                      commit_retries: int, commit_backoff_s: float,
-                     degrade_after: int, reattach_every: int):
+                     degrade_after: int, reattach_every: int,
+                     commit_knobs: Optional[dict] = None):
     """Restore the journal bookkeeping of a recovered durable instance so
     it resumes committing where the crashed one left off — with the
     chains truncated to the consistent cut, invalid files quarantined,
@@ -1192,6 +1499,13 @@ def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
     out._init_fault_state(
         faults, commit_retries, commit_backoff_s, degrade_after, reattach_every
     )
+    knobs = dict(
+        group_commit_every=1, group_commit_max_wait_s=0.05,
+        commit_async=False, incremental_snapshots=True,
+        full_snapshot_every=8, manifest_retain=3,
+    )
+    knobs.update(commit_knobs or {})
+    out._init_commit_state(**knobs)
     out.snapshot_every = manifest["snapshot_every"]
     out.dstats = DurableStats()
     out._commit_idx = manifest["commit"] + 1
@@ -1203,6 +1517,12 @@ def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
     out._force_snapshot = set() if full else set(out._uids)
     out._manifest_good = full
     out._snap_capacity = manifest["capacity"]
+    # the rows-since-last-full bookkeeping did not survive the crash: a
+    # delta written without it would silently drop rows, so force the
+    # next periodic snapshot to be FULL (recovery-ladder fallback rule) —
+    # the chain restarts cleanly from there.
+    out._delta_rows = {u: out._EMPTY_IDS for u in out._uids}
+    out._delta_count = {u: out.full_snapshot_every for u in out._uids}
     crcs = manifest.get("file_crcs", {})
     surviving = set(out._snapshots.values())
     for segs in out._segments.values():
@@ -1238,10 +1558,27 @@ def _restore_journal(out: _DurableBase, directory: str, manifest: dict,
         out.metrics.inc("segments_quarantined", len(out._quarantined))
 
 
+def _generation_names(directory: str) -> List[str]:
+    """The manifest generation ladder, newest first: MANIFEST, then the
+    retention ring (MANIFEST.prev, MANIFEST.prev2, …) as deep as files
+    exist on disk — recovery does not need to know the writer's
+    ``manifest_retain``."""
+    names = ["MANIFEST", "MANIFEST.prev"]
+    extra = []
+    try:
+        for f in os.listdir(directory):
+            suffix = f[len("MANIFEST.prev"):] if f.startswith("MANIFEST.prev") else ""
+            if suffix.isdigit():
+                extra.append((int(suffix), f))
+    except OSError:
+        pass
+    return names + [f for _, f in sorted(extra)]
+
+
 def _build_recovered(directory: str, manifest: dict, shard_plans: List[dict],
                      full: bool, faults: FaultPlan, commit_retries: int,
                      commit_backoff_s: float, degrade_after: int,
-                     reattach_every: int):
+                     reattach_every: int, commit_knobs: Optional[dict] = None):
     cfg = TreeConfig(
         capacity=manifest["capacity"],
         b=manifest["b"],
@@ -1255,7 +1592,8 @@ def _build_recovered(directory: str, manifest: dict, shard_plans: List[dict],
             _load_shard_plan(directory, p) for p in shard_plans
         )
     ]
-    knobs = (commit_retries, commit_backoff_s, degrade_after, reattach_every)
+    knobs = (commit_retries, commit_backoff_s, degrade_after, reattach_every,
+             commit_knobs)
 
     if manifest["backend"] == "forest":
         out = DurableForest.__new__(DurableForest)
@@ -1287,7 +1625,7 @@ def _build_recovered(directory: str, manifest: dict, shard_plans: List[dict],
 
 def recover(directory: str, crash=None, *, faults=None, commit_retries: int = 2,
             commit_backoff_s: float = 0.002, degrade_after: int = 3,
-            reattach_every: int = 4):
+            reattach_every: int = 4, **commit_knobs):
     """Recovery procedure (paper §5, corruption-hardened): walk the
     generation ladder — the committed MANIFEST first, then the retained
     ``MANIFEST.prev`` — and for the first checksum-valid manifest whose
@@ -1303,7 +1641,7 @@ def recover(directory: str, crash=None, *, faults=None, commit_retries: int = 2,
     (``FileNotFoundError`` if no manifest was ever committed)."""
     plan = _resolve_faults(crash, faults)
     failures = []
-    for name in ("MANIFEST", "MANIFEST.prev"):
+    for name in _generation_names(directory):
         manifest = _load_manifest(directory, name)
         if manifest is None:
             failures.append(f"{name}: missing or corrupt")
@@ -1321,6 +1659,7 @@ def recover(directory: str, crash=None, *, faults=None, commit_retries: int = 2,
         return _build_recovered(
             directory, manifest, shard_plans, full, plan,
             commit_retries, commit_backoff_s, degrade_after, reattach_every,
+            commit_knobs,
         )
     if not os.path.exists(os.path.join(directory, "MANIFEST")):
         raise FileNotFoundError(f"no MANIFEST in {directory!r}")

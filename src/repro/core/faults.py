@@ -113,10 +113,14 @@ class CrashPoint:
     committed — ``at_commit`` is the NEXT commit index at that moment),
     ``mid_repartition`` (a load-aware boundary rebalance or cold-shard
     merge just re-keyed the journals; same NEXT-commit-index convention
-    as ``mid_split``)."""
+    as ``mid_split``), ``mid_group`` (a round was ABSORBED into a pending
+    commit group — ``group_commit_every`` > 1 — and no boundary I/O has
+    started; same NEXT-commit-index convention: the absorbed rounds would
+    have committed as ``at_commit``, so recovery lands on the last
+    complete group boundary)."""
 
     step: str = ""  # "after_segment" | "mid_manifest" | "before_dirsync"
-    #              | "mid_split" | "mid_repartition"
+    #              | "mid_split" | "mid_repartition" | "mid_group"
     at_commit: int = -1  # commit index at which to fire (-1 = never)
     _count: int = field(default=0, repr=False)
 

@@ -38,7 +38,9 @@ Record schema (one JSON object per line in the exported ``.jsonl``; see
   ``{"kind": "transition", "seq": int, "event": "split"|"merge"|
     "rebalance"|"repartition_pending", ...}``
 
-  ``{"kind": "commit", "seq": int, "commit_idx": int, "rounds": int}``
+  ``{"kind": "commit", "seq": int, "commit_idx": int, "rounds": int,
+    "rounds_absorbed": int}``  (``rounds_absorbed`` > 1 marks a GROUP
+    commit: that many journal rounds rode one manifest rename)
 
   ``{"kind": "fault", "seq": int, "site": str, "fault": "eio"|"enospc"|
     "torn"|"rename_fail"|"latency"|"crash"}``

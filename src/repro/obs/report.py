@@ -152,6 +152,8 @@ def forensics_summary(records) -> dict:
         "transitions": defaultdict(int),
         "faults": defaultdict(int),
         "commits": 0,
+        "rounds_absorbed": 0,  # rounds carried by those commits (group commit)
+        "max_group": 0,  # deepest commit group observed
         "first_round": None,
         "last_round": None,
         "modes": defaultdict(int),
@@ -191,6 +193,9 @@ def forensics_summary(records) -> dict:
             out["faults"][f"{rec.get('site', '?')}:{rec.get('fault', '?')}"] += 1
         elif kind == "commit":
             out["commits"] += 1
+            absorbed = int(rec.get("rounds_absorbed", 1))
+            out["rounds_absorbed"] += absorbed
+            out["max_group"] = max(out["max_group"], absorbed)
     out["transitions"] = dict(out["transitions"])
     out["faults"] = dict(out["faults"])
     out["modes"] = dict(out["modes"])
@@ -221,7 +226,11 @@ def render_forensics(records) -> str:
     if s["occ_subrounds"]:
         lines.append(f"  occ sub-rounds: {s['occ_subrounds']}")
     if s["commits"]:
-        lines.append(f"  durable commit markers: {s['commits']}")
+        depth = s["rounds_absorbed"] / s["commits"]
+        lines.append(
+            f"  durable commit markers: {s['commits']}  ·  "
+            f"group depth: {depth:.1f} rounds/commit (max {s['max_group']})"
+        )
     if s["transitions"]:
         lines.append("  structural transitions:")
         for name, n in sorted(s["transitions"].items()):

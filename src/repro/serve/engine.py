@@ -61,11 +61,28 @@ class ServeEngine:
         index_shards: int = 1,
         index_durable_dir: Optional[str] = None,
         index_faults=None,
+        pipelined: bool = False,
+        group_commit_every: int = 1,
+        group_commit_max_wait_s: float = 0.05,
+        commit_async: Optional[bool] = None,
         seed: int = 0,
     ):
         self.cfg = cfg
         self.max_batch = max_batch
         self.s_max = s_max
+        # pipelined=True double-buffers the tick: round N's decode is
+        # DISPATCHED (JAX async dispatch — no block), round N+1's
+        # admit/classify work runs on the host while the device is busy,
+        # and only then does the tick fence on the decode result.  The
+        # host-work-under-flight fraction is the tick_overlap_frac gauge.
+        self.pipelined = pipelined
+        # group_commit_every > 1 batches that many index rounds per
+        # manifest rename on BOTH journals; commit_async (default: on
+        # whenever grouping is on) moves the boundary commit I/O to the
+        # durable layer's background thread so no tick pays the fsyncs
+        # inline.  run_until_done() drains pending groups at exit.
+        if commit_async is None:
+            commit_async = group_commit_every > 1
         self.params = init_params(backbone.model_spec(cfg))
         self.kv = PagedKVCache(n_pages)
         # index_shards > 1 partitions both indexes' key spaces into an
@@ -90,6 +107,9 @@ class ServeEngine:
                 else os.path.join(index_durable_dir, "prefix")
             ),
             faults=index_faults,
+            group_commit_every=group_commit_every,
+            group_commit_max_wait_s=group_commit_max_wait_s,
+            commit_async=commit_async,
         )
         self.sessions = SessionIndex(
             mode=index_mode,
@@ -103,6 +123,9 @@ class ServeEngine:
                 else os.path.join(index_durable_dir, "sessions")
             ),
             faults=index_faults,
+            group_commit_every=group_commit_every,
+            group_commit_max_wait_s=group_commit_max_wait_s,
+            commit_async=commit_async,
         )
         # engine-level telemetry: tick latency + scheduler counters live in
         # the engine's own registry; the index holders keep theirs (round
@@ -202,13 +225,23 @@ class ServeEngine:
         return logits
 
     def tick(self):
-        """One scheduler iteration: admit + fused decode for all running."""
+        """One scheduler iteration: admit + fused decode for all running.
+        Pipelined mode dispatches the decode first and admits under it."""
         t0 = time.perf_counter()
         tr = self._tracer
+        overlap = 0.0
         with tr.span("serve.tick"):
-            self._tick_body(tr)
+            if self.pipelined:
+                overlap = self._tick_pipelined(tr)
+            else:
+                self._tick_body(tr)
+        dt = time.perf_counter() - t0
         self.metrics.inc("ticks")
-        self.metrics.observe("tick_latency_s", time.perf_counter() - t0)
+        self.metrics.observe("tick_latency_s", dt)
+        if self.pipelined:
+            frac = overlap / dt if dt > 0 else 0.0
+            self.metrics.set_gauge("tick_overlap_frac", frac)
+            self.metrics.observe("tick_overlap_frac", frac)
 
     def _tick_body(self, tr):
         with tr.span("serve.admit", waiting=len(self.waiting)):
@@ -241,6 +274,50 @@ class ServeEngine:
                 with tr.span("serve.retire", slot=s):
                     self._retire(s)
 
+    def _tick_pipelined(self, tr) -> float:
+        """Double-buffered tick: DISPATCH round N's fused decode (JAX async
+        dispatch returns immediately), run round N+1's admit — prefix
+        lookups, page allocation, publish rounds — on the host while the
+        device works, then fence on the decode and retire.  Admitted
+        requests join the decode from the NEXT tick (their prefill steps
+        chain onto the in-flight cache, so per-slot KV stays exact).
+        Returns the seconds of host work overlapped with the in-flight
+        decode (0 when nothing was running)."""
+        active = [s for s in range(self.max_batch) if self.slots[s] is not None]
+        logits = None
+        pos = 0
+        if active:
+            tokens = np.zeros(self.max_batch, np.int32)
+            for s in active:
+                tokens[s] = getattr(self.running[self.slots[s]], "_last_tok", 0)
+            pos = int(self.pos[active].max())
+            with tr.span("serve.decode.dispatch", lanes=len(active)):
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
+                )
+        t0 = time.perf_counter()
+        with tr.span(
+            "serve.admit", waiting=len(self.waiting), overlapped=bool(active)
+        ):
+            self._admit()
+        overlap = time.perf_counter() - t0 if active else 0.0
+        if logits is None:
+            return 0.0
+        with tr.span("serve.decode", lanes=len(active)) as sp:
+            nxt = np.asarray(jnp.argmax(logits, -1))  # the fence: blocks here
+            sp.fence(self.cache)
+        self.metrics.inc("decode_tokens", len(active))
+        for s in active:
+            rid = self.slots[s]
+            req = self.running[rid]
+            req.out.append(int(nxt[s]))
+            req._last_tok = int(nxt[s])
+            self.pos[s] = pos + 1
+            if len(req.out) >= req.max_new or self.pos[s] >= self.s_max - 1:
+                with tr.span("serve.retire", slot=s):
+                    self._retire(s)
+        return overlap
+
     def _retire(self, slot: int):
         rid = self.slots[slot]
         req = self.running.pop(rid)
@@ -268,11 +345,23 @@ class ServeEngine:
                 self._evict_floor = live_floor
             self._retired_since_sweep = 0
 
+    def drain_durability(self):
+        """Flush both journals' pending commit groups and join any
+        in-flight async commits — the engine-level persist fence (a
+        no-op for volatile or non-grouped indexes)."""
+        for h in (self.index.tree, self.sessions.tree):
+            drain = getattr(h, "drain", None)
+            if drain is not None:
+                drain()
+
     def run_until_done(self, max_ticks: int = 10000):
         t = 0
         while (self.waiting or self.running) and t < max_ticks:
             self.tick()
             t += 1
+        # workload done: pending groups would otherwise stay volatile until
+        # the next tick that never comes
+        self.drain_durability()
         return self.done
 
     def stats(self) -> dict:

@@ -99,13 +99,21 @@ class PrefixIndex:
         snapshot_every: int = 64,
         auto_repartition: bool = False,
         faults=None,
+        group_commit_every: int = 1,
+        group_commit_max_wait_s: float = 0.05,
+        commit_async: bool = False,
     ):
         cfg = TreeConfig(capacity=capacity, b=8, a=2)
         if durable_dir is not None:
             if os.path.exists(os.path.join(durable_dir, "MANIFEST")):
                 # warm restart; ``faults`` (a FaultPlan / CrashPoint) is
                 # installed on the recovered journal for fault-soak runs
-                self.tree = recover_forest(durable_dir, faults=faults)
+                self.tree = recover_forest(
+                    durable_dir, faults=faults,
+                    group_commit_every=group_commit_every,
+                    group_commit_max_wait_s=group_commit_max_wait_s,
+                    commit_async=commit_async,
+                )
                 # shard count / splits legitimately come from the manifest
                 # (the forest may have re-partitioned); a mode switch would
                 # silently change the durability discipline — refuse it.
@@ -122,6 +130,9 @@ class PrefixIndex:
                     max_keys_per_shard=max_keys_per_shard,
                     auto_repartition=auto_repartition,
                     faults=faults,
+                    group_commit_every=group_commit_every,
+                    group_commit_max_wait_s=group_commit_max_wait_s,
+                    commit_async=commit_async,
                 )
         elif shards > 1:
             self.tree = ABForest(
@@ -192,12 +203,17 @@ class SessionIndex(PrefixIndex):
         snapshot_every: int = 64,
         auto_repartition: bool = False,
         faults=None,
+        group_commit_every: int = 1,
+        group_commit_max_wait_s: float = 0.05,
+        commit_async: bool = False,
     ):
         super().__init__(
             mode=mode, capacity=capacity, shards=shards, key_space=key_space,
             max_keys_per_shard=max_keys_per_shard, durable_dir=durable_dir,
             snapshot_every=snapshot_every, auto_repartition=auto_repartition,
-            faults=faults,
+            faults=faults, group_commit_every=group_commit_every,
+            group_commit_max_wait_s=group_commit_max_wait_s,
+            commit_async=commit_async,
         )
 
     def evict_range(self, lo: int, hi: int, cap: int = 256) -> List[int]:

@@ -197,33 +197,43 @@ def test_occ_recover_reinstalls_subround_hook_and_snapshot_every(tmp_path):
 def _journal_files(d):
     return {
         f for f in os.listdir(d)
-        if f.endswith(".npz") and ("_segment_" in f or "_snapshot_" in f)
+        if f.endswith(".npz")
+        and ("_segment_" in f or "_snapshot_" in f or "_delta_" in f)
     }
+
+
+def _referenced(d):
+    """Union of journal files referenced by EVERY retained manifest
+    generation (MANIFEST, MANIFEST.prev, MANIFEST.prevN...) — GC must keep
+    anything a fallback generation could still recover from."""
+    import json
+
+    refs = set()
+    for name in os.listdir(d):
+        if name != "MANIFEST" and not name.startswith("MANIFEST.prev"):
+            continue
+        with open(os.path.join(d, name)) as fh:
+            manifest = json.load(fh)
+        for sh in manifest["shards"]:
+            if sh["snapshot"]:
+                refs.add(sh["snapshot"])
+            refs.update(sh["segments"])
+    return refs
 
 
 def test_journal_gc_unlinks_unreferenced_files(tmp_path):
     """After a snapshot commit, segment/snapshot files no longer referenced
-    by the committed MANIFEST are unlinked (they must not accumulate) and
-    counted in ``DurableStats.gc_removed``."""
-    import json
-
+    by ANY retained manifest generation are unlinked (they must not
+    accumulate) and counted in ``DurableStats.gc_removed``."""
     d = str(tmp_path / "gc")
     t = DurableABTree(d, CFG, mode="elim", snapshot_every=3)
     for i in range(10):
         t.apply_round([OP_INSERT] * 4, [i, i + 40, i + 80, i + 120], [i] * 4)
     assert t.dstats.gc_removed > 0
-    with open(os.path.join(d, "MANIFEST")) as f:
-        manifest = json.load(f)
-    referenced = set()
-    for sh in manifest["shards"]:
-        referenced.add(sh["snapshot"])
-        referenced.update(sh["segments"])
-    assert _journal_files(d) == referenced, "unreferenced journal files survive"
+    assert _journal_files(d) == _referenced(d), "unreferenced journal files survive"
 
 
 def test_forest_journal_gc_across_shards(tmp_path):
-    import json
-
     d = str(tmp_path / "fgc")
     f = DurableForest(d, n_shards=2, cfg=CFG, key_space=(0, 128), snapshot_every=3)
     rng = np.random.default_rng(3)
@@ -231,13 +241,7 @@ def test_forest_journal_gc_across_shards(tmp_path):
         keys = rng.integers(0, 128, 16).tolist()
         f.apply_round([OP_INSERT] * 16, keys, keys)
     assert f.dstats.gc_removed > 0
-    with open(os.path.join(d, "MANIFEST")) as fh:
-        manifest = json.load(fh)
-    referenced = set()
-    for sh in manifest["shards"]:
-        referenced.add(sh["snapshot"])
-        referenced.update(sh["segments"])
-    assert _journal_files(d) == referenced
+    assert _journal_files(d) == _referenced(d)
 
 
 # ---------------------------------------------------------------------------
@@ -555,3 +559,157 @@ def test_latency_histograms_cover_every_fsync_site(tmp_path):
     assert fs["count"] == 3 * commits == t.dstats.fsyncs
     assert cl["count"] == commits
     assert cl["p50"] >= fs["p50"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Group commit: several rounds per manifest rename (bounded data loss)
+# ---------------------------------------------------------------------------
+
+
+def test_group_commit_batches_rounds_and_drains(tmp_path):
+    """With ``group_commit_every=G`` (and an effectively infinite max-wait)
+    G rounds share ONE manifest rename; ``drain()`` flushes a partial tail
+    group; the batch depth is observable (``rounds_per_commit``); and the
+    exact fsync accounting — 3 per commit that actually happened — survives
+    grouping."""
+    d = str(tmp_path / "grp")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9,
+                      group_commit_every=4, group_commit_max_wait_s=1e9)
+    c0 = t.dstats.commits  # the constructor's initial (forced) commit
+    o = DictOracle()
+    for ops, keys, vals in _mk_rounds(6, seed=11):
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    # 6 rounds at G=4 → one boundary commit at round 4, rounds 5-6 pending
+    assert t.dstats.commits - c0 == 1
+    st = t.durability_status()
+    assert st["group_commit_every"] == 4
+    assert st["pending_rounds"] == 2 and st["pending_age_s"] > 0.0
+    t.drain()
+    assert t.dstats.commits - c0 == 2
+    assert t.durability_status()["pending_rounds"] == 0
+    assert t.metrics.histogram_summary("rounds_per_commit")["max"] == 4.0
+    assert t.dstats.fsyncs == 3 * t.dstats.commits
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == o.items()
+
+
+def test_group_commit_recovery_lands_on_last_group_boundary(tmp_path):
+    """Absorbed-but-unflushed rounds vanish ATOMICALLY as a group: a
+    recovery that never saw ``drain()`` (a kill between rounds) gets
+    exactly the prefix at the last group boundary — never a partial
+    group."""
+    d = str(tmp_path / "grpcut")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9,
+                      group_commit_every=3, group_commit_max_wait_s=1e9)
+    o = DictOracle()
+    prefixes = [o.items()]
+    for ops, keys, vals in _mk_rounds(8, seed=13):
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+        prefixes.append(o.items())
+    # boundaries after rounds 3 and 6; rounds 7-8 are pending
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == prefixes[6]
+    t.drain()  # the persist fence makes the tail durable
+    r2 = recover(d)
+    assert tree_contents(r2.tree.state, r2.tree.cfg) == prefixes[8]
+
+
+def test_group_commit_max_wait_bounds_staleness(tmp_path):
+    """``group_commit_max_wait_s=0`` forces a boundary on every round even
+    with a huge group size — the age bound wins over batching."""
+    d = str(tmp_path / "wait")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9,
+                      group_commit_every=64, group_commit_max_wait_s=0.0)
+    c0 = t.dstats.commits
+    for ops, keys, vals in _mk_rounds(4, seed=17):
+        t.apply_round(ops, keys, vals)
+    assert t.dstats.commits - c0 == 4
+
+
+def test_async_commit_keeps_exact_fsync_accounting(tmp_path):
+    """``commit_async=True`` moves boundary I/O off the caller's thread;
+    after ``drain()`` the stats are still EXACT on the non-grouped path —
+    one commit per round, 3 fsyncs per commit, histogram == counter — and
+    recovery is exact."""
+    d = str(tmp_path / "async")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9,
+                      commit_async=True)
+    o = DictOracle()
+    for ops, keys, vals in _mk_rounds(6, seed=19):
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    t.drain()
+    assert t.dstats.commits == 7  # init + one per round
+    assert t.dstats.fsyncs == 3 * t.dstats.commits
+    assert t.metrics.histogram_summary("fsync_latency_s")["count"] == t.dstats.fsyncs
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == o.items()
+
+
+def test_recovered_journal_keeps_group_commit_knobs(tmp_path):
+    """``recover(...)`` accepts the commit knobs so a restarted engine
+    resumes grouping: a recovered journal batches rounds exactly like the
+    original."""
+    d = str(tmp_path / "rk")
+    t = DurableABTree(d, CFG, mode="elim", group_commit_every=2,
+                      group_commit_max_wait_s=1e9)
+    for ops, keys, vals in _mk_rounds(4, seed=37):
+        t.apply_round(ops, keys, vals)
+    t.drain()
+    r = recover(d, group_commit_every=2, group_commit_max_wait_s=1e9)
+    assert r.group_commit_every == 2
+    c0 = r.dstats.commits
+    o = DictOracle()
+    o.d = dict(tree_contents(r.tree.state, r.tree.cfg))
+    for ops, keys, vals in _mk_rounds(2, seed=38):
+        r.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    assert r.dstats.commits - c0 == 1  # two rounds, one boundary
+    r.drain()
+    assert tree_contents(recover(d).tree.state, CFG) == o.items()
+
+
+# ---------------------------------------------------------------------------
+# Incremental (delta) snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_snapshots_roundtrip_and_forced_full(tmp_path):
+    """Periodic snapshots write ``_delta_`` files (rows dirtied since the
+    last full image) that REPLACE the segment chain; every
+    ``full_snapshot_every`` deltas a full snapshot is forced so chains
+    cannot grow without bound.  Recovery through a delta chain is exact."""
+    d = str(tmp_path / "delta")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=2,
+                      full_snapshot_every=3)
+    o = DictOracle()
+    for ops, keys, vals in _mk_rounds(12, seed=23):
+        t.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    assert t.metrics.value("delta_snapshots") >= 3
+    assert t.metrics.value("full_snapshots") >= 2  # init + forced full
+    assert any("_delta_" in f for f in _journal_files(d))
+    r = recover(d)
+    check_invariants(r.tree.state, r.tree.cfg)
+    assert tree_contents(r.tree.state, r.tree.cfg) == o.items()
+    # the recovered journal keeps working (and forces a clean FULL at its
+    # next periodic snapshot — delta bookkeeping did not survive recovery)
+    r.apply_round([OP_INSERT], [777], [9])
+    assert recover(d).tree.find(777) == 9
+
+
+def test_forest_incremental_snapshots_roundtrip(tmp_path):
+    d = str(tmp_path / "fdelta")
+    f = DurableForest(d, n_shards=2, cfg=CFG, key_space=(0, 64),
+                      snapshot_every=2, full_snapshot_every=4)
+    o = DictOracle()
+    for ops, keys, vals in _mk_rounds(9, seed=31):
+        f.apply_round(ops, keys, vals)
+        o.apply_round(ops, keys, vals)
+    assert f.metrics.value("delta_snapshots") > 0
+    assert any("_delta_" in fn for fn in _journal_files(d))
+    r = recover_forest(d)
+    assert r.items() == o.items()
+    check_forest_invariants(r.forest)

@@ -397,3 +397,202 @@ else:  # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_property_bitflip_detected_by_crc():
         pass
+
+
+# ---------------------------------------------------------------------------
+# Manifest retention ring (K generations) + delta-chain corruption rules
+# ---------------------------------------------------------------------------
+
+
+def test_retention_ring_walks_to_third_generation(tmp_path):
+    """The two-generation fallback is now a K-deep ring (default 3):
+    corrupting the snapshot shared by the two NEWEST generations sinks
+    both, and recovery lands on MANIFEST.prev2's prefix instead of
+    raising."""
+    from repro.core import CrashPoint  # noqa: F401  (matrix symmetry)
+
+    d = str(tmp_path / "ring")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=3,
+                      incremental_snapshots=False)
+    prefixes = _run_with_oracle(t, _mk_rounds(7, seed=40))
+    for name in ("MANIFEST", "MANIFEST.prev", "MANIFEST.prev2"):
+        assert os.path.exists(os.path.join(d, name)), name
+    # round i commits at index i (init snapshot = commit 0); the periodic
+    # snapshot at commit 6 is referenced by generations @7 (S6 + seg7) and
+    # @6 (S6) but NOT by @5 (S3 + segments 4-5 — kept alive by the
+    # ring-aware GC).
+    snaps = [f for f in os.listdir(d) if f.endswith("_snapshot_00000006.npz")]
+    assert len(snaps) == 1
+    p = os.path.join(d, snaps[0])
+    blob = bytearray(open(p, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == prefixes[5]
+
+
+def test_torn_delta_sinks_generation_falls_back(tmp_path):
+    """A delta REPLACES the segment chain, so a torn delta cannot be
+    truncated away like a segment — every generation referencing it must
+    sink, and recovery falls to an older manifest rather than silently
+    dropping the delta's rows."""
+    d = str(tmp_path / "td")
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=2,
+                      full_snapshot_every=100)
+    prefixes = _run_with_oracle(t, _mk_rounds(6, seed=41))
+    # deltas at commits 2/4/6; ladder on disk: MANIFEST@6 (D6), .prev@5
+    # (D4 + seg5), .prev2@4 (D4).  Tear D6: were it truncated away like a
+    # segment, MANIFEST@6 would "recover" the EMPTY prefix — sinking the
+    # generation instead falls back to @5's intact chain.
+    deltas = sorted(f for f in os.listdir(d) if "_delta_" in f)
+    assert deltas
+    p = os.path.join(d, deltas[-1])
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == prefixes[5]
+
+
+# ---------------------------------------------------------------------------
+# Group-commit crash matrix: a group is lost or kept ATOMICALLY
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_group_recovers_last_group_boundary(tmp_path):
+    """A fail-stop while rounds sit ABSORBED in a pending group (no
+    boundary I/O yet) loses at most ``group_commit_every - 1`` rounds:
+    recovery lands exactly on the last complete group boundary, witnessed
+    by the forensics sidecar."""
+    from repro.core import CrashPoint
+    from repro.core.durable import SimulatedCrash
+
+    d = str(tmp_path / "mg")
+    crash = CrashPoint(step="mid_group", at_commit=3)
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9, crash=crash,
+                      group_commit_every=3, group_commit_max_wait_s=1e9)
+    o = DictOracle()
+    prefixes = [o.items()]
+    crashed = False
+    for ops, keys, vals in _mk_rounds(9, seed=42):
+        try:
+            t.apply_round(ops, keys, vals)
+            o.apply_round(ops, keys, vals)
+            prefixes.append(o.items())
+        except SimulatedCrash:
+            crashed = True
+            break
+    assert crashed, "mid_group crash point did not fire"
+    # groups committed at rounds 3 (commit 1) and 6 (commit 2); the crash
+    # fired on the first round absorbed toward commit 3 → prefix 6.
+    n = _recovered_is_witnessed_prefix(d, prefixes)
+    assert n == 6
+
+
+@pytest.mark.parametrize("step", ["mid_group", "after_segment",
+                                  "mid_manifest", "before_dirsync"])
+@pytest.mark.parametrize("at_commit", [2, 3])
+def test_group_crash_matrix_cut_lands_on_group_boundary(tmp_path, step, at_commit):
+    """Fail-stop at EVERY protocol step around a grouped commit: the
+    recovered prefix always ends ON a group boundary (never inside one)
+    and never exceeds the crashed commit's group."""
+    from repro.core import CrashPoint
+    from repro.core.durable import SimulatedCrash
+
+    G = 3
+    d = str(tmp_path / "matrix")
+    crash = CrashPoint(step=step, at_commit=at_commit)
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9, crash=crash,
+                      group_commit_every=G, group_commit_max_wait_s=1e9)
+    o = DictOracle()
+    prefixes = [o.items()]
+    crashed = False
+    for ops, keys, vals in _mk_rounds(9, bsz=16, seed=at_commit):
+        try:
+            t.apply_round(ops, keys, vals)
+            o.apply_round(ops, keys, vals)
+            prefixes.append(o.items())
+        except SimulatedCrash:
+            crashed = True
+            # if the rename landed (before_dirsync) the crashed commit's
+            # whole group IS durable — its prefix is a legal outcome too.
+            if step == "before_dirsync":
+                o2 = DictOracle()
+                o2.d = dict(prefixes[-1])
+                o2.apply_round(ops, keys, vals)
+                prefixes.append(o2.items())
+            break
+    assert crashed, f"crash point {step}@{at_commit} did not fire"
+    n = _recovered_is_witnessed_prefix(d, prefixes)
+    assert n % G == 0, "cut must land ON a group boundary"
+    # before the rename lands the crashed group must be invisible; after it
+    # (before_dirsync) the whole group — never part of it — may be durable.
+    bound = at_commit if step == "before_dirsync" else at_commit - 1
+    assert n <= G * bound, "cut can never exceed the crashed group"
+
+
+def test_enospc_at_group_boundary_retried_to_success(tmp_path):
+    """A transient ENOSPC at a group-boundary segment write is retried;
+    the WHOLE group lands once the disk clears — grouping never converts a
+    transient fault into data loss."""
+    d = str(tmp_path / "gnospc")
+    plan = FaultPlan(seed=44).add(
+        FaultSpec(site="segment_write", kind="enospc", commits=(2, 3), times=1)
+    )
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9, faults=plan,
+                      commit_backoff_s=0.0,
+                      group_commit_every=3, group_commit_max_wait_s=1e9)
+    prefixes = _run_with_oracle(t, _mk_rounds(6, seed=45))
+    t.drain()
+    s = t.durability_status()
+    assert s["commit_retries"] >= 1 and not s["degraded"]
+    assert t.metrics.value("fault_injected") == 1
+    assert tree_contents(recover(d).tree.state, CFG) == prefixes[-1]
+
+
+def test_torn_group_boundary_segment_loses_whole_group(tmp_path):
+    """One journal segment carries a WHOLE group's dirty rows; tearing it
+    costs exactly that group at recovery — the cut lands on the previous
+    group boundary, never inside a group."""
+    d = str(tmp_path / "tg")
+    plan = FaultPlan(seed=46).add(
+        FaultSpec(site="segment_write", kind="torn", commits=(3, 4),
+                  torn_frac=0.5)
+    )
+    t = DurableABTree(d, CFG, mode="elim", snapshot_every=100, faults=plan,
+                      group_commit_every=2, group_commit_max_wait_s=1e9)
+    prefixes = _run_with_oracle(t, _mk_rounds(6, seed=47))
+    t.drain()
+    # boundaries at rounds 2/4/6 (commits 1/2/3); commit 3's segment —
+    # carrying rounds 5 AND 6 — is torn, so the cut truncates to commit 2:
+    # the whole last group is gone, the prefix before it is intact.
+    r = recover(d)
+    assert tree_contents(r.tree.state, r.tree.cfg) == prefixes[4]
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(n_rounds=st.integers(1, 10), G=st.integers(2, 4))
+    def test_property_kill_at_any_group_offset_recovers_group_prefix(
+        tmp_path_factory, n_rounds, G
+    ):
+        """ANY fail-stop between rounds — every offset within a commit
+        group — recovers the oracle-verified prefix at the LAST group
+        boundary: exactly ``n_rounds // G * G`` rounds, sidecar-witnessed."""
+        d = str(tmp_path_factory.mktemp("gkill") / "j")
+        t = DurableABTree(d, CFG, mode="elim", snapshot_every=10**9,
+                          group_commit_every=G, group_commit_max_wait_s=1e9)
+        prefixes = _run_with_oracle(t, _mk_rounds(n_rounds, bsz=16, seed=G))
+        # abandon t without drain(): a kill at this round offset
+        n = _recovered_is_witnessed_prefix(d, prefixes)
+        assert n == (n_rounds // G) * G
+        shutil.rmtree(d, ignore_errors=True)
+
+else:  # pragma: no cover
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_kill_at_any_group_offset_recovers_group_prefix():
+        pass
